@@ -1,0 +1,33 @@
+"""Fig. 5 reproduction: FPU utilization per kernel per Spatz config,
+from the cycle-level perfmodel, with deltas against the paper."""
+from __future__ import annotations
+
+import time
+
+from repro.core import perfmodel as PM
+from benchmarks.paper_data import DOTP_LONG, FIG5, SPEEDUPS
+
+
+def run(csv=print):
+    t0 = time.time()
+    res = PM.figure5(4096)
+    for kernel, row in res.items():
+        for cfg_name, util in row.items():
+            paper = FIG5.get(kernel, {}).get(cfg_name)
+            note = "paper=n/a" if paper is None else \
+                f"paper={paper * 100:.0f} delta={(util - paper) * 100:+.1f}"
+            csv(f"fig5/{kernel}/{cfg_name},{util * 100:.1f},{note}")
+    # long-vector DOTP (96% claim)
+    for cfg_name in ("Spatz_2xBW", "Spatz_2xBW_TROOP"):
+        u = PM.utilization("dotp", PM.CONFIGS[cfg_name], 65536).fpu_util
+        csv(f"fig5/dotp_long/{cfg_name},{u * 100:.1f},"
+            f"paper={DOTP_LONG[cfg_name] * 100:.0f}")
+    # headline speedups
+    for k, target in SPEEDUPS.items():
+        sp = res[k]["Spatz_2xBW_TROOP"] / res[k]["Spatz_BASELINE"]
+        csv(f"fig5/speedup/{k},{sp:.2f},paper={target}")
+    csv(f"fig5/elapsed,{(time.time() - t0) * 1e6:.0f},us_total")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Fig. 7 reproduction: normalized roofline (utilization vs OI) for the three
+Spatz configurations, plus the TPU-kernel structural roofline points.
+
+The paper normalizes by bandwidth-to-compute ratio: a kernel with OI f
+(FLOPs per loaded element) on a machine with ratio r (elements loadable per
+FMA slot) is bounded by util <= min(1, f * r / 2).  The model points must
+hug that envelope for TROOP and sit below it for the baseline."""
+from __future__ import annotations
+
+from repro.core import perfmodel as PM
+from benchmarks.paper_data import OI
+
+# elements/cycle that can be loaded per (2 flops/cycle/FPU-lane) of compute
+RATIO = {"Spatz_BASELINE": 1.0, "Spatz_2xBW": 2.0, "Spatz_2xBW_TROOP": 2.0}
+
+
+def bound(kernel: str, cfg_name: str) -> float:
+    return min(1.0, OI[kernel] * RATIO[cfg_name] / 2.0)
+
+
+def run(csv=print):
+    res = PM.figure5(4096)
+    for kernel in ("axpy", "dotp", "gemv", "fft", "gemm"):
+        for cfg_name, util in res[kernel].items():
+            b = bound(kernel, cfg_name)
+            csv(f"fig7/{kernel}/{cfg_name},{util * 100:.1f},"
+                f"OI={OI[kernel]:.2f} bound={b * 100:.0f} "
+                f"fraction_of_bound={util / b:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Published numbers from the TROOP paper (targets for validation)."""
+
+# Fig. 5 FPU utilizations (fractions). None = not quoted numerically in text;
+# GEMV/GEMM baseline read off the figure approximately.
+FIG5 = {
+    "dotp": {"Spatz_BASELINE": 0.33, "Spatz_2xBW": 0.59,
+             "Spatz_2xBW_TROOP": 0.76},
+    "axpy": {"Spatz_BASELINE": 0.21, "Spatz_2xBW": 0.44,
+             "Spatz_2xBW_TROOP": 0.55},
+    "gemv": {"Spatz_BASELINE": None, "Spatz_2xBW": 0.92,
+             "Spatz_2xBW_TROOP": 0.98},
+    "gemm": {"Spatz_BASELINE": 1.00, "Spatz_2xBW": 1.00,
+             "Spatz_2xBW_TROOP": 1.00},
+}
+DOTP_LONG = {"Spatz_2xBW": 0.70, "Spatz_2xBW_TROOP": 0.96}
+SPEEDUPS = {"gemv": 1.5, "dotp": 2.2, "axpy": 2.6}      # TROOP vs baseline
+
+# Table II energy efficiencies (DP-GFLOPs/W) baseline -> TROOP
+TABLE2 = {
+    "dp-faxpy": (21.8, 27.5),
+    "dp-fdotp": (25.9, 37.5),
+    "dp-gemv": (48.0, 51.8),
+    "dp-fmatmul": (61.1, 61.1),
+}
+
+# Table I area (kGE) — hardware-only; reproduced as a VMEM-footprint
+# analogue (see table1_footprint.py).
+TABLE1_AREA_RATIO = {"VLSU": 2.58, "VRF": 1.04, "Controller": 4.46,
+                     "TCDM_XBAR": 1.78, "TOTAL": 1.07}
+
+# Fig. 7 operational intensities (FLOPs per loaded element, 64-bit)
+OI = {"axpy": 2 / 3, "dotp": 1.0, "gemv": 2.0, "fft": 2.5, "gemm": 16.0}

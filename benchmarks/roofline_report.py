@@ -1,0 +1,30 @@
+"""Roofline report: summarize the dry-run's per-cell terms (EXPERIMENTS.md
+§Roofline source).  Reads experiments/dryrun/*.json if present."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def run(csv=print, dryrun_dir: str = "experiments/dryrun"):
+    files = sorted(glob.glob(os.path.join(dryrun_dir, "*__single.json")))
+    if not files:
+        csv("roofline/none,0,no dryrun records found")
+        return
+    for f in files:
+        r = json.load(open(f))
+        if r.get("status") != "ok" or "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        csv(f"roofline/{r['arch']}/{r['shape']},"
+            f"{rf['bound_step_s'] if 'bound_step_s' in rf else max(rf['t_compute_s'], rf['t_memory_s'], rf['t_collective_s']):.4f},"
+            f"dom={rf['dominant']} tc={rf['t_compute_s']:.3f} "
+            f"tm={rf['t_memory_s']:.3f} tx={rf['t_collective_s']:.3f} "
+            f"useful={rf['useful_flops_ratio']:.3f}")
+    multi = len(glob.glob(os.path.join(dryrun_dir, "*__multi.json")))
+    csv(f"roofline/multi_pod_cells,{multi},compiled OK on (2,16,16)")
+
+
+if __name__ == "__main__":
+    run()

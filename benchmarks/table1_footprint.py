@@ -1,0 +1,45 @@
+"""Table I analogue: resource footprint of the TROOP mechanisms.
+
+Hardware area doesn't transfer to TPU; the faithful analogue is the VMEM /
+scratch / register budget each kernel variant claims (the quantity a TPU
+kernel "pays" for its mechanisms).  Reported: bytes of VMEM scratch +
+in-flight DMA window bytes per kernel, baseline vs TROOP, with the paper's
+area ratios alongside."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.troop import BASELINE, TROOP
+from benchmarks.paper_data import TABLE1_AREA_RATIO
+
+
+def window_bytes(cfg, streams_operands, scratch_elems, dtype_bytes=2):
+    """In-flight VMEM: (streams x operands x block window x double-buffer)
+    + scratch accumulators."""
+    win = cfg.streams * streams_operands * cfg.block_k * cfg.unroll * \
+        dtype_bytes * 2                      # x2: pipeline double-buffering
+    return win + scratch_elems * 4
+
+
+KERNELS = {
+    # kernel: (streamed operands, scratch fp32 elems (shadow-accumulators))
+    "gemv": (2, 256),                        # W,x windows; (bn,1) acc
+    "dotp": (2, 1),                          # x,y; scalar acc
+    "axpy": (3, 0),                          # x,y in + y out
+    "decode_attention": (2, 8 * 128 + 16),   # K,V; (KV,G,hd) acc + m,l
+    "fused_adamw": (7, 0),                   # p,g,mu,nu in; p,mu,nu out
+}
+
+
+def run(csv=print):
+    for name, (ops, scratch) in KERNELS.items():
+        b = window_bytes(BASELINE, ops, 0)
+        t = window_bytes(TROOP, ops, scratch)
+        csv(f"table1/{name},{t},vmem_bytes_troop base={b} "
+            f"ratio={t / b:.2f}")
+    for blk, ratio in TABLE1_AREA_RATIO.items():
+        csv(f"table1/paper_area/{blk},{ratio},kGE_ratio_from_paper")
+
+
+if __name__ == "__main__":
+    run()

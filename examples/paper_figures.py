@@ -1,0 +1,35 @@
+"""Reproduce the paper's figures from the cycle model (ASCII output).
+
+    PYTHONPATH=src python examples/paper_figures.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.core import perfmodel as PM
+from benchmarks.paper_data import FIG5
+
+
+def bar(frac, width=40):
+    return "#" * int(frac * width)
+
+
+def main():
+    res = PM.figure5(4096)
+    print("=== Fig. 5: FPU utilization (VL=4096) — model vs paper ===")
+    for kernel, row in res.items():
+        print(f"\n{kernel.upper()}")
+        for cfg_name, util in row.items():
+            paper = FIG5.get(kernel, {}).get(cfg_name)
+            ptxt = f"  paper={paper * 100:.0f}%" if paper else ""
+            print(f"  {cfg_name:18s} {bar(util):40s} {util * 100:5.1f}%{ptxt}")
+    print("\n=== long-vector DOTP (VL=65536) ===")
+    for name in ("Spatz_2xBW", "Spatz_2xBW_TROOP"):
+        u = PM.utilization("dotp", PM.CONFIGS[name], 65536).fpu_util
+        print(f"  {name:18s} {bar(u):40s} {u * 100:5.1f}%")
+    print("\n(paper: 70% / 96%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Generate the data tables of EXPERIMENTS.md from the dry-run JSONs."""
+import glob
+import json
+import os
+import sys
+
+
+def fmt_cell(r):
+    rf = r.get("roofline", {})
+    if not rf:
+        return None
+    dom = rf["dominant"][:4]
+    bound = max(rf["t_compute_s"], rf["t_memory_s"], rf["t_collective_s"])
+    adj = rf.get("t_memory_adj_s")
+    return (f"| {r['arch']} | {r['shape']} | {rf['t_compute_s']:.4f} | "
+            f"{rf['t_memory_s']:.4f} | "
+            f"{'' if adj is None else f'{adj:.4f}'} | "
+            f"{rf['t_collective_s']:.4f} | {dom} | "
+            f"{rf['useful_flops_ratio']:.3f} | {bound:.3f} |")
+
+
+def dryrun_table(d):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(d, "*__single.json"))):
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR: "
+                        f"{r.get('error', '')[:60]} | | | | | | |")
+            continue
+        c = fmt_cell(r)
+        if c:
+            rows.append(c)
+    return "\n".join(rows)
+
+
+def compile_table(d):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        r = json.load(open(f))
+        mem = r.get("full", {}).get("memory", {})
+        t = r.get("times", {})
+        co = r.get("full", {}).get("collectives", {}).get("counts", {})
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status']} | "
+            f"{t.get('compile_s', 0):.0f}s | "
+            f"{mem.get('argument_size_in_bytes', 0) / 1e9:.2f} | "
+            f"{mem.get('temp_size_in_bytes', 0) / 1e9:.2f} | "
+            f"{sum(co.values())} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    which = sys.argv[2] if len(sys.argv) > 2 else "roofline"
+    print(dryrun_table(d) if which == "roofline" else compile_table(d))

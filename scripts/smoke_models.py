@@ -1,0 +1,49 @@
+"""Quick dev loop: run every reduced arch through train/prefill/decode."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, reduced
+from repro.models import build_model, RuntimeConfig
+from repro.models import modules as M
+
+B, T = 2, 16
+
+
+def run(arch):
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg, RuntimeConfig(remat="none", moe_groups=1))
+    key = jax.random.PRNGKey(0)
+    boxed = model.init(key)
+    params = M.unbox(boxed)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+
+    tok_len = T - (cfg.frontend_tokens if cfg.frontend == "vision" else 0)
+    batch = {"tokens": jnp.ones((B, tok_len), jnp.int32)}
+    if cfg.frontend == "vision":
+        batch["frontend"] = jnp.ones((B, cfg.frontend_tokens, cfg.d_model),
+                                     jnp.bfloat16)
+    if cfg.encoder_decoder:
+        batch["frontend"] = jnp.ones((B, cfg.cross_attention_len, cfg.d_model),
+                                     jnp.bfloat16)
+
+    logits, aux = model.train_logits(params, batch)
+    assert logits.shape == (B, T, cfg.vocab_size), (arch, logits.shape)
+    assert not jnp.isnan(logits.astype(jnp.float32)).any(), arch
+
+    # prefill + one decode step
+    _, caches_p = model.prefill(params, batch)
+    caches = model.init_caches(B, 32)
+    step = {"tokens": jnp.ones((B, 1), jnp.int32),
+            "pos": jnp.zeros((B,), jnp.int32)}
+    lg, caches = model.decode_step(params, step, caches)
+    assert lg.shape == (B, 1, cfg.vocab_size), (arch, lg.shape)
+    assert not jnp.isnan(lg.astype(jnp.float32)).any(), arch
+    print(f"OK {arch:24s} params={n_params:,} logits={logits.shape}")
+
+
+if __name__ == "__main__":
+    archs = sys.argv[1:] or ARCH_IDS
+    for a in archs:
+        run(a)

@@ -1,0 +1,110 @@
+"""Sharded checkpointing: atomic, async, keep-k, elastic re-shard on restore.
+
+Format: one directory per step (``step_00000042/``) holding ``manifest.json``
+(tree paths, shapes, dtypes) + one ``.npy`` per leaf.  Writes go to a
+``.tmp`` dir first and are renamed into place (atomic wrt. crashes); an
+async mode runs serialization off the training thread (device_get is the
+only synchronous part).  ``restore`` accepts any mesh/shardings — restoring
+onto a different mesh IS the elastic-scaling path (the arrays are re-sharded
+by device_put).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _paths_of(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path) for path, _ in flat]
+    return keys, [v for _, v in flat], treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None):
+        self.wait()                       # one in-flight save at a time
+        keys, leaves, _ = _paths_of(tree)
+        host = [np.asarray(jax.device_get(x)) for x in leaves]
+
+        def write():
+            tmp = os.path.join(self.dir, f"step_{step:08d}.tmp")
+            final = os.path.join(self.dir, f"step_{step:08d}")
+            shutil.rmtree(tmp, ignore_errors=True)
+            os.makedirs(tmp)
+            manifest = {"step": step, "extra": extra or {}, "leaves": []}
+            for i, (k, arr) in enumerate(zip(keys, host)):
+                np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), arr)
+                manifest["leaves"].append(
+                    {"key": k, "shape": list(arr.shape),
+                     "dtype": str(arr.dtype)})
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            shutil.rmtree(final, ignore_errors=True)
+            os.rename(tmp, final)
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                out.append(int(d[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Any = None):
+        """template: pytree (arrays or SDS) defining structure; shardings:
+        optional matching tree of Shardings (elastic re-shard)."""
+        step = self.latest_step() if step is None else step
+        assert step is not None, "no checkpoint found"
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        keys, leaves, treedef = _paths_of(template)
+        assert keys == [l["key"] for l in manifest["leaves"]], \
+            "checkpoint/template tree mismatch"
+        arrs = [np.load(os.path.join(d, f"leaf_{i:05d}.npy"))
+                for i in range(len(leaves))]
+        if shardings is not None:
+            sh_leaves = jax.tree_util.tree_leaves(
+                shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
+            arrs = [jax.device_put(a, s) for a, s in zip(arrs, sh_leaves)]
+        else:
+            arrs = [jax.numpy.asarray(a) for a in arrs]
+        return jax.tree_util.tree_unflatten(treedef, arrs), manifest["extra"]

@@ -1,0 +1,55 @@
+"""Architecture registry: ``--arch <id>`` resolves through here."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (MLAConfig, ModelConfig, MoEConfig, RWKVConfig,
+                                SHAPES, SSMConfig, ShapeConfig, reduced)
+
+_ARCH_MODULES = {
+    "rwkv6-3b":             "repro.configs.rwkv6_3b",
+    "qwen1.5-32b":          "repro.configs.qwen15_32b",
+    "glm4-9b":              "repro.configs.glm4_9b",
+    "qwen1.5-0.5b":         "repro.configs.qwen15_05b",
+    "qwen3-14b":            "repro.configs.qwen3_14b",
+    "internvl2-76b":        "repro.configs.internvl2_76b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "qwen2-moe-a2.7b":      "repro.configs.qwen2_moe_a27b",
+    "jamba-v0.1-52b":       "repro.configs.jamba_v01_52b",
+    "whisper-base":         "repro.configs.whisper_base",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch]).CONFIG
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def cells(include_skipped: bool = False):
+    """All assigned (arch x shape) cells with skip annotations.
+
+    ``long_500k`` requires sub-quadratic attention: only rwkv6 / jamba run it
+    (see DESIGN.md §5).
+    """
+    out = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            skip = None
+            if sname == "long_500k" and not cfg.subquadratic():
+                skip = "full-attention arch: 500k decode is out of scope per assignment"
+            if skip is None or include_skipped:
+                out.append((arch, sname, skip))
+    return out
+
+
+__all__ = ["ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig", "RWKVConfig",
+           "ShapeConfig", "SHAPES", "ARCH_IDS", "get_config", "get_shape",
+           "cells", "reduced"]

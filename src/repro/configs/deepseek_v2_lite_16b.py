@@ -1,0 +1,26 @@
+"""deepseek-v2-lite-16b — MLA (kv_lora=512) + fine-grained MoE.
+
+[arXiv:2405.04434; hf]  27L d_model=2048 16H d_ff(moe)=1408 vocab=102400,
+MoE 64 routed top-6 + 2 shared, first layer dense (d_ff=10944).
+"""
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-lite-16b",
+    family="moe",
+    num_layers=27,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=10944,                # dense ffn used by the first layer
+    vocab_size=102400,
+    attention="mla",
+    mla=MLAConfig(kv_lora_rank=512, q_lora_rank=0,
+                  qk_nope_head_dim=128, qk_rope_head_dim=64, v_head_dim=128),
+    moe=MoEConfig(num_experts=64, num_experts_per_tok=6, d_ff=1408,
+                  num_shared_experts=2, shared_d_ff=2816,
+                  norm_topk_prob=False, routed_scaling_factor=1.0),
+    first_dense_layers=1,
+    rope_theta=10_000.0,
+)

@@ -1,0 +1,22 @@
+"""internvl2-76b — VLM backbone (InternViT frontend is a STUB).
+
+[arXiv:2404.16821; unverified]  80L d_model=8192 64H kv=8 d_ff=28672
+vocab=128256.  ``input_specs()`` provides precomputed patch embeddings; the
+vision tower itself is out of scope per the assignment.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b",
+    family="vlm",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    rope_theta=500_000.0,
+    frontend="vision",
+    frontend_tokens=256,       # ViT patch embeddings prepended to the sequence
+)

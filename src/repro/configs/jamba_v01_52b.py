@@ -1,0 +1,29 @@
+"""jamba-v0.1-52b — hybrid Mamba + attention (1:7) with MoE (16e top-2).
+
+[arXiv:2403.19887; hf]  32L d_model=4096 32H kv=8 d_ff=14336 vocab=65536.
+attn_layer_period=8 offset=4; expert_layer_period=2 offset=1.  No positional
+embedding (Mamba provides position information).
+"""
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig
+
+# period-8 mixer pattern: attention only at index 4 (1 attn : 7 mamba)
+_PATTERN = tuple("attn" if i == 4 else "mamba" for i in range(8))
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=65536,
+    pos_emb="none",
+    block_pattern=_PATTERN,
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2),
+    moe=MoEConfig(num_experts=16, num_experts_per_tok=2, d_ff=14336,
+                  norm_topk_prob=True),
+    moe_period=2,
+    moe_offset=1,
+)

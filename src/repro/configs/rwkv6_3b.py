@@ -1,0 +1,23 @@
+"""rwkv6-3b — RWKV-6 "Finch", attention-free, data-dependent decay.
+
+[arXiv:2404.05892; hf]  32L d_model=2560 d_ff=8960 vocab=65536.
+"""
+from repro.configs.base import ModelConfig, RWKVConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b",
+    family="ssm",
+    num_layers=32,
+    d_model=2560,
+    num_heads=40,              # 2560 / 64 RWKV heads
+    num_kv_heads=40,
+    head_dim=64,
+    d_ff=8960,
+    vocab_size=65536,
+    attention="none",
+    pos_emb="none",
+    block_pattern=("rwkv",),
+    rwkv=RWKVConfig(head_dim=64, decay_lora=64, mix_lora=32),
+    act="relu_sq",
+    norm="layernorm",
+)

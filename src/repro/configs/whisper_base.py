@@ -1,0 +1,28 @@
+"""whisper-base — encoder-decoder, conv frontend STUB.
+
+[arXiv:2212.04356; unverified]  6L(enc)+6L(dec) d_model=512 8H d_ff=2048
+vocab=51865.  ``input_specs()`` provides precomputed mel-frame embeddings
+(the conv1d frontend is a stub per the assignment).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="audio",
+    num_layers=6,              # decoder layers
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=51865,
+    act="gelu",
+    norm="layernorm",
+    pos_emb="learned",
+    max_position_embeddings=448 * 128,   # scaled so assigned shapes fit
+    encoder_decoder=True,
+    num_encoder_layers=6,
+    cross_attention_len=1500,
+    frontend="audio",
+    tie_embeddings=True,
+)

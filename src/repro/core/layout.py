@@ -1,0 +1,50 @@
+"""Weight/cache layouts — the software analogue of TCDM address scrambling.
+
+Paper mechanism (E): offset L1 rows so two decoupled interfaces never target
+the same bank.  HBM has no programmer-visible banks, but the same failure
+mode exists: two DMA streams walking *strided* or *overlapping* address
+ranges serialize on the memory controller.  The cure is layout: store the
+operand pre-tiled so each (stream, grid-step) fetch is one dense contiguous
+region, disjoint from the other stream's.
+
+``tile_weight``/``untile_weight`` convert (N, K) row-major weights to
+(N/bn, K/bk, bn, bk) tile-major; ``verify_alignment`` enforces the
+hardware granule (D): tiles must be multiples of (sublane, 128).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.troop import sublane
+
+
+def tile_weight(w, bn: int, bk: int):
+    """(N, K) -> (N/bn, K/bk, bn, bk) tile-major (each tile contiguous)."""
+    N, K = w.shape
+    assert N % bn == 0 and K % bk == 0, (N, K, bn, bk)
+    return (w.reshape(N // bn, bn, K // bk, bk)
+             .transpose(0, 2, 1, 3)
+             .copy() if hasattr(w, "copy") else
+            w.reshape(N // bn, bn, K // bk, bk).transpose(0, 2, 1, 3))
+
+
+def untile_weight(wt):
+    """(Nb, Kb, bn, bk) -> (N, K)."""
+    Nb, Kb, bn, bk = wt.shape
+    return wt.transpose(0, 2, 1, 3).reshape(Nb * bn, Kb * bk)
+
+
+def verify_alignment(shape, dtype, lane_dim: int = -1):
+    """True iff the minor dim is lane-aligned (128) and the second-minor is
+    sublane-aligned for the dtype — mechanism (D)."""
+    if len(shape) < 2:
+        return shape[-1] % 128 == 0
+    return shape[lane_dim] % 128 == 0 and \
+        shape[lane_dim - 1] % sublane(dtype) == 0
+
+
+def stream_regions(total: int, streams: int):
+    """Contiguous half-split (the paper's coarse-grained VLSU decoupling):
+    stream i owns [i*total/streams, (i+1)*total/streams)."""
+    step = total // streams
+    return [(i * step, (i + 1) * step) for i in range(streams)]

@@ -1,0 +1,159 @@
+"""Logical-axis partitioning: rules, activation constraints, spec builders.
+
+Parameters carry logical axes (see ``models.modules.Param``); activations are
+pinned inside model code via ``constrain(x, axes)`` which resolves logical
+axes -> mesh axes through the active rule set.  Outside a
+``activation_rules(mesh, rules)`` context (e.g. CPU smoke tests) every
+constraint is a no-op, so model code never depends on a mesh being present.
+
+Attention picks its ``model``-axis strategy per-config:
+  kv-heads divisible  -> shard KV heads        (classic Megatron)
+  q-groups divisible  -> shard GQA groups      (few-KV-head archs, e.g. glm4)
+  otherwise           -> shard the KV sequence (context / sequence parallel;
+                         softmax + PV contraction become collectives)
+Decode always uses the sequence path over the cache (flash-decode SP).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+TRAIN_RULES = {
+    "batch": ("pod", "data"),
+    "embed": "data",            # FSDP / ZeRO-3 axis for weights
+    "ffn": "model",
+    "qkv_out": "model",
+    "kv_out": "model",
+    "vocab": "model",
+    "expert": "model",
+    "expert_ff": None,
+    "kv_lora": None,
+    "inner": "model",
+    "layers": None,
+    "heads": "model",           # activation head dim
+    "attn_kv_seq": "model",     # context-parallel fallback / decode SP
+    "cache_seq": "model",
+}
+
+DECODE_RULES = dict(TRAIN_RULES)
+DECODE_RULES.update({
+    "embed": None,              # weights stay resident (TP only)
+    "heads": None,              # decode shards the cache seq instead
+})
+
+
+def wide_tp_rules(rules):
+    """B=1 long-context decode: fold the idle data axis into TP."""
+    out = dict(rules)
+    for ax in ("ffn", "qkv_out", "kv_out", "inner", "vocab"):
+        out[ax] = ("data", "model")
+    return out
+
+
+class _Ctx(threading.local):
+    mesh: Optional[Mesh] = None
+    rules: Optional[dict] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def activation_rules(mesh: Mesh, rules: dict):
+    old = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = old
+
+
+def active() -> bool:
+    return _CTX.mesh is not None
+
+
+def mesh_size(axis, mesh: Optional[Mesh] = None) -> int:
+    mesh = mesh or _CTX.mesh
+    if axis is None or mesh is None:
+        return 1
+    axes = (axis,) if isinstance(axis, str) else axis
+    n = 1
+    for a in axes:
+        if a not in mesh.axis_names:
+            return 0
+        n *= mesh.shape[a]
+    return n
+
+
+def resolve(logical: Optional[str], rules: Optional[dict] = None):
+    rules = rules or _CTX.rules
+    if logical is None or rules is None:
+        return None
+    rule = rules.get(logical)
+    if rule is None:
+        return None
+    if isinstance(rule, tuple):
+        rule = tuple(a for a in rule if a in _CTX.mesh.axis_names)
+        return rule or None
+    return rule if rule in _CTX.mesh.axis_names else None
+
+
+def constrain(x, axes, *, allow_uneven: bool = False):
+    """Pin activation sharding. axes: tuple of logical names (None entries ok)."""
+    if not active():
+        return x
+    entries = []
+    for name, dim in zip(axes, x.shape):
+        rule = resolve(name)
+        size = mesh_size(rule)
+        if rule is None or size <= 1:
+            entries.append(None)
+        elif dim % size == 0 or (allow_uneven and dim >= size):
+            entries.append(rule)
+        else:
+            entries.append(None)
+    spec = P(*entries)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_CTX.mesh, spec))
+
+
+def attn_strategy(KV: int, G: int, decode: bool = False) -> str:
+    """'kv' | 'group' | 'seq' | 'none' — which dim takes the heads axis."""
+    if not active():
+        return "none"
+    hs = mesh_size(resolve("heads"))
+    if hs > 1 and not decode:
+        if KV % hs == 0:
+            return "kv"
+        if G % hs == 0:
+            return "group"
+    ss = mesh_size(resolve("attn_kv_seq"))
+    if ss > 1:
+        return "seq"
+    if hs > 1 and KV >= hs:
+        return "kv_uneven"
+    return "none"
+
+
+def spec_for(axes, shape, rules, mesh) -> P:
+    """PartitionSpec for a parameter (strict divisibility)."""
+    entries = []
+    for ax_name, dim in zip(axes, shape):
+        rule = rules.get(ax_name) if ax_name else None
+        if isinstance(rule, tuple):
+            rule = tuple(a for a in rule if a in mesh.axis_names) or None
+        if rule is not None and not isinstance(rule, tuple) \
+                and rule not in mesh.axis_names:
+            rule = None
+        size = mesh_size(rule, mesh)
+        if rule is None or size <= 1 or dim % size:
+            entries.append(None)
+        else:
+            entries.append(rule)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)

@@ -1,0 +1,170 @@
+"""Roofline-term derivation from compiled XLA artifacts (TPU v5e model).
+
+Mirrors the paper's methodology at cluster scale: the paper measures FPU
+utilization against the L1-memory roofline; here the three terms are
+
+    compute    = HLO_FLOPs            / (chips * 197e12  bf16 FLOP/s)
+    memory     = HLO_bytes_accessed   / (chips * 819e9   B/s HBM)
+    collective = collective_link_bytes/ (chips * 50e9    B/s ICI link)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are
+parsed from the post-SPMD HLO text (per-shard shapes), weighted per op kind
+by the bytes a device must move on its ICI links under a ring schedule:
+
+    all-gather:        out - in   (received bytes)
+    all-reduce:        2 * in     (reduce-scatter + all-gather)
+    reduce-scatter:    in
+    all-to-all:        in
+    collective-permute: in
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict
+
+PEAK_FLOPS = 197e12      # bf16 per chip (TPU v5e)
+HBM_BW = 819e9           # B/s per chip
+ICI_BW = 50e9            # B/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# result may be a tuple: "%x = (f32[8,128], f32[8,128]) all-reduce("
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def link_bytes(self) -> float:
+        """ICI bytes a device moves (ring-schedule weights)."""
+        w = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+             "all-to-all": 1.0, "collective-permute": 1.0}
+        return sum(w[k] * v for k, v in self.bytes_by_kind.items())
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+_CONVERT_RE = re.compile(
+    r"= ([a-z0-9]+)\[([0-9,]*)\][^=]*? (?:convert|fusion\([^)]*\), kind=kLoop,"
+    r" calls=%?wrapped_convert)")
+_CONVERT_NAME_RE = re.compile(
+    r"%(?:wrapped_)?convert[\w.]* = ([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def convert_bytes(hlo_text: str) -> int:
+    """Bytes moved by dtype-convert ops.
+
+    XLA:CPU materializes fp32 copies of bf16 dot operands (no native bf16);
+    the TPU MXU/VPU converts in-flight.  The roofline's adjusted memory term
+    subtracts these artifact bytes (in+out ~ 1.5x the output size).
+    """
+    total = 0
+    for m in _CONVERT_NAME_RE.finditer(hlo_text):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out_b = n * _DTYPE_BYTES[dt]
+        if out_b >= 1 << 20:            # only large tensors
+            total += int(out_b * 1.5)
+    return total
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    st = CollectiveStats()
+    for m in _OP_RE.finditer(hlo_text):
+        shape_txt, kind, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-done":       # async pair: count the -start only
+            continue
+        b = _shape_bytes(shape_txt)
+        st.bytes_by_kind[kind] = st.bytes_by_kind.get(kind, 0) + b
+        st.count_by_kind[kind] = st.count_by_kind.get(kind, 0) + 1
+    return st
+
+
+@dataclass
+class RooflineTerms:
+    """All inputs are PER-CHIP quantities: the compiled module analyzed by
+    ``cost_analysis`` is the per-device SPMD program (measured — a 256-way
+    sharded matmul reports 1/256 of the global FLOPs)."""
+    flops: float                   # per-chip HLO FLOPs
+    bytes_accessed: float          # per-chip HLO bytes
+    collective_link_bytes: float   # per-chip ICI bytes (ring-weighted)
+    chips: int
+    model_flops: float = 0.0       # GLOBAL analytical 6ND / 2ND
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_link_bytes / ICI_BW
+
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    def bound_step_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def useful_flops_ratio(self) -> float:
+        tot = self.flops * self.chips
+        return self.model_flops / tot if tot else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops, "bytes_accessed": self.bytes_accessed,
+            "collective_link_bytes": self.collective_link_bytes,
+            "chips": self.chips, "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "dominant": self.dominant(),
+            "useful_flops_ratio": self.useful_flops_ratio(),
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Analytical MODEL_FLOPS: 6·N·D (train) / 2·N_active·D (inference)."""
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch   # decode: one token

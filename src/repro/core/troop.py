@@ -1,0 +1,52 @@
+"""TROOP as a composable feature: configuration + the four mechanisms.
+
+Paper -> TPU mapping (see DESIGN.md §2):
+  (A) decoupled VLSU interfaces  -> ``streams=2``: every streamed operand is
+      fetched as two disjoint contiguous half-streams with independent
+      BlockSpecs, so two DMAs are in flight per grid step.
+  (B) improved chaining          -> the Pallas grid pipeline (compute on
+      block i overlaps the fetch of block i+1); ``unroll`` widens the
+      per-step work to keep the faster unit saturated (paper §IV-F).
+  (C) shadow buffers             -> accumulation in VMEM/SMEM scratch;
+      results commit to HBM once per tile, so compute never stalls on the
+      output path.
+  (D/E) layout / scrambling      -> hardware-aligned tile shapes
+      (multiples of the (8..32, 128) layout granule) + pre-tiled weight
+      layout so each stream reads disjoint contiguous HBM regions
+      (``core.layout``).
+  (G) log2 reductions            -> intra-tile tree reductions + cross-tile
+      scratch accumulation (and the cross-device LSE-combine for split-K
+      decode in ``kernels.ops``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class TroopConfig:
+    streams: int = 2          # decoupled memory interfaces (1 = baseline)
+    unroll: int = 1           # per-step block multiplier (software pipelining)
+    block_n: int = 256        # output-tile rows
+    block_k: int = 512        # reduction-tile depth
+    scrambled_layout: bool = True   # pre-tiled weights (E)
+    interpret: bool = True    # CPU validation mode (TPU: False)
+
+    def validate(self):
+        assert self.streams in (1, 2), "paper evaluates 1 or 2 interfaces"
+        assert self.unroll in (1, 2, 4)
+        return self
+
+
+BASELINE = TroopConfig(streams=1, unroll=1, scrambled_layout=False)
+TROOP = TroopConfig(streams=2, unroll=2, scrambled_layout=True)
+
+
+def sublane(dtype) -> int:
+    """Minor-to-major second dim granule for a dtype on TPU."""
+    import jax.numpy as jnp
+    return {2: 16, 1: 32}.get(jnp.dtype(dtype).itemsize, 8)
+
+
+def aligned(dim: int, dtype, lane: bool = False) -> bool:
+    return dim % (128 if lane else sublane(dtype)) == 0

@@ -1,0 +1,6 @@
+from repro.ft.failures import FailureInjector, SimulatedFailure
+from repro.ft.watchdog import StepWatchdog
+from repro.ft.elastic import elastic_meshes, reshard_tree
+
+__all__ = ["FailureInjector", "SimulatedFailure", "StepWatchdog",
+           "elastic_meshes", "reshard_tree"]

@@ -1,0 +1,43 @@
+"""Elastic scaling: rebuild the mesh after node loss and re-shard state.
+
+With the checkpoint format (host numpy + manifest) restore-onto-any-mesh is
+free; for in-memory recovery (no checkpoint round-trip) ``reshard_tree``
+re-places live arrays onto the surviving mesh.  ``elastic_meshes`` yields
+the shrink ladder (drop whole data rows, keeping the model axis intact —
+weights never need re-partitioning, only batch re-balancing).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def elastic_meshes(model_axis: int) -> List[Mesh]:
+    """All meshes this host set supports, largest first (data axis ladder)."""
+    n = len(jax.devices())
+    out = []
+    data = n // model_axis
+    while data >= 1:
+        devs = np.asarray(jax.devices()[:data * model_axis]).reshape(
+            data, model_axis)
+        out.append(Mesh(devs, ("data", "model")))
+        data //= 2
+    return out
+
+
+def shrink_mesh(mesh: Mesh, lost_data_rows: int = 1) -> Mesh:
+    """Drop ``lost_data_rows`` rows from the data axis (simulated node loss)."""
+    devs = np.asarray(mesh.devices)
+    assert devs.ndim == 2, "expects (data, model) mesh"
+    keep = devs.shape[0] - lost_data_rows
+    assert keep >= 1
+    return Mesh(devs[:keep], mesh.axis_names)
+
+
+def reshard_tree(tree, shardings):
+    """Re-place every array onto new shardings (in-memory elastic recovery)."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(jax.device_get(x), s), tree, shardings)

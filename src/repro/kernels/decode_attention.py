@@ -1,0 +1,210 @@
+"""Flash-decode kernel — the paper's motivating workload (LLM decode phase).
+
+One query token attends over a KV cache: every score/value contraction is a
+GEMV on cache lines read exactly once (OI ~= 1 FLOP/byte).  Reaching the HBM
+roofline requires exactly the paper's medicine:
+
+  (A) streams=2   — the cache is streamed as two disjoint contiguous
+                    S-halves via independent BlockSpecs (two DMAs in flight
+                    per grid step, touching disjoint HBM regions — the
+                    scrambling guarantee (E) comes for free from the split).
+  (B) pipeline    — online-softmax state (m, l, acc) lives in VMEM scratch;
+                    compute on block j overlaps the fetch of block j+1.
+  (C) shadow acc  — the output commits once at the last S-block; no per-step
+                    output DMA backpressure on the VPU/MXU.
+  (G) log2 reduce — per-block max/sum are VPU tree reductions; the
+                    cross-block combine is the associative online-softmax
+                    update (reused cross-device for split-S decode, ops.py).
+
+GQA: q heads grouped over KV heads; per-KV-head contractions run as batched
+MXU dot_generals.  The kernel emits UNNORMALIZED (acc, m, l) so the same
+code serves full decode (normalize in the wrapper) and split-S partials
+(LSE-combined across shards by ``ops.lse_combine``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.core.troop import TroopConfig
+
+_NEG = -1e30
+
+
+def _block_update(q, k, v, s0, valid, scale, m_s, l_s, acc):
+    """One online-softmax update for a (bs, KV, hd) cache block."""
+    KV, G, hd = q.shape
+    bs = k.shape[0]
+    kT = jnp.moveaxis(k, 1, 0).astype(jnp.float32)       # (KV, bs, hd)
+    vT = jnp.moveaxis(v, 1, 0).astype(jnp.float32)
+    scores = jax.lax.dot_general(
+        q.astype(jnp.float32), kT,
+        (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32) * scale      # (KV, G, bs)
+    pos = s0 + jax.lax.broadcasted_iota(jnp.int32, (KV, G, bs), 2)
+    scores = jnp.where(pos < valid, scores, _NEG)
+    m_new = jnp.maximum(m_s[...], jnp.max(scores, -1, keepdims=True))
+    alpha = jnp.exp(m_s[...] - m_new)
+    p = jnp.exp(scores - m_new)                          # (KV, G, bs)
+    l_s[...] = l_s[...] * alpha + jnp.sum(p, -1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p, vT, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)              # (KV, G, hd)
+    acc[...] = acc[...] * alpha + pv
+    m_s[...] = m_new
+
+
+def _prologue(m_s, l_s, acc):
+    m_s[...] = jnp.full_like(m_s, _NEG)
+    l_s[...] = jnp.zeros_like(l_s)
+    acc[...] = jnp.zeros_like(acc)
+
+
+def _epilogue(o_ref, m_ref, l_ref, m_s, l_s, acc):
+    o_ref[0] = acc[...]
+    m_ref[0] = m_s[...]
+    l_ref[0] = l_s[...]
+
+
+def _kernel_1s(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+               m_s, l_s, acc, *, scale, bs):
+    b, j = pl.program_id(0), pl.program_id(1)
+    pl.when(j == 0)(lambda: _prologue(m_s, l_s, acc))
+    _block_update(q_ref[0], k_ref[0], v_ref[0], j * bs, len_ref[b],
+                  scale, m_s, l_s, acc)
+    pl.when(j == pl.num_programs(1) - 1)(
+        lambda: _epilogue(o_ref, m_ref, l_ref, m_s, l_s, acc))
+
+
+def _kernel_2s(len_ref, q_ref, k0, v0, k1, v1, o_ref, m_ref, l_ref,
+               m_s, l_s, acc, *, scale, bs, half):
+    b, j = pl.program_id(0), pl.program_id(1)
+    pl.when(j == 0)(lambda: _prologue(m_s, l_s, acc))
+    q, valid = q_ref[0], len_ref[b]
+    _block_update(q, k0[0], v0[0], j * bs, valid, scale, m_s, l_s, acc)
+    _block_update(q, k1[0], v1[0], half + j * bs, valid, scale, m_s, l_s, acc)
+    pl.when(j == pl.num_programs(1) - 1)(
+        lambda: _epilogue(o_ref, m_ref, l_ref, m_s, l_s, acc))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "s_offset"))
+def decode_attention_stats(q, k, v, length, cfg: TroopConfig = TroopConfig(),
+                           s_offset: int = 0):
+    """Unnormalized partials: (acc (B,KV,G,hd) f32, m (B,KV,G,1), l (B,KV,G,1))."""
+    B, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    half = S // cfg.streams
+    bs = max(min(cfg.block_k // 2 * cfg.unroll, half), 1)
+    while half % bs:
+        bs //= 2
+    steps = half // bs
+    qg = q.reshape(B, KV, G, hd)
+    length = jnp.maximum(length - s_offset, 0)
+
+    scratch = [pltpu.VMEM((KV, G, 1), jnp.float32),
+               pltpu.VMEM((KV, G, 1), jnp.float32),
+               pltpu.VMEM((KV, G, hd), jnp.float32)]
+    q_spec = pl.BlockSpec((1, KV, G, hd), lambda b, j: (b, 0, 0, 0))
+    out_specs = [pl.BlockSpec((1, KV, G, hd), lambda b, j: (b, 0, 0, 0)),
+                 pl.BlockSpec((1, KV, G, 1), lambda b, j: (b, 0, 0, 0)),
+                 pl.BlockSpec((1, KV, G, 1), lambda b, j: (b, 0, 0, 0))]
+    out_shape = [jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
+                 jax.ShapeDtypeStruct((B, KV, G, 1), jnp.float32),
+                 jax.ShapeDtypeStruct((B, KV, G, 1), jnp.float32)]
+    lo = pl.BlockSpec((1, bs, KV, hd), lambda b, j: (b, j, 0, 0))
+    hi = pl.BlockSpec((1, bs, KV, hd), lambda b, j, o=steps: (b, j + o, 0, 0))
+
+    if cfg.streams == 1:
+        acc, m, l = pl.pallas_call(
+            functools.partial(_kernel_1s, scale=scale, bs=bs),
+            grid=(B, steps),
+            in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM), q_spec, lo, lo],
+            out_specs=out_specs, out_shape=out_shape, scratch_shapes=scratch,
+            interpret=cfg.interpret,
+        )(length, qg, k, v)
+    else:
+        acc, m, l = pl.pallas_call(
+            functools.partial(_kernel_2s, scale=scale, bs=bs, half=half),
+            grid=(B, steps),
+            in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM), q_spec,
+                      lo, lo, hi, hi],
+            out_specs=out_specs, out_shape=out_shape, scratch_shapes=scratch,
+            interpret=cfg.interpret,
+        )(length, qg, k, v, k, v)
+    return acc, m, l
+
+
+def decode_attention(q, k, v, length, cfg: TroopConfig = TroopConfig()):
+    """q (B,H,hd); k,v (B,S,KV,hd); length (B,) valid prefix. -> (B,H,hd)."""
+    B, H, hd = q.shape
+    acc, m, l = decode_attention_stats(q, k, v, length, cfg)
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def _block_update_q8(q, k8, ks, v8, vs, s0, valid, scale, m_s, l_s, acc):
+    """Online-softmax update reading an int8 cache block: dequantization
+    happens in VMEM after the (halved) HBM stream — mechanism (A)+(E) with
+    the §Perf A4 quantized layout."""
+    k = k8.astype(jnp.float32) * ks.astype(jnp.float32)
+    v = v8.astype(jnp.float32) * vs.astype(jnp.float32)
+    _block_update(q, k, v, s0, valid, scale, m_s, l_s, acc)
+
+
+def _kernel_q8(len_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref,
+               o_ref, m_ref, l_ref, m_s, l_s, acc, *, scale, bs):
+    b, j = pl.program_id(0), pl.program_id(1)
+    pl.when(j == 0)(lambda: _prologue(m_s, l_s, acc))
+    _block_update_q8(q_ref[0], k_ref[0], ks_ref[0], v_ref[0], vs_ref[0],
+                     j * bs, len_ref[b], scale, m_s, l_s, acc)
+    pl.when(j == pl.num_programs(1) - 1)(
+        lambda: _epilogue(o_ref, m_ref, l_ref, m_s, l_s, acc))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def decode_attention_int8(q, k8, k_scale, v8, v_scale, length,
+                          cfg: TroopConfig = TroopConfig()):
+    """Quantized-cache flash-decode: k8/v8 (B,S,KV,hd) int8 with
+    per-(token, head) scales (B,S,KV,1). Returns (B,H,hd) in q.dtype.
+
+    HBM traffic is ~0.5x the bf16 kernel (int8 values + tiny scales); the
+    dequant multiply runs on the VPU between the DMA and the MXU."""
+    B, H, hd = q.shape
+    S, KV = k8.shape[1], k8.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    bs = max(min(cfg.block_k // 2 * cfg.unroll, S), 1)
+    while S % bs:
+        bs //= 2
+    steps = S // bs
+    qg = q.reshape(B, KV, G, hd)
+
+    scratch = [pltpu.VMEM((KV, G, 1), jnp.float32),
+               pltpu.VMEM((KV, G, 1), jnp.float32),
+               pltpu.VMEM((KV, G, hd), jnp.float32)]
+    q_spec = pl.BlockSpec((1, KV, G, hd), lambda b, j: (b, 0, 0, 0))
+    out_specs = [pl.BlockSpec((1, KV, G, hd), lambda b, j: (b, 0, 0, 0)),
+                 pl.BlockSpec((1, KV, G, 1), lambda b, j: (b, 0, 0, 0)),
+                 pl.BlockSpec((1, KV, G, 1), lambda b, j: (b, 0, 0, 0))]
+    out_shape = [jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
+                 jax.ShapeDtypeStruct((B, KV, G, 1), jnp.float32),
+                 jax.ShapeDtypeStruct((B, KV, G, 1), jnp.float32)]
+    kv_spec = pl.BlockSpec((1, bs, KV, hd), lambda b, j: (b, j, 0, 0))
+    sc_spec = pl.BlockSpec((1, bs, KV, 1), lambda b, j: (b, j, 0, 0))
+
+    acc, m, l = pl.pallas_call(
+        functools.partial(_kernel_q8, scale=scale, bs=bs),
+        grid=(B, steps),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM), q_spec,
+                  kv_spec, sc_spec, kv_spec, sc_spec],
+        out_specs=out_specs, out_shape=out_shape, scratch_shapes=scratch,
+        interpret=cfg.interpret,
+    )(length, qg, k8, k_scale, v8, v_scale)
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.reshape(B, H, hd).astype(q.dtype)

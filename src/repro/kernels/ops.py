@@ -1,0 +1,70 @@
+"""Public jit'd kernel API (TroopConfig-switchable: baseline vs TROOP).
+
+This is the layer the framework calls; every function has a pure-jnp oracle
+in ``ref.py`` and both are exercised by the test suite.  ``lse_combine``
+lifts the kernel's online-softmax combine to the mesh level for
+sequence-parallel decode (split-S across devices).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.troop import BASELINE, TROOP, TroopConfig
+from repro.kernels.axpy import axpy
+from repro.kernels.decode_attention import (decode_attention,
+                                            decode_attention_int8,
+                                            decode_attention_stats)
+from repro.kernels.dotp import dotp
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.fused_adamw import fused_adamw
+from repro.kernels.gemv import gemv
+from repro.kernels.mamba_scan import mamba_scan
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.rwkv6 import wkv6
+
+__all__ = ["gemv", "dotp", "axpy", "rmsnorm", "fused_adamw",
+           "decode_attention", "decode_attention_stats", "decode_attention_int8",
+           "flash_attention",
+           "wkv6", "wkv6_with_state", "mamba_scan", "batched_gemv",
+           "lse_combine", "BASELINE", "TROOP", "TroopConfig"]
+
+
+def batched_gemv(w, xs, cfg: TroopConfig = TroopConfig()):
+    """w (N,K), xs (B,K) -> (B,N): small-batch decode projections."""
+    return jax.vmap(lambda x: gemv(w, x, cfg))(xs)
+
+
+def wkv6_with_state(r, k, v, w, u, state0, cfg: TroopConfig = TroopConfig()):
+    """WKV6 with nonzero carried-in state (decode chaining).
+
+    The kernel assumes zero initial state; the carried state contributes
+    y_t += (r_t * decay-to-start_t) @ state0, folded in here as one batched
+    matmul (exact, associative split of the recurrence).
+    """
+    y, state = wkv6(r, k, v, w, u, jnp.zeros_like(state0), cfg)
+    lw = jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-30))
+    cum_x = jnp.cumsum(lw, axis=1) - lw                    # exclusive, <= 0
+    r_dec = r.astype(jnp.float32) * jnp.exp(cum_x)
+    y = y + jnp.einsum("bthi,bhij->bthj", r_dec, state0.astype(jnp.float32))
+    decay_all = jnp.exp(jnp.sum(lw, axis=1))               # (B,H,hd)
+    state = state + decay_all[..., None] * state0.astype(jnp.float32)
+    return y, state
+
+
+def lse_combine(partials):
+    """Combine split-S decode partials [(acc, m, l), ...] -> (B,KV,G,hd).
+
+    The associative log-sum-exp combine (paper mechanism (G) lifted to the
+    mesh): with the cache sharded over S, each device produces a partial and
+    the combine tree costs O(hd) per device — this is what makes
+    sequence-parallel decode of 500k-token caches collective-cheap.
+    """
+    acc, m, l = partials[0]
+    for acc2, m2, l2 in partials[1:]:
+        m_new = jnp.maximum(m, m2)
+        a1, a2 = jnp.exp(m - m_new), jnp.exp(m2 - m_new)
+        acc = acc * a1 + acc2 * a2
+        l = l * a1 + l2 * a2
+        m = m_new
+    return acc / jnp.maximum(l, 1e-30)

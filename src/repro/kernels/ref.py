@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth for tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gemv(w, x):
+    """w (N,K), x (K,) -> (N,) fp32 accumulation."""
+    return jnp.dot(w.astype(jnp.float32), x.astype(jnp.float32))
+
+
+def dotp(x, y):
+    return jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32))
+
+
+def axpy(a, x, y):
+    return (a * x.astype(jnp.float32) + y.astype(jnp.float32)).astype(y.dtype)
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    r = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * r * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def fused_adamw(p, g, mu, nu, *, lr, b1, b2, eps, wd, bc1, bc2):
+    g = g.astype(jnp.float32)
+    mu = b1 * mu + (1 - b1) * g
+    nu = b2 * nu + (1 - b2) * g * g
+    upd = (mu / bc1) / (jnp.sqrt(nu / bc2) + eps)
+    p32 = p.astype(jnp.float32)
+    p32 = p32 - lr * (upd + wd * p32)
+    return p32.astype(p.dtype), mu, nu
+
+
+def decode_attention(q, k, v, length):
+    """q (B,H,hd); k,v (B,S,KV,hd); length (B,) valid prefix. -> (B,H,hd).
+
+    GQA flash-decode oracle: full softmax over the valid prefix.
+    """
+    B, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg, k.astype(jnp.float32))
+    scores = scores * (hd ** -0.5)
+    mask = jnp.arange(S)[None, None, None, :] >= length[:, None, None, None]
+    scores = jnp.where(mask, -jnp.inf, scores)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, H, hd)
+
+
+def flash_attention(q, k, v, causal=True):
+    """q (B,T,H,hd), k/v (B,S,KV,hd) -> (B,T,H,hd). fp32 softmax oracle."""
+    B, T, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, T, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("btkgh,bskh->bkgts", qg, k.astype(jnp.float32))
+    s = s * (hd ** -0.5)
+    if causal:
+        mask = jnp.arange(T)[:, None] < jnp.arange(S)[None, :]
+        s = jnp.where(mask[None, None, None], -jnp.inf, s)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgts,bskh->btkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, T, H, hd)
+
+
+def wkv6(r, k, v, w, u, state0):
+    """RWKV-6 recurrence oracle — re-exported from the model (lax.scan)."""
+    from repro.models.rwkv import wkv6_scan
+    return wkv6_scan(r, k, v, w, u, state0)
+
+
+def mamba_scan(x, dt, B, C, A, D, state0):
+    """Selective-scan oracle — re-exported from the model (lax.scan)."""
+    from repro.models.mamba import _ssm_scan
+    return _ssm_scan(x, dt, B, C, A, D, state0)

@@ -1,0 +1,57 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> --smoke``.
+
+Continuous-batching engine around the jitted prefill/decode steps (the
+paper's decode workload).  ``--smoke`` uses the reduced config on the host.
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import RuntimeConfig, build_model
+from repro.models import modules as M
+from repro.serve.scheduler import Request, ServingEngine
+from repro.serve.step import make_prefill_step, make_serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduced(cfg)
+    model = build_model(cfg, RuntimeConfig(remat="none"))
+    params = M.unbox(model.init(jax.random.PRNGKey(0)))
+
+    extras = None
+    if cfg.encoder_decoder or cfg.frontend == "vision":
+        import jax.numpy as jnp
+        F = cfg.cross_attention_len if cfg.encoder_decoder \
+            else cfg.frontend_tokens
+        extras = lambda req: {"frontend": 0.1 * jnp.ones(
+            (1, F, cfg.d_model), jnp.bfloat16)}
+    engine = ServingEngine(
+        model, slots=args.slots, cache_len=args.cache_len,
+        prefill_step=make_prefill_step(model),
+        serve_step=make_serve_step(model), params=params,
+        prefill_extras=extras)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        engine.submit(Request(
+            rid=i, prompt=rng.integers(1, min(cfg.vocab_size, 1000),
+                                       int(rng.integers(4, 16))),
+            max_new_tokens=args.max_new))
+    engine.run_until_drained()
+    print(f"served {args.requests} requests in {engine.steps} decode steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Tree-level sharding helpers for the launcher (rules live in
+``repro.core.partitioning``)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.partitioning import (DECODE_RULES, TRAIN_RULES, mesh_size,
+                                     spec_for, wide_tp_rules)
+from repro.models import modules as M
+
+__all__ = ["TRAIN_RULES", "DECODE_RULES", "wide_tp_rules", "spec_for",
+           "shardings_for_tree", "sds_with_sharding", "batch_spec",
+           "cache_sharding"]
+
+
+def shardings_for_tree(boxed, mesh: Mesh, rules):
+    def one(p):
+        return NamedSharding(mesh, spec_for(p.axes, p.value.shape, rules, mesh))
+    return jax.tree.map(one, boxed, is_leaf=M.is_param)
+
+
+def sds_with_sharding(boxed, mesh: Mesh, rules):
+    def one(p):
+        spec = spec_for(p.axes, p.value.shape, rules, mesh)
+        return jax.ShapeDtypeStruct(p.value.shape, p.value.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(one, boxed, is_leaf=M.is_param)
+
+
+def batch_spec(mesh: Mesh, rules) -> P:
+    ax = rules.get("batch")
+    if isinstance(ax, tuple):
+        ax = tuple(a for a in ax if a in mesh.axis_names) or None
+    return P(ax)
+
+
+def cache_sharding(caches_sds, mesh: Mesh, rules, batch: int):
+    """Decode-cache shardings: batch dim + (large) cache-seq dim.
+
+    Leaves are (B, S, ...) KV tensors, (B, ...) recurrent states, or stacked
+    (layers, B, ...) variants.
+    """
+    b_ax = rules.get("batch")
+    if isinstance(b_ax, tuple):
+        b_ax = tuple(a for a in b_ax if a in mesh.axis_names) or None
+    s_ax = rules.get("cache_seq")
+    if s_ax is not None and s_ax not in mesh.axis_names:
+        s_ax = None
+
+    def one(leaf):
+        shape = leaf.shape
+        entries = [None] * len(shape)
+        bi = 0
+        if len(shape) >= 2 and shape[0] != batch and shape[1] == batch:
+            bi = 1
+        bsz = mesh_size(b_ax, mesh)
+        if shape[bi] == batch and bsz > 1 and batch % bsz == 0:
+            entries[bi] = b_ax
+        si = bi + 1
+        ssz = mesh_size(s_ax, mesh)
+        if len(shape) >= si + 2 and s_ax and ssz > 1 \
+                and shape[si] % ssz == 0 and shape[si] >= 1024:
+            entries[si] = s_ax
+        while entries and entries[-1] is None:
+            entries.pop()
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree.map(one, caches_sds)

@@ -1,0 +1,3 @@
+from repro.models.registry import Model, RuntimeConfig, build_model, input_specs
+
+__all__ = ["Model", "RuntimeConfig", "build_model", "input_specs"]

@@ -1,0 +1,273 @@
+"""GQA attention (RoPE, optional qkv-bias / qk-norm), KV-cache aware.
+
+Pure-jnp reference path — GSPMD-shardable, used by the multi-pod dry-run and
+as the oracle for the Pallas flash/decode kernels.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name as _checkpoint_name
+
+from repro.core import partitioning as PT
+from repro.models import modules as M
+
+
+class KVCache(NamedTuple):
+    """KV cache; optionally int8-quantized (k/v int8 + per-(token, head)
+    bf16 scales — §Perf A4: halves the decode memory-roofline floor)."""
+    k: jax.Array       # (B, S, KV, hd) bf16 | int8
+    v: jax.Array       # (B, S, KV, hd)
+    k_scale: Optional[jax.Array] = None   # (B, S, KV, 1) bf16 when int8
+    v_scale: Optional[jax.Array] = None
+
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
+
+
+def quantize_kv(x):
+    """(B, T, KV, hd) -> int8 values + per-(B,T,KV) scale."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q, scale, dtype):
+    return q.astype(dtype) * scale.astype(dtype)
+
+
+def attention_init(key, cfg, *, cross: bool = False):
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": M.dense_init(ks[0], d, H * hd, ("embed", "qkv_out"),
+                           bias=cfg.qkv_bias),
+        "wk": M.dense_init(ks[1], d, KV * hd, ("embed", "kv_out"),
+                           bias=cfg.qkv_bias),
+        "wv": M.dense_init(ks[2], d, KV * hd, ("embed", "kv_out"),
+                           bias=cfg.qkv_bias),
+        "wo": M.dense_init(ks[3], H * hd, d, ("qkv_out", "embed")),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = M.norm_init("rmsnorm", hd, (None,))
+        p["k_norm"] = M.norm_init("rmsnorm", hd, (None,))
+    return p
+
+
+def attend(q, k, v, *, causal: bool, q_offset=0, length: Optional[jax.Array] = None,
+           decode: bool = False):
+    """q: (B,T,H,hd) k/v: (B,S,KV,hd). GQA via head grouping. fp32 softmax.
+
+    ``q_offset``: absolute position of q[0] (causal masking w/ cache).
+    ``length``: valid prefix length of k/v (decode with pre-allocated cache).
+
+    The ``model``-axis strategy (shard KV heads / GQA groups / KV sequence)
+    is picked per shape by ``PT.attn_strategy`` — see core.partitioning.
+    """
+    B, T, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    q = q.reshape(B, T, KV, G, hd)
+    strat = PT.attn_strategy(KV, G, decode)
+    if strat in ("kv", "kv_uneven"):
+        q = PT.constrain(q, ("batch", None, "heads", None, None),
+                         allow_uneven=strat == "kv_uneven")
+        k = PT.constrain(k, ("batch", None, "heads", None),
+                         allow_uneven=strat == "kv_uneven")
+        v = PT.constrain(v, ("batch", None, "heads", None),
+                         allow_uneven=strat == "kv_uneven")
+        score_axes = ("batch", "heads", None, None, None)
+        out_axes = ("batch", None, "heads", None, None)
+    elif strat == "group":
+        q = PT.constrain(q, ("batch", None, None, "heads", None))
+        k = PT.constrain(k, ("batch", None, None, None))
+        v = PT.constrain(v, ("batch", None, None, None))
+        score_axes = ("batch", None, "heads", None, None)
+        out_axes = ("batch", None, None, "heads", None)
+    elif strat == "seq":
+        q = PT.constrain(q, ("batch", None, None, None, None))
+        k = PT.constrain(k, ("batch", "attn_kv_seq", None, None))
+        v = PT.constrain(v, ("batch", "attn_kv_seq", None, None))
+        score_axes = ("batch", None, None, None, "attn_kv_seq")
+        out_axes = ("batch", None, None, None, None)
+    else:
+        score_axes = out_axes = None
+    # §Perf A3: in decode the QK/PV contractions stay in the cache dtype —
+    # a f32-preferred einsum makes XLA materialize fp32 copies of the WHOLE
+    # cache (2 extra O(S) passes/layer; the MXU accumulates in fp32 anyway).
+    # Only the small scores tensor is upcast for the fp32 softmax.  Gated on
+    # the distributed context: local/CPU paths keep full-fp32 scores.
+    qk_dtype = None if (decode and PT.active()) else jnp.float32
+    scores = jnp.einsum("btkgh,bskh->bkgts", q, k,
+                        preferred_element_type=qk_dtype)
+    scores = scores.astype(jnp.float32)
+    if score_axes is not None:
+        scores = PT.constrain(scores, score_axes,
+                              allow_uneven=strat == "kv_uneven")
+    scores = scores * (hd ** -0.5)
+    spos = jnp.arange(S)[None, None, None, None, :]
+    mask = jnp.zeros((), jnp.bool_)
+    neg = jnp.finfo(jnp.float32).min
+    if causal:
+        qpos = q_offset + jnp.arange(T)[None, None, None, :, None]
+        mask = spos > qpos
+    if length is not None:
+        mask = mask | (spos >= length[:, None, None, None, None])
+    scores = jnp.where(mask, neg, scores)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # §Perf B2: pin probs + output shardings. Without these, GSPMD resolves
+    # the PV contraction with an "involuntary full rematerialization" of the
+    # (B,KV,G,T,S) probs tensor — ~29 all-gathers of 1.07 GB per layer in
+    # glm4-9b train_4k (measured; see EXPERIMENTS.md §Perf).
+    if score_axes is not None:
+        probs = PT.constrain(probs.astype(v.dtype), score_axes,
+                             allow_uneven=strat == "kv_uneven")
+    else:
+        probs = probs.astype(v.dtype)
+    out = jnp.einsum("bkgts,bskh->btkgh", probs, v)
+    if out_axes is not None:
+        out = PT.constrain(out, out_axes,
+                           allow_uneven=strat == "kv_uneven")
+    return out.reshape(B, T, H, hd)
+
+
+def _bf16_cache_einsum(spec, a, b):
+    """Contraction over a cache operand without upcasting it (A3)."""
+    return jnp.einsum(spec, a.astype(b.dtype), b)
+
+
+def _project_qkv(p, cfg, x, x_kv, positions, kv_positions, dtype):
+    B, T = x.shape[:2]
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = M.apply_dense(p["wq"], x, dtype).reshape(B, T, H, hd)
+    k = M.apply_dense(p["wk"], x_kv, dtype).reshape(B, x_kv.shape[1], KV, hd)
+    v = M.apply_dense(p["wv"], x_kv, dtype).reshape(B, x_kv.shape[1], KV, hd)
+    if cfg.qk_norm:
+        q = M.apply_norm(p["q_norm"], q, "rmsnorm", cfg.norm_eps)
+        k = M.apply_norm(p["k_norm"], k, "rmsnorm", cfg.norm_eps)
+    if cfg.pos_emb == "rope":
+        q = M.apply_rope(q, positions, cfg.rope_theta)
+        k = M.apply_rope(k, kv_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def apply_attention(p, cfg, x, *, positions, dtype, causal=True,
+                    return_kv=False):
+    """Full-sequence (train / prefill) self-attention."""
+    q, k, v = _project_qkv(p, cfg, x, x, positions, positions, dtype)
+    out = attend(q, k, v, causal=causal)
+    B, T = x.shape[:2]
+    out = M.apply_dense(p["wo"], out.reshape(B, T, -1), dtype)
+    # §Perf B3: reduce the TP partial sum HERE, in bf16 — otherwise XLA
+    # defers the all-reduce past the next norm's fp32 upcast (2x bytes).
+    # §Perf B4: name the post-psum tensor so the remat policy can SAVE it —
+    # checkpoint_dots saves the (pre-psum) dot output, so the backward pass
+    # re-runs every TP all-reduce otherwise.
+    out = PT.constrain(out, ("batch", None, None))
+    out = _checkpoint_name(out, "tp_out")
+    if return_kv:
+        return out, KVCache(k, v)   # k is roped: matches the decode cache
+    return out
+
+
+def update_cache(cache_arr, new, pos):
+    """O(1)-byte cache update: scatter the new token row at ``pos``.
+
+    §Perf iterations A1/A2: the naive ``jnp.where(iota == pos, ...)`` reads
+    and rewrites the WHOLE cache every step (2 extra O(S) passes/layer).  A
+    *global* scatter is worse under GSPMD (it gathers the sharded cache —
+    measured, see EXPERIMENTS.md).  The winning form is a shard_map-local
+    scatter: each (batch, seq)-shard writes its own rows, indices offset by
+    the shard's sequence origin, out-of-range rows dropped — no collectives,
+    O(tokens) bytes.
+    """
+    B, S = cache_arr.shape[:2]
+    row = new[:, 0].astype(cache_arr.dtype)
+
+    def local(c, n, p):
+        s_local = c.shape[1]
+        if PT.active():
+            seq_ax = PT.resolve("cache_seq")
+            off = jax.lax.axis_index(seq_ax) * s_local if seq_ax else 0
+        else:
+            off = 0
+        idx = p - off
+        return c.at[jnp.arange(c.shape[0]), idx].set(n, mode="drop")
+
+    if not PT.active():
+        return local(cache_arr, row, pos)
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    mesh = PT._CTX.mesh
+    b_ax = PT.resolve("batch")
+    bsz = PT.mesh_size(b_ax)
+    if bsz <= 1 or B % bsz:
+        b_ax = None
+    s_ax = PT.resolve("cache_seq")
+    if s_ax is not None and (PT.mesh_size(s_ax) <= 1
+                             or S % PT.mesh_size(s_ax) or S < 1024):
+        s_ax = None
+    trail = (None,) * (cache_arr.ndim - 2)
+    cspec = P(b_ax, s_ax, *trail)
+    nspec = P(b_ax, *trail)
+    pspec = P(b_ax)
+    return shard_map(local, mesh=mesh, in_specs=(cspec, nspec, pspec),
+                     out_specs=cspec, check_rep=False)(cache_arr, row, pos)
+
+
+def apply_attention_decode(p, cfg, x, cache: KVCache, pos, dtype):
+    """Single-token decode. ``pos``: (B,) current position; cache has fixed S."""
+    B = x.shape[0]
+    q, k_new, v_new = _project_qkv(
+        p, cfg, x, x, pos[:, None], pos[:, None], dtype)
+    cs = ("batch", "cache_seq", None, None)
+    if cache.quantized:
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        new_cache = KVCache(
+            PT.constrain(update_cache(cache.k, kq, pos), cs),
+            PT.constrain(update_cache(cache.v, vq, pos), cs),
+            update_cache(cache.k_scale, ks, pos),
+            update_cache(cache.v_scale, vs, pos))
+        k = dequantize_kv(new_cache.k, new_cache.k_scale, dtype)
+        v = dequantize_kv(new_cache.v, new_cache.v_scale, dtype)
+    else:
+        k = PT.constrain(update_cache(cache.k, k_new, pos), cs)
+        v = PT.constrain(update_cache(cache.v, v_new, pos), cs)
+        new_cache = KVCache(k, v)
+    out = attend(q, k, v, causal=False, length=pos + 1, decode=True)
+    out = M.apply_dense(p["wo"], out.reshape(B, 1, -1), dtype)
+    return out, new_cache
+
+
+def apply_cross_attention(p, cfg, x, enc_kv, dtype):
+    """Cross-attention over precomputed encoder K/V (whisper decoder)."""
+    B, T = x.shape[:2]
+    H, hd = cfg.num_heads, cfg.head_dim
+    q = M.apply_dense(p["wq"], x, dtype).reshape(B, T, H, hd)
+    out = attend(q, enc_kv.k, enc_kv.v, causal=False)
+    return M.apply_dense(p["wo"], out.reshape(B, T, -1), dtype)
+
+
+def cross_kv(p, cfg, enc_out, dtype) -> KVCache:
+    B, S = enc_out.shape[:2]
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    k = M.apply_dense(p["wk"], enc_out, dtype).reshape(B, S, KV, hd)
+    v = M.apply_dense(p["wv"], enc_out, dtype).reshape(B, S, KV, hd)
+    return KVCache(k, v)
+
+
+def init_cache(cfg, B: int, S: int, dtype, quantized: bool = False) -> KVCache:
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    shape = (B, S, KV, hd)
+    if quantized:
+        return KVCache(jnp.zeros(shape, jnp.int8),
+                       jnp.zeros(shape, jnp.int8),
+                       jnp.ones((B, S, KV, 1), jnp.bfloat16),
+                       jnp.ones((B, S, KV, 1), jnp.bfloat16))
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))

@@ -1,0 +1,87 @@
+"""Encoder-decoder model (whisper): bidirectional encoder + causal decoder
+with per-layer cross-attention.  The conv/mel frontend is a STUB — the
+encoder consumes precomputed frame embeddings (B, F, d_model) supplied by
+``input_specs()`` per the assignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import modules as M
+from repro.models import transformer as T
+
+
+def encoder_cfg(cfg):
+    return dataclasses.replace(
+        cfg, num_layers=cfg.num_encoder_layers, encoder_decoder=False,
+        moe=None, pos_emb="sinusoidal", name=cfg.name + "-enc")
+
+
+def init_encdec(key, cfg):
+    k_enc, k_dec = jax.random.split(key)
+    ecfg = encoder_cfg(cfg)
+    groups = T.plan_groups(ecfg)
+    ks = jax.random.split(k_enc, len(groups) + 1)
+    enc = {
+        "groups": [T.init_group(ks[i], ecfg, g) for i, g in enumerate(groups)],
+        "final_norm": M.norm_init(cfg.norm, cfg.d_model),
+    }
+    p = T.init_lm(k_dec, cfg)
+    p["encoder"] = enc
+    return p
+
+
+def encode(params, cfg, rt, frames, dtype):
+    """frames: (B, F, d_model) stub embeddings -> encoder states."""
+    ecfg = encoder_cfg(cfg)
+    groups = T.plan_groups(ecfg)
+    x = frames.astype(dtype)
+    x = x + M.sinusoidal_pos(x.shape[1], cfg.d_model).astype(dtype)
+    B, F = x.shape[:2]
+    positions = jnp.arange(F)[None, :]
+    states = T._zero_states(ecfg, groups, B, dtype)
+    x, _, _ = T._run_groups(params["encoder"]["groups"], groups, ecfg, rt, x,
+                            positions=positions, states=states, dtype=dtype,
+                            enc_kv="encoder")
+    return M.apply_norm(params["encoder"]["final_norm"], x, cfg.norm,
+                        cfg.norm_eps)
+
+
+def train_logits(params, cfg, rt, batch):
+    """batch: frontend (B,F,d) frames + tokens (B,T) decoder input."""
+    dtype = jnp.dtype(cfg.dtype)
+    enc_out = encode(params, cfg, rt, batch["frontend"], dtype)
+    groups = T.plan_groups(cfg)
+    x = T.embed_inputs(params, cfg,
+                       {k: v for k, v in batch.items() if k != "frontend"},
+                       dtype)
+    B, Tq = x.shape[:2]
+    positions = jnp.arange(Tq)[None, :]
+    states = T._zero_states(cfg, groups, B, dtype)
+    x, _, aux = T._run_groups(params["groups"], groups, cfg, rt, x,
+                              positions=positions, states=states,
+                              dtype=dtype, enc_kv=enc_out)
+    return T.readout(params, cfg, x, dtype), aux
+
+
+def prefill(params, cfg, rt, batch):
+    dtype = jnp.dtype(cfg.dtype)
+    enc_out = encode(params, cfg, rt, batch["frontend"], dtype)
+    groups = T.plan_groups(cfg)
+    x = T.embed_inputs(params, cfg,
+                       {k: v for k, v in batch.items() if k != "frontend"},
+                       dtype)
+    B, Tq = x.shape[:2]
+    positions = jnp.arange(Tq)[None, :]
+    states = T._zero_states(cfg, groups, B, dtype)
+    x, caches, _ = T._run_groups(params["groups"], groups, cfg, rt, x,
+                                 positions=positions, states=states,
+                                 dtype=dtype, return_cache=True,
+                                 enc_kv=enc_out)
+    return T.readout(params, cfg, x, dtype), caches
+
+
+decode_step = T.decode_step    # decoder decode; cross-KV rides in the cache

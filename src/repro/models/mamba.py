@@ -1,0 +1,105 @@
+"""Mamba-1 selective-SSM block (Jamba's mixer).
+
+Reference path evaluates the selective scan with ``lax.scan`` over time
+(exact; oracle for a chunked kernel).  Decode carries an O(1) state:
+conv tap history (B, d_inner, d_conv-1) + SSM state (B, d_inner, d_state) —
+which is why the hybrid Jamba runs the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import partitioning as PT
+from repro.models import modules as M
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array    # (B, d_inner, d_conv-1)
+    ssm: jax.Array     # (B, d_inner, d_state) fp32
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    return s, di, dt_rank
+
+
+def mamba_init(key, cfg):
+    s, di, dt_rank = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, s.d_state + 1, dtype=jnp.float32), (di, 1))
+    return {
+        "in_proj": M.dense_init(ks[0], d, 2 * di, ("embed", "inner")),
+        "conv_w": M.Param(0.1 * jax.random.normal(
+            ks[1], (di, s.d_conv), jnp.float32), ("inner", None)),
+        "conv_b": M.Param(jnp.zeros((di,), jnp.float32), ("inner",)),
+        "x_proj": M.dense_init(ks[2], di, dt_rank + 2 * s.d_state,
+                               ("inner", None)),
+        "dt_proj": M.dense_init(ks[3], dt_rank, di, (None, "inner"),
+                                bias=True),
+        "A_log": M.Param(jnp.log(A), ("inner", None)),
+        "D": M.Param(jnp.ones((di,), jnp.float32), ("inner",)),
+        "out_proj": M.dense_init(ks[4], di, d, ("inner", "embed")),
+    }
+
+
+def _ssm_scan(u, dt, B_in, C, A, D, state0):
+    """u,dt: (B,T,di); B_in,C: (B,T,ds); A: (di,ds); state (B,di,ds)."""
+    u, dt, B_in, C = (a.astype(jnp.float32) for a in (u, dt, B_in, C))
+    dA = jnp.exp(dt[..., None] * A[None, None])               # (B,T,di,ds)
+    dBu = dt[..., None] * B_in[:, :, None, :] * u[..., None]
+
+    def step(h, x):
+        dA_t, dBu_t, C_t = x
+        h = dA_t * h + dBu_t
+        y = jnp.einsum("bds,bs->bd", h, C_t)
+        return h, y
+
+    xs = (jnp.moveaxis(dA, 1, 0), jnp.moveaxis(dBu, 1, 0),
+          jnp.moveaxis(C, 1, 0))
+    h, ys = jax.lax.scan(step, state0.astype(jnp.float32), xs)
+    y = jnp.moveaxis(ys, 0, 1) + u * D[None, None]
+    return y, h
+
+
+def _causal_conv(x, w, b, history):
+    """Depthwise causal conv. x: (B,T,di), w: (di,K), history: (B,di,K-1)."""
+    B, T, di = x.shape
+    K = w.shape[1]
+    xt = jnp.concatenate([jnp.moveaxis(history, 2, 1), x], axis=1)  # (B,T+K-1,di)
+    y = sum(xt[:, j:j + T, :] * w[None, None, :, j] for j in range(K))
+    new_hist = jnp.moveaxis(xt[:, T:, :], 1, 2) if K > 1 else history
+    return y + b[None, None], new_hist
+
+
+def apply_mamba(p, cfg, x, state: MambaState, dtype):
+    s, di, dt_rank = _dims(cfg)
+    B, T, d = x.shape
+    xz = M.apply_dense(p["in_proj"], x, dtype)
+    xs_, z = jnp.split(xz, 2, axis=-1)
+    xs_ = PT.constrain(xs_, ("batch", None, "inner"))
+    z = PT.constrain(z, ("batch", None, "inner"))
+    xs_, conv_hist = _causal_conv(xs_.astype(jnp.float32), p["conv_w"],
+                                  p["conv_b"], state.conv)
+    xs_ = jax.nn.silu(xs_)
+    proj = xs_.astype(dtype) @ p["x_proj"]["w"].astype(dtype)
+    dt, B_in, C = jnp.split(proj, [dt_rank, dt_rank + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) @ p["dt_proj"]["w"]
+                         + p["dt_proj"]["b"])
+    A = -jnp.exp(p["A_log"])
+    y, h = _ssm_scan(xs_, dt, B_in, C, A, p["D"], state.ssm)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = M.apply_dense(p["out_proj"], y.astype(dtype), dtype)
+    new_hist = conv_hist[:, :, -(s.d_conv - 1):] if s.d_conv > 1 else state.conv
+    return out, MambaState(new_hist.astype(state.conv.dtype), h)
+
+
+def init_mamba_state(cfg, B: int, dtype) -> MambaState:
+    s, di, _ = _dims(cfg)
+    return MambaState(jnp.zeros((B, di, s.d_conv - 1), jnp.float32),
+                      jnp.zeros((B, di, s.d_state), jnp.float32))

@@ -1,0 +1,190 @@
+"""Parameter system + basic layers (pure functional JAX).
+
+Every parameter is created inside a ``Param`` box that carries its *logical
+sharding axes* (t5x-style).  ``unbox``/``axes_of`` split a boxed tree into the
+raw array tree used by apply functions and the logical-axes tree used by the
+launcher to derive ``NamedSharding``s.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name as _checkpoint_name
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# Param boxing
+# --------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Param:
+    value: Any                       # jnp array (or ShapeDtypeStruct)
+    axes: Tuple[Optional[str], ...]  # logical axis name per dim (None = replicated)
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def unbox(tree):
+    return jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+
+
+def axes_of(tree):
+    return jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+
+
+def box_like(values, boxed):
+    """Re-attach axes from ``boxed`` onto a raw value tree."""
+    return jax.tree.map(lambda v, p: Param(v, p.axes), values, boxed,
+                        is_leaf=lambda x: not isinstance(x, (dict, list, tuple)))
+
+
+# --------------------------------------------------------------------------
+# Initializers
+# --------------------------------------------------------------------------
+def _normal(key, shape, dtype, scale):
+    return (scale * jax.random.truncated_normal(
+        key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+def dense_init(key, in_dim: int, out_dim: int, axes, *, bias: bool = False,
+               dtype=jnp.float32, scale: Optional[float] = None):
+    """W: (in_dim, out_dim) with fan-in scaling."""
+    scale = (1.0 / np.sqrt(in_dim)) if scale is None else scale
+    p = {"w": Param(_normal(key, (in_dim, out_dim), dtype, scale), axes)}
+    if bias:
+        p["b"] = Param(jnp.zeros((out_dim,), dtype), (axes[1],))
+    return p
+
+
+def apply_dense(p, x, dtype=None):
+    w = p["w"]
+    if dtype is not None:
+        w = w.astype(dtype)
+        x = x.astype(dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": Param(_normal(key, (vocab, d), dtype, 1.0),
+                           ("vocab", "embed"))}
+
+
+def apply_embed(p, ids, dtype):
+    return jnp.take(p["table"].astype(dtype), ids, axis=0)
+
+
+def apply_unembed(p, x, dtype):
+    """Tied read-out: x @ table.T"""
+    return x.astype(dtype) @ p["table"].astype(dtype).T
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+def norm_init(kind: str, d: int, axes=("embed",)):
+    p = {"scale": Param(jnp.ones((d,), jnp.float32), axes)}
+    if kind == "layernorm":
+        p["bias"] = Param(jnp.zeros((d,), jnp.float32), axes)
+    return p
+
+
+def apply_norm(p, x, kind: str, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    else:
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        x = x - mu
+        x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    x = x * p["scale"]
+    if "bias" in p:
+        x = x + p["bias"]
+    return x.astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Activations
+# --------------------------------------------------------------------------
+def activation(name: str):
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "silu":
+        return jax.nn.silu
+    if name == "relu_sq":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise KeyError(name)
+
+
+# --------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# --------------------------------------------------------------------------
+def mlp_init(key, d: int, d_ff: int, act: str, *, ff_axis: str = "ffn",
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {}
+    if act == "swiglu":
+        p["wi_gate"] = dense_init(ks[0], d, d_ff, ("embed", ff_axis), dtype=dtype)
+        p["wi_up"] = dense_init(ks[1], d, d_ff, ("embed", ff_axis), dtype=dtype)
+    else:
+        p["wi_up"] = dense_init(ks[1], d, d_ff, ("embed", ff_axis), dtype=dtype)
+    p["wo"] = dense_init(ks[2], d_ff, d, (ff_axis, "embed"), dtype=dtype)
+    return p
+
+
+def apply_mlp(p, x, act: str, dtype):
+    from repro.core.partitioning import constrain
+    ffn_axes = ("batch",) + (None,) * (x.ndim - 2) + ("ffn",)
+    if "wi_gate" in p:
+        h = jax.nn.silu(apply_dense(p["wi_gate"], x, dtype)) * \
+            apply_dense(p["wi_up"], x, dtype)
+    else:
+        h = activation(act)(apply_dense(p["wi_up"], x, dtype))
+    h = constrain(h, ffn_axes)
+    out = apply_dense(p["wo"], h, dtype)
+    # §Perf B3/B4: pin the TP reduction in bf16 + name it for the remat
+    # policy (see attention.py)
+    out = constrain(out, ("batch",) + (None,) * (x.ndim - 1))
+    return _checkpoint_name(out, "tp_out")
+
+
+# --------------------------------------------------------------------------
+# Rotary embeddings
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., T, H, hd); positions: broadcastable to (..., T)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., T, hd/2)
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(T: int, d: int, offset=0):
+    pos = jnp.arange(T, dtype=jnp.float32) + offset
+    inv = 1.0 / (10_000.0 ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = pos[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

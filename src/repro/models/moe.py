@@ -1,0 +1,177 @@
+"""Mixture-of-Experts with group-local capacity dispatch (gather-based).
+
+Dispatch uses integer gathers/scatters (bytes, not FLOPs) instead of the
+GShard one-hot einsum, so the compiled HLO FLOPs reflect *active* expert
+compute — which is what the roofline analysis must see.  Tokens are routed
+within ``num_groups`` routing groups; aligning groups with the ``data`` mesh
+axis keeps all routing index math shard-local, and only the expert einsum
+(experts sharded over ``model``) generates collectives.
+
+Overflowing tokens beyond ``capacity_factor`` contribute zero (standard
+capacity-based MoE semantics); the aux load-balancing loss discourages this.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import partitioning as PT
+from repro.models import modules as M
+
+
+def moe_init(key, cfg):
+    mo, d = cfg.moe, cfg.d_model
+    ks = jax.random.split(key, 6)
+    mult_gate = cfg.act == "swiglu"
+    p = {
+        "router": M.dense_init(ks[0], d, mo.num_experts, ("embed", None)),
+        "wi_up": _experts_init(ks[1], mo.num_experts, d, mo.d_ff,
+                               ("expert", "embed", "expert_ff")),
+        "wo": _experts_init(ks[3], mo.num_experts, mo.d_ff, d,
+                            ("expert", "expert_ff", "embed")),
+    }
+    if mult_gate:
+        p["wi_gate"] = _experts_init(ks[2], mo.num_experts, d, mo.d_ff,
+                                     ("expert", "embed", "expert_ff"))
+    if mo.shared_d_ff:
+        p["shared"] = M.mlp_init(ks[4], d, mo.shared_d_ff, cfg.act)
+        if mo.shared_expert_gate:
+            p["shared_gate"] = M.dense_init(ks[5], d, 1, ("embed", None))
+    return p
+
+
+def _experts_init(key, e, din, dout, axes):
+    scale = 1.0 / jnp.sqrt(din).astype(jnp.float32)
+    w = scale * jax.random.truncated_normal(
+        key, -2.0, 2.0, (e, din, dout), jnp.float32)
+    return {"w": M.Param(w, axes)}
+
+
+def _batch_specs(G):
+    """shard_map specs for group-local index ops (G sharded over batch)."""
+    from jax.sharding import PartitionSpec as P
+    b_ax = PT.resolve("batch")
+    if b_ax is None or G % max(PT.mesh_size(b_ax), 1) or \
+            PT.mesh_size(b_ax) <= 1:
+        b_ax = None
+    return b_ax
+
+
+def _local_gather(xf, idx):
+    """(G,n,d),(G,S) -> (G,S,d), shard-local over the batch axes (C6)."""
+    def local(x, i):
+        return jnp.take_along_axis(x, i[..., None], axis=1)
+    if not PT.active():
+        return local(xf, idx)
+    b_ax = _batch_specs(xf.shape[0])
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    return shard_map(local, mesh=PT._CTX.mesh,
+                     in_specs=(P(b_ax, None, None), P(b_ax, None)),
+                     out_specs=P(b_ax, None, None),
+                     check_rep=False)(xf, idx)
+
+
+def _local_combine(yw, idx, n):
+    """Scatter-add (G,S,d) slot rows back to (G,n,d), shard-local (C6)."""
+    def local(y, i):
+        G_l = y.shape[0]
+        return jnp.zeros((G_l, n, y.shape[-1]), y.dtype).at[
+            jnp.arange(G_l)[:, None], i].add(y)
+    if not PT.active():
+        return local(yw, idx)
+    b_ax = _batch_specs(yw.shape[0])
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    return shard_map(local, mesh=PT._CTX.mesh,
+                     in_specs=(P(b_ax, None, None), P(b_ax, None)),
+                     out_specs=P(b_ax, None, None),
+                     check_rep=False)(yw, idx)
+
+
+def _route_group(xg, logits, mo, capacity):
+    """Single routing group. xg: (n, d) logits: (n, E) -> dispatch plan."""
+    n, E = logits.shape
+    k = mo.num_experts_per_tok
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                     # (n, k)
+    if mo.norm_topk_prob:
+        top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    top_p = top_p * mo.routed_scaling_factor
+
+    flat_e = top_e.reshape(-1)                                 # (n*k,)
+    flat_p = top_p.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(n), k)
+    # position of each (token, slot) within its expert
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)        # (n*k, E)
+    pos = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1    # (n*k,)
+    keep = pos < capacity
+    # token id occupying (expert, slot); 'drop' mode discards overflow
+    dispatch = jnp.zeros((E, capacity), jnp.int32).at[
+        flat_e, jnp.where(keep, pos, capacity)].set(flat_t, mode="drop")
+    valid = jnp.zeros((E, capacity), jnp.float32).at[
+        flat_e, jnp.where(keep, pos, capacity)].set(1.0, mode="drop")
+    gates = jnp.zeros((E, capacity), jnp.float32).at[
+        flat_e, jnp.where(keep, pos, capacity)].set(flat_p, mode="drop")
+    # aux loss terms (load balancing, Switch-style)
+    me = jnp.mean(probs, axis=0)                               # (E,)
+    ce = jnp.mean(jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce)
+    return dispatch, valid, gates, aux
+
+
+def apply_moe(p, cfg, x, *, dtype, num_groups: int = 1):
+    """x: (B, T, d) -> (B, T, d), aux-loss scalar."""
+    mo = cfg.moe
+    B, T, d = x.shape
+    N = B * T
+    G = num_groups
+    while N % G:
+        G -= 1
+    n = N // G
+    E, k = mo.num_experts, mo.num_experts_per_tok
+    capacity = max(int(n * k / E * mo.capacity_factor + 0.5), k)
+    xf = PT.constrain(x.reshape(G, n, d), ("batch", None, None))
+
+    logits = M.apply_dense(p["router"], xf, dtype)             # (G, n, E)
+    dispatch, valid, gates, aux = jax.vmap(
+        lambda xg, lg: _route_group(xg, lg, mo, capacity))(xf, logits)
+
+    # gather tokens into per-expert buffers: (G, E, C, d).  §Perf C6: the
+    # gather/scatter are group-local by construction (indices never cross a
+    # routing group), but GSPMD cannot prove it and falls back to fp32
+    # full-token all-gathers + all-reduces (~25 GB/chip/layer on
+    # deepseek-v2-lite train_4k — measured).  shard_map pins them local.
+    xe = _local_gather(xf, dispatch.reshape(G, E * capacity))
+    xe = xe.reshape(G, E, capacity, d) * valid[..., None].astype(dtype)
+
+    # expert compute (E sharded over "model" => all-to-all here)
+    xe = PT.constrain(xe, ("batch", "expert", None, None))
+    up = jnp.einsum("gecd,edf->gecf", xe, p["wi_up"]["w"].astype(dtype))
+    if "wi_gate" in p:
+        gate = jnp.einsum("gecd,edf->gecf", xe, p["wi_gate"]["w"].astype(dtype))
+        h = jax.nn.silu(gate) * up
+    else:
+        h = M.activation(cfg.act)(up)
+    h = PT.constrain(h, ("batch", "expert", None, "expert_ff"))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wo"]["w"].astype(dtype))
+    ye = PT.constrain(ye, ("batch", "expert", None, None))
+    ye = ye * gates[..., None].astype(dtype)
+
+    # combine: scatter-add back to token order.  §Perf C4: the scatter's
+    # output sharding must be pinned — unconstrained, GSPMD replicates the
+    # (G,n,d) result and all-reduces ~5 full-token fp32 tensors per MoE
+    # layer (measured on deepseek-v2-lite train_4k; see EXPERIMENTS.md).
+    y = _local_combine(
+        ye.reshape(G, E * capacity, d)
+        * valid.reshape(G, -1, 1).astype(dtype),
+        dispatch.reshape(G, E * capacity), n)
+    y = PT.constrain(y, ("batch", None, None)).reshape(B, T, d)
+
+    if "shared" in p:
+        ys = M.apply_mlp(p["shared"], x, cfg.act, dtype)
+        if "shared_gate" in p:
+            ys = ys * jax.nn.sigmoid(
+                M.apply_dense(p["shared_gate"], x, dtype))
+        y = y + ys
+    return y, jnp.mean(aux) * mo.router_aux_loss_coef

@@ -1,0 +1,83 @@
+"""Unified model API + ``input_specs`` (ShapeDtypeStruct stand-ins).
+
+``build_model(cfg)`` returns a ``Model`` facade with init / train_logits /
+prefill / decode_step / init_caches, dispatching to the decoder-only or
+encoder-decoder assembly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as ED
+from repro.models import transformer as T
+from repro.models.transformer import RuntimeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: Any
+    rt: RuntimeConfig
+
+    def init(self, key):
+        if self.cfg.encoder_decoder:
+            return ED.init_encdec(key, self.cfg)
+        return T.init_lm(key, self.cfg)
+
+    def train_logits(self, params, batch):
+        fn = ED.train_logits if self.cfg.encoder_decoder else T.train_logits
+        return fn(params, self.cfg, self.rt, batch)
+
+    def prefill(self, params, batch):
+        fn = ED.prefill if self.cfg.encoder_decoder else T.prefill
+        return fn(params, self.cfg, self.rt, batch)
+
+    def decode_step(self, params, batch, caches):
+        return T.decode_step(params, self.cfg, self.rt, batch, caches)
+
+    def init_caches(self, B, S, dtype=None):
+        dtype = dtype or jnp.dtype(self.cfg.dtype)
+        return T.init_caches(self.cfg, self.rt, B, S, dtype)
+
+
+def build_model(cfg, rt: RuntimeConfig = RuntimeConfig()) -> Model:
+    return Model(cfg, rt)
+
+
+# --------------------------------------------------------------------------
+# input_specs: weak-type-correct ShapeDtypeStruct stand-ins, no allocation
+# --------------------------------------------------------------------------
+def input_specs(cfg, shape, rt: RuntimeConfig = RuntimeConfig()) -> Dict[str, Any]:
+    """Stand-ins for every model input of an (arch x shape) cell.
+
+    train/prefill: token batch (+ stub frontend embeds).
+    decode: single-token batch + position + pre-allocated caches.
+    """
+    sds = jax.ShapeDtypeStruct
+    B, S = shape.global_batch, shape.seq_len
+    f32 = jnp.dtype(cfg.dtype)
+
+    def token_batch(T):
+        batch = {"tokens": sds((B, T), jnp.int32)}
+        if cfg.frontend == "vision":
+            batch["frontend"] = sds((B, cfg.frontend_tokens, cfg.d_model), f32)
+            batch["tokens"] = sds((B, T - cfg.frontend_tokens), jnp.int32)
+        if cfg.encoder_decoder:
+            batch["frontend"] = sds((B, cfg.cross_attention_len, cfg.d_model),
+                                    f32)
+        return batch
+
+    if shape.kind == "train":
+        batch = token_batch(S)
+        batch["targets"] = sds(batch["tokens"].shape, jnp.int32)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        return {"batch": token_batch(S)}
+    # decode: one new token against a cache of length S
+    batch = {"tokens": sds((B, 1), jnp.int32), "pos": sds((B,), jnp.int32)}
+    caches = jax.eval_shape(
+        lambda: T.init_caches(cfg, rt, B, S, f32))
+    return {"batch": batch, "caches": caches}

@@ -1,0 +1,152 @@
+"""RWKV-6 "Finch" block: time-mix (WKV6, data-dependent decay) + channel-mix.
+
+The reference WKV6 recurrence is a ``lax.scan`` over time (numerically exact,
+the oracle for the Pallas ``rwkv6`` kernel, which evaluates the same
+recurrence with the state resident in VMEM).
+
+State per layer (decode): token-shift vectors for time/channel mix
+(B, d) each + WKV state (B, H, hd, hd)  — O(1) in sequence length, which is
+why this arch runs the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import partitioning as PT
+from repro.models import modules as M
+
+
+class RWKVState(NamedTuple):
+    shift_tm: jax.Array    # (B, d)   last token seen by time-mix
+    shift_cm: jax.Array    # (B, d)   last token seen by channel-mix
+    wkv: jax.Array         # (B, H, hd, hd) fp32 recurrence state
+
+
+def rwkv_time_mix_init(key, cfg):
+    d, r = cfg.d_model, cfg.rwkv
+    H, hd = cfg.num_heads, r.head_dim
+    ks = jax.random.split(key, 12)
+    z = lambda *s: jnp.zeros(s, jnp.float32)
+    p = {
+        "maa_x": M.Param(z(d), ("embed",)),
+        "maa_wkvrg": M.Param(z(5, d), (None, "embed")),
+        "maa_w1": M.dense_init(ks[0], d, 5 * r.mix_lora, ("embed", None),
+                               scale=0.01),
+        "maa_w2": M.Param(0.01 * jax.random.normal(
+            ks[1], (5, r.mix_lora, d), jnp.float32), (None, None, "embed")),
+        "decay": M.Param(z(H, hd) - 5.0, (None, None)),
+        "decay_w1": M.dense_init(ks[2], d, r.decay_lora, ("embed", None),
+                                 scale=0.01),
+        "decay_w2": M.dense_init(ks[3], r.decay_lora, d, (None, "embed"),
+                                 scale=0.01),
+        "bonus_u": M.Param(0.5 * jnp.ones((H, hd), jnp.float32), (None, None)),
+        "wr": M.dense_init(ks[4], d, d, ("embed", "qkv_out")),
+        "wk": M.dense_init(ks[5], d, d, ("embed", "qkv_out")),
+        "wv": M.dense_init(ks[6], d, d, ("embed", "qkv_out")),
+        "wg": M.dense_init(ks[7], d, d, ("embed", "qkv_out")),
+        "wo": M.dense_init(ks[8], d, d, ("qkv_out", "embed")),
+        "ln_x": M.norm_init("layernorm", d, ("embed",)),
+    }
+    return p
+
+
+def rwkv_channel_mix_init(key, cfg):
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    z = lambda *s: jnp.zeros(s, jnp.float32)
+    return {
+        "maa_k": M.Param(z(d), ("embed",)),
+        "maa_r": M.Param(z(d), ("embed",)),
+        "wk": M.dense_init(ks[0], d, ff, ("embed", "ffn")),
+        "wv": M.dense_init(ks[1], ff, d, ("ffn", "embed")),
+        "wr": M.dense_init(ks[2], d, d, ("embed", "qkv_out")),
+    }
+
+
+def wkv6_scan(r, k, v, w, u, state0):
+    """Reference WKV6 recurrence (fp32 scan over time).
+
+    r,k,v,w: (B, T, H, hd); u: (H, hd); state0: (B, H, hd, hd).
+    y_t = r_t @ S_{t-1} + (r_t . (u*k_t)) v_t ;  S_t = diag(w_t) S_{t-1} + k_t (x) v_t
+    """
+    r, k, v, w = (a.astype(jnp.float32) for a in (r, k, v, w))
+
+    def step(S, rkvw):
+        rt, kt, vt, wt = rkvw                                 # (B,H,hd)
+        y = jnp.einsum("bhi,bhij->bhj", rt, S)
+        y = y + jnp.sum(rt * u[None] * kt, -1, keepdims=True) * vt
+        S = wt[..., None] * S + kt[..., None] * vt[..., None, :]
+        return S, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), state                      # (B,T,H,hd)
+
+
+def _token_shift(x, prev):
+    """[prev, x_0, ..., x_{T-2}] along time."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def apply_time_mix(p, cfg, x, state: RWKVState, dtype):
+    B, T, d = x.shape
+    r_cfg = cfg.rwkv
+    H, hd = cfg.num_heads, r_cfg.head_dim
+    xf = x.astype(jnp.float32)
+    sx = _token_shift(xf, state.shift_tm.astype(jnp.float32)) - xf
+
+    xxx = xf + sx * p["maa_x"]
+    lora = jnp.tanh(xxx @ p["maa_w1"]["w"]).reshape(B, T, 5, r_cfg.mix_lora)
+    mix = jnp.einsum("btfm,fmd->fbtd", lora, p["maa_w2"])     # (5,B,T,d)
+    xw, xk, xv, xr, xg = (
+        xf + sx * (p["maa_wkvrg"][i] + mix[i]) for i in range(5))
+
+    # §Perf D1 (refuted, kept for the record): replicating the WKV head dim
+    # removes GSPMD's uneven-padding permutes but the full-tensor gathers
+    # cost MORE (t_coll 13.6 -> 16.1 s measured); uneven 40/16 head
+    # sharding is the better trade on this mesh.
+    hax = ("batch", None, "heads", None)
+    r = PT.constrain(M.apply_dense(p["wr"], xr.astype(dtype), dtype)
+                     .reshape(B, T, H, hd), hax, allow_uneven=True)
+    k = PT.constrain(M.apply_dense(p["wk"], xk.astype(dtype), dtype)
+                     .reshape(B, T, H, hd), hax, allow_uneven=True)
+    v = PT.constrain(M.apply_dense(p["wv"], xv.astype(dtype), dtype)
+                     .reshape(B, T, H, hd), hax, allow_uneven=True)
+    g = jax.nn.silu(M.apply_dense(p["wg"], xg.astype(dtype), dtype))
+
+    dec = p["decay"][None, None] + (
+        jnp.tanh(xw @ p["decay_w1"]["w"]) @ p["decay_w2"]["w"]
+    ).reshape(B, T, H, hd)
+    w = jnp.exp(-jnp.exp(dec.astype(jnp.float32)))            # (0,1) decay
+    w = PT.constrain(w, hax, allow_uneven=True)
+
+    y, wkv = wkv6_scan(r, k, v, w, p["bonus_u"].astype(jnp.float32),
+                       state.wkv)
+    # GroupNorm(H groups) over the head dim, as in RWKV-6.
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    y = ((y - mu) * jax.lax.rsqrt(var + 64e-5)).reshape(B, T, d)
+    y = (y * p["ln_x"]["scale"] + p["ln_x"]["bias"]).astype(dtype)
+    out = M.apply_dense(p["wo"], (y * g).astype(dtype), dtype)
+    new_state = RWKVState(x[:, -1, :], state.shift_cm, wkv)
+    return out, new_state
+
+
+def apply_channel_mix(p, cfg, x, state: RWKVState, dtype):
+    xf = x.astype(jnp.float32)
+    sx = _token_shift(xf, state.shift_cm.astype(jnp.float32)) - xf
+    xk = (xf + sx * p["maa_k"]).astype(dtype)
+    xr = (xf + sx * p["maa_r"]).astype(dtype)
+    k = jnp.square(jax.nn.relu(M.apply_dense(p["wk"], xk, dtype)))
+    kv = M.apply_dense(p["wv"], k, dtype)
+    out = jax.nn.sigmoid(M.apply_dense(p["wr"], xr, dtype)) * kv
+    return out, state._replace(shift_cm=x[:, -1, :])
+
+
+def init_rwkv_state(cfg, B: int, dtype) -> RWKVState:
+    d, H, hd = cfg.d_model, cfg.num_heads, cfg.rwkv.head_dim
+    return RWKVState(jnp.zeros((B, d), dtype), jnp.zeros((B, d), dtype),
+                     jnp.zeros((B, H, hd, hd), jnp.float32))

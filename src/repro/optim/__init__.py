@@ -1,0 +1,3 @@
+from repro.optim.adamw import OptConfig, make_optimizer
+
+__all__ = ["OptConfig", "make_optimizer"]

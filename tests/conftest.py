@@ -1,0 +1,14 @@
+import os
+
+# Tests see the host's single device; ONLY dryrun forces 512 (see launch/dryrun).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

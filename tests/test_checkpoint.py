@@ -1,0 +1,56 @@
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def tree(key, scale=1.0):
+    ks = jax.random.split(key, 3)
+    return {"a": scale * jax.random.normal(ks[0], (16, 8)),
+            "b": {"w": scale * jax.random.normal(ks[1], (32,)),
+                  "s": jnp.zeros((), jnp.int32)}}
+
+
+def test_roundtrip_identity(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    t = tree(jax.random.PRNGKey(0))
+    mgr.save(7, t, extra={"data_step": 7})
+    got, extra = mgr.restore(t)
+    assert extra["data_step"] == 7
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b), t, got)
+
+
+def test_keep_k_gc_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    t = tree(jax.random.PRNGKey(0))
+    for s in (1, 2, 3, 4):
+        mgr.save(s, t)
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_async_save_then_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    t = tree(jax.random.PRNGKey(1), scale=2.0)
+    mgr.save(10, t)
+    mgr.wait()
+    got, _ = mgr.restore(t)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b), t, got)
+
+
+def test_restore_rejects_mismatched_tree(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, tree(jax.random.PRNGKey(0)))
+    bad = {"a": jnp.zeros((16, 8)), "c": jnp.zeros((4,))}
+    with pytest.raises(AssertionError):
+        mgr.restore(bad)
+
+
+def test_atomicity_no_tmp_left(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(5, tree(jax.random.PRNGKey(0)))
+    assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]

@@ -1,0 +1,58 @@
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, cells, get_config, reduced
+
+
+def test_all_archs_load():
+    assert len(ARCH_IDS) == 10
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        assert cfg.name == a
+        assert cfg.num_layers >= 1 and cfg.d_model >= 128
+
+
+@pytest.mark.parametrize("arch,lo,hi", [
+    ("qwen1.5-0.5b", 0.4e9, 0.8e9),
+    ("qwen1.5-32b", 28e9, 36e9),
+    ("glm4-9b", 8e9, 11e9),
+    ("qwen3-14b", 12e9, 16e9),
+    ("internvl2-76b", 65e9, 80e9),
+    ("deepseek-v2-lite-16b", 13e9, 18e9),
+    ("qwen2-moe-a2.7b", 12e9, 16e9),
+    ("jamba-v0.1-52b", 45e9, 58e9),
+    ("rwkv6-3b", 2.5e9, 3.6e9),
+    ("whisper-base", 0.05e9, 0.11e9),
+])
+def test_param_counts_match_published(arch, lo, hi):
+    n = get_config(arch).param_count()
+    assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]"
+
+
+def test_active_params_less_than_total_for_moe():
+    for a in ("deepseek-v2-lite-16b", "qwen2-moe-a2.7b", "jamba-v0.1-52b"):
+        cfg = get_config(a)
+        assert cfg.param_count(active_only=True) < 0.45 * cfg.param_count()
+
+
+def test_cells_and_skips():
+    live = cells()
+    allc = cells(include_skipped=True)
+    assert len(allc) == 40
+    assert len(live) == 32           # long_500k only for rwkv6 + jamba
+    skipped = [c for c in allc if c[2]]
+    assert {a for a, s, _ in skipped} == set(ARCH_IDS) - {"rwkv6-3b",
+                                                          "jamba-v0.1-52b"}
+    assert all(s == "long_500k" for _, s, _ in skipped)
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["decode_32k"].kind == "decode"
+
+
+def test_reduced_configs_are_small():
+    for a in ARCH_IDS:
+        r = reduced(get_config(a))
+        assert r.param_count() < 30e6
+        assert r.layer_kinds()  # pattern still valid

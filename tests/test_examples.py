@@ -1,0 +1,32 @@
+"""The examples must stay runnable (subprocess smoke)."""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_example(args, timeout=420):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable] + args, capture_output=True,
+                         text=True, env=env, timeout=timeout, cwd=REPO)
+    assert out.returncode == 0, out.stderr[-2000:]
+    return out.stdout
+
+
+def test_quickstart():
+    out = run_example(["examples/quickstart.py", "--steps", "6"])
+    assert "served 3 requests" in out
+
+
+def test_paper_figures():
+    out = run_example(["examples/paper_figures.py"])
+    assert "Fig. 5" in out and "TROOP" in out
+
+
+def test_train_lm_short(tmp_path):
+    out = run_example(["examples/train_lm.py", "--steps", "8", "--dim", "64",
+                       "--layers", "2", "--seq", "32", "--batch", "2",
+                       "--ckpt-dir", str(tmp_path)])
+    assert "final loss" in out

@@ -1,0 +1,61 @@
+"""core.layout + optimizer equivalence tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import layout as L
+from repro.core.troop import BASELINE, TROOP
+from repro.optim import OptConfig, make_optimizer
+
+
+def test_tile_untile_roundtrip():
+    w = jnp.arange(64 * 32.0).reshape(64, 32)
+    t = L.tile_weight(w, 16, 8)
+    assert t.shape == (4, 4, 16, 8)
+    np.testing.assert_array_equal(L.untile_weight(t), w)
+
+
+def test_alignment_checks():
+    assert L.verify_alignment((256, 128), jnp.float32)
+    assert not L.verify_alignment((256, 100), jnp.float32)
+    assert L.verify_alignment((16, 128), jnp.bfloat16)
+    assert not L.verify_alignment((8, 128), jnp.bfloat16)  # bf16 sublane 16
+
+
+def test_stream_regions_disjoint_contiguous():
+    regs = L.stream_regions(1024, 2)
+    assert regs == [(0, 512), (512, 1024)]
+
+
+def _params():
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    return {"w": jax.random.normal(ks[0], (64, 32)),
+            "b": jax.random.normal(ks[1], (32,))}
+
+
+def test_fused_optimizer_equals_reference_over_steps():
+    cfg_ref = OptConfig(lr=1e-2, warmup_steps=1, fused=False)
+    cfg_fused = OptConfig(lr=1e-2, warmup_steps=1, fused=True)
+    p1, p2 = _params(), _params()
+    o1, o2 = make_optimizer(cfg_ref), make_optimizer(cfg_fused)
+    s1, s2 = o1.init(p1), o2.init(p2)
+    for i in range(4):
+        g = jax.tree.map(
+            lambda p: 0.1 * jax.random.normal(jax.random.PRNGKey(i), p.shape),
+            p1)
+        p1, s1, _ = o1.update(g, s1, p1)
+        p2, s2, _ = o2.update(g, s2, p2)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        a, b, rtol=1e-5, atol=1e-6), p1, p2)
+
+
+def test_lion_and_sgdm_run():
+    for name in ("lion", "sgdm"):
+        opt = make_optimizer(OptConfig(name=name, lr=1e-2))
+        p = _params()
+        s = opt.init(p)
+        g = jax.tree.map(jnp.ones_like, p)
+        p2, s, lr = opt.update(g, s, p)
+        assert jnp.isfinite(lr)
+        assert not jax.tree.all(jax.tree.map(
+            lambda a, b: jnp.array_equal(a, b), p, p2))

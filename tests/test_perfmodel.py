@@ -1,0 +1,81 @@
+"""Validate the cycle model against the paper's published claims."""
+import dataclasses
+
+import pytest
+
+from repro.core import perfmodel as PM
+
+
+@pytest.fixture(scope="module")
+def fig5():
+    return PM.figure5(4096)
+
+
+def test_dotp_utilizations_match_paper(fig5):
+    assert abs(fig5["dotp"]["Spatz_BASELINE"] - 0.33) < 0.06
+    assert abs(fig5["dotp"]["Spatz_2xBW"] - 0.59) < 0.08
+    assert abs(fig5["dotp"]["Spatz_2xBW_TROOP"] - 0.76) < 0.08
+
+
+def test_axpy_utilizations_match_paper(fig5):
+    assert abs(fig5["axpy"]["Spatz_BASELINE"] - 0.21) < 0.06
+    assert abs(fig5["axpy"]["Spatz_2xBW"] - 0.44) < 0.06
+    # TROOP AXPY: paper 55%, theoretical bound at 2:1 is 66% — our model
+    # reaches the bound (documented optimistic residual)
+    assert 0.50 <= fig5["axpy"]["Spatz_2xBW_TROOP"] <= 0.67
+
+
+def test_gemv_reaches_roofline(fig5):
+    assert fig5["gemv"]["Spatz_2xBW_TROOP"] >= 0.96     # paper: 98%
+    assert fig5["gemv"]["Spatz_2xBW"] >= 0.85           # paper: 92%
+
+
+def test_gemm_unharmed(fig5):
+    """Paper Table II: compute-bound kernels must not regress under TROOP."""
+    for cfg in PM.CONFIGS:
+        assert fig5["gemm"][cfg] >= 0.97
+
+
+def test_dotp_long_vector_at_roofline():
+    u = PM.utilization("dotp", PM.BW2X_TROOP, 65536).fpu_util
+    assert u >= 0.94            # paper: 96%
+
+
+def test_headline_speedups(fig5):
+    """Paper: GEMV 1.5x, DOTP 2.2x, AXPY 2.6x (TROOP vs baseline)."""
+    sp = {k: fig5[k]["Spatz_2xBW_TROOP"] / fig5[k]["Spatz_BASELINE"]
+          for k in ("dotp", "axpy", "gemv")}
+    assert 1.9 <= sp["dotp"] <= 2.7
+    assert 2.2 <= sp["axpy"] <= 3.0
+    assert 1.2 <= sp["gemv"] <= 1.7
+
+
+def test_troop_strictly_improves_memory_bound(fig5):
+    for k in ("dotp", "axpy", "gemv", "fft"):
+        assert fig5[k]["Spatz_2xBW_TROOP"] >= fig5[k]["Spatz_2xBW"] - 1e-9
+        assert fig5[k]["Spatz_2xBW"] > fig5[k]["Spatz_BASELINE"]
+
+
+def test_mechanism_ablations():
+    """Each TROOP mechanism contributes (paper §IV): removing it hurts."""
+    full = PM.utilization("dotp", PM.BW2X_TROOP, 8192).fpu_util
+    no_scramble = dataclasses.replace(PM.BW2X_TROOP, scrambling=False,
+                                      name="x")
+    assert PM.utilization("dotp", no_scramble, 8192).fpu_util < full - 0.05
+    no_dyn = dataclasses.replace(PM.BW2X_TROOP, dynamic_priority=False,
+                                 name="y")
+    assert PM.utilization("dotp", no_dyn, 8192).fpu_util <= full + 1e-9
+    no_red = dataclasses.replace(PM.BW2X_TROOP, log2_reduction=False,
+                                 name="z")
+    assert PM.utilization("dotp", no_red, 4096).fpu_util < full
+
+
+def test_static_priority_fpu_bubble():
+    """Fig. 4a: static priority + FPU latency 3 caps chained GEMV below
+    peak; dynamic priority + shadow buffers recover it (Fig. 4b)."""
+    static = dataclasses.replace(PM.BW2X_TROOP, dynamic_priority=False,
+                                 name="s")
+    u_static = PM.utilization("gemv", static, 4096).fpu_util
+    u_dynamic = PM.utilization("gemv", PM.BW2X_TROOP, 4096).fpu_util
+    assert u_dynamic > u_static
+    assert u_dynamic >= 0.96

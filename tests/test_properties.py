@@ -1,0 +1,141 @@
+"""Hypothesis property tests on kernel + system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.troop import TROOP, TroopConfig
+from repro.kernels import ops as K
+from repro.kernels import ref as R
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def arr(key, n, lo=-2.0, hi=2.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), (n,), jnp.float32,
+                              lo, hi)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**16), st.integers(0, 2**16),
+       st.floats(-3, 3, allow_nan=False))
+def test_axpy_linearity(k1, k2, a):
+    """axpy(a,x,y) == a*x + y and is linear in x."""
+    x, y = arr(k1, 1024), arr(k2, 1024)
+    got = K.axpy(a, x, y, TROOP)
+    np.testing.assert_allclose(got, a * x + y, rtol=1e-5, atol=1e-5)
+    # linearity: axpy(a, 2x, y) - axpy(a, x, y) == a*x
+    d = K.axpy(a, 2 * x, y, TROOP) - got
+    np.testing.assert_allclose(d, a * x, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**16), st.integers(0, 2**16))
+def test_dotp_symmetry(k1, k2):
+    x, y = arr(k1, 2048), arr(k2, 2048)
+    a = K.dotp(x, y, TROOP)
+    b = K.dotp(y, x, TROOP)
+    np.testing.assert_allclose(a, b, rtol=1e-5)
+    np.testing.assert_allclose(a, R.dotp(x, y), rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**16), st.floats(0.1, 10, allow_nan=False))
+def test_rmsnorm_scale_invariance(k1, c):
+    """rmsnorm(c*x) == rmsnorm(x) for any positive scalar c."""
+    x = arr(k1, 512).reshape(4, 128) + 0.01
+    s = jnp.ones((128,), jnp.float32)
+    a = K.rmsnorm(x, s)
+    b = K.rmsnorm(c * x, s)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**16), st.integers(2, 6))
+def test_lse_combine_associativity(k1, splits):
+    """Split-S decode is invariant to how the cache is partitioned."""
+    B, H, KV, hd, S = 1, 4, 2, 32, 384
+    ks = jax.random.split(jax.random.PRNGKey(k1), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    length = jnp.asarray([S], jnp.int32)
+    want = R.decode_attention(q, k, v, length)
+    # uneven split points
+    cuts = np.linspace(0, S, splits + 1).astype(int)
+    cuts = [c // 64 * 64 for c in cuts]          # block-aligned
+    cuts = sorted(set(cuts) | {0, S})
+    partials = []
+    cfg = TroopConfig(streams=1, block_k=64)
+    for a, b in zip(cuts[:-1], cuts[1:]):
+        if a == b:
+            continue
+        partials.append(K.decode_attention_stats(
+            q, k[:, a:b], v[:, a:b], length, cfg, s_offset=a))
+    got = np.asarray(K.lse_combine(partials)).reshape(B, H, hd)
+    np.testing.assert_allclose(got, np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**16))
+def test_wkv6_chunk_invariance(k1):
+    """Kernel result is independent of the chunk size (re-association)."""
+    B, T, H, hd = 1, 64, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(k1), 4)
+    r, k, v = (jax.random.normal(ks[i], (B, T, H, hd)) for i in range(3))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, T, H, hd))))
+    u = 0.5 * jnp.ones((H, hd))
+    s0 = jnp.zeros((B, H, hd, hd))
+    outs = []
+    for bn in (64, 128, 256):    # block_n//8 -> chunk 8, 16, 32
+        y, s = K.wkv6(r, k, v, w, u, s0, TroopConfig(block_n=bn))
+        outs.append((np.asarray(y), np.asarray(s)))
+    for y2, s2 in outs[1:]:
+        np.testing.assert_allclose(outs[0][0], y2, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(outs[0][1], s2, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**16))
+def test_gemv_matches_flash_decode_degenerate(k1):
+    """decode_attention with uniform probs == mean of V (consistency)."""
+    B, H, KV, hd, S = 1, 2, 2, 32, 128
+    kv = jax.random.split(jax.random.PRNGKey(k1), 2)
+    q = jnp.zeros((B, H, hd))                   # zero q -> uniform attention
+    k = jax.random.normal(kv[0], (B, S, KV, hd))
+    v = jax.random.normal(kv[1], (B, S, KV, hd))
+    length = jnp.asarray([S], jnp.int32)
+    got = K.decode_attention(q, k, v, length, TROOP)
+    want = jnp.mean(v, axis=1).reshape(B, KV, 1, hd)
+    want = jnp.broadcast_to(want, (B, KV, H // KV, hd)).reshape(B, H, hd)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**16), st.integers(1, 8))
+def test_data_pipeline_determinism_and_disjointness(seed, step):
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    cfg = DataConfig(vocab_size=512, seq_len=32, global_batch=8, seed=seed)
+    a = SyntheticLM(cfg, shard=0, num_shards=2)
+    b = SyntheticLM(cfg, shard=0, num_shards=2)
+    c = SyntheticLM(cfg, shard=1, num_shards=2)
+    ba, bb, bc = a.batch_at(step), b.batch_at(step), c.batch_at(step)
+    np.testing.assert_array_equal(ba["tokens"], bb["tokens"])   # determinism
+    assert not np.array_equal(ba["tokens"], bc["tokens"])       # disjoint
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**16))
+def test_int8_compression_error_feedback_converges(seed):
+    """sum of dequantized updates -> sum of true gradients (EF property)."""
+    from repro.dist.compression import dequantize_int8, quantize_int8
+    rng = np.random.default_rng(seed)
+    g = rng.standard_normal(256).astype(np.float32)
+    e = np.zeros_like(g)
+    total_sent = np.zeros_like(g)
+    for _ in range(50):
+        q, s = quantize_int8(jnp.asarray(g + e))
+        deq = np.asarray(dequantize_int8(q, s))
+        e = g + e - deq
+        total_sent += deq
+    np.testing.assert_allclose(total_sent / 50, g, atol=2e-2)

@@ -1,0 +1,70 @@
+"""Roofline analyzer: HLO parsing + terms math on synthetic inputs."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import roofline as RL
+
+
+HLO = """
+  %ag.1 = bf16[8,128] all-gather(%x), replica_groups={}
+  %ar.2 = f32[16,16] all-reduce(%y), to_apply=%add
+  %rs.3 = f32[4,4] reduce-scatter(%z), to_apply=%add
+  %a2a.4 = bf16[2,2] all-to-all(%w)
+  %cp.5 = s32[10] collective-permute(%v)
+  %ags = (bf16[8,128], bf16[64,128]) all-gather-start(%q)
+  %agd = bf16[64,128] all-gather-done(%ags)
+"""
+
+
+def test_parse_collectives_kinds_and_bytes():
+    st = RL.parse_collectives(HLO)
+    assert st.count_by_kind["all-gather"] == 2          # sync + -start
+    assert st.count_by_kind["all-reduce"] == 1
+    assert st.bytes_by_kind["all-reduce"] == 16 * 16 * 4
+    assert st.bytes_by_kind["reduce-scatter"] == 64
+    # -done is not double counted
+    assert st.count_by_kind.get("all-gather", 0) == 2
+    # ring weights: AR counts 2x
+    assert st.link_bytes > st.total_bytes
+
+
+def test_convert_bytes_only_large():
+    txt = """
+      %convert.1 = f32[1024,1024] convert(%a)
+      %convert.2 = f32[8] convert(%b)
+    """
+    b = RL.convert_bytes(txt)
+    assert b == int(1024 * 1024 * 4 * 1.5)
+
+
+def test_roofline_terms_dominance():
+    t = RL.RooflineTerms(flops=197e12, bytes_accessed=819e9 * 2,
+                         collective_link_bytes=50e9 * 0.5, chips=256,
+                         model_flops=197e12 * 256 * 0.5)
+    assert abs(t.t_compute - 1.0) < 1e-9
+    assert abs(t.t_memory - 2.0) < 1e-9
+    assert abs(t.t_collective - 0.5) < 1e-9
+    assert t.dominant() == "memory"
+    assert abs(t.useful_flops_ratio() - 0.5) < 1e-9
+
+
+def test_model_flops_conventions():
+    from repro.configs import SHAPES, get_config
+    cfg = get_config("qwen1.5-0.5b")
+    tr = RL.model_flops_for(cfg, SHAPES["train_4k"])
+    de = RL.model_flops_for(cfg, SHAPES["decode_32k"])
+    n = cfg.param_count(active_only=True)
+    assert tr == 6.0 * n * 256 * 4096
+    assert de == 2.0 * n * 128
+
+
+def test_scan_body_counted_once_methodology():
+    """The §Dry-run methodology premise: cost_analysis counts scan once."""
+    def scanned(x, w):
+        return jax.lax.scan(lambda c, wi: (c @ wi, None), x, w)[0]
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((8, 64, 64), jnp.float32)
+    c = jax.jit(scanned).lower(x, w).compile().cost_analysis()["flops"]
+    unroll = jax.jit(lambda x, w: x @ w[0] @ w[1]).lower(
+        x, w).compile().cost_analysis()["flops"]
+    assert c < 2.5 * unroll / 2     # ~1 body, not 8
