@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.core.roofline import HBM_BW, PEAK_FLOPS
 from repro.core.troop import BASELINE, TROOP
 from repro.kernels import ops as K
+from repro.tune import get_tuned
 
 
 def _time(fn, *args, iters=3):
@@ -38,7 +39,9 @@ def run(csv=print):
     bytes_ = N * Kd * 2 + Kd * 2 + N * 4
     flops = 2 * N * Kd
     bound_us = max(bytes_ / HBM_BW, flops / PEAK_FLOPS) * 1e6
-    for cfg, tag in ((BASELINE, "baseline"), (TROOP, "troop")):
+    # "tuned" rows consume the persistent tune cache (heuristic on a miss)
+    for cfg, tag in ((BASELINE, "baseline"), (TROOP, "troop"),
+                     (get_tuned("gemv", w, x), "tuned")):
         us = _time(lambda: K.gemv(w, x, cfg))
         csv(f"kernel/gemv/{tag},{us:.0f},interp_us OI={flops / bytes_:.2f} "
             f"v5e_bound_us={bound_us:.1f}")
@@ -49,13 +52,15 @@ def run(csv=print):
     b = jax.random.normal(key, (n,), jnp.bfloat16)
     bytes_ = 2 * n * 2
     bound_us = bytes_ / HBM_BW * 1e6
-    for cfg, tag in ((BASELINE, "baseline"), (TROOP, "troop")):
+    for cfg, tag in ((BASELINE, "baseline"), (TROOP, "troop"),
+                     (get_tuned("dotp", a, b), "tuned")):
         us = _time(lambda: K.dotp(a, b, cfg))
         csv(f"kernel/dotp/{tag},{us:.0f},interp_us OI=0.5 "
             f"v5e_bound_us={bound_us:.1f}")
 
     # AXPY
-    for cfg, tag in ((BASELINE, "baseline"), (TROOP, "troop")):
+    for cfg, tag in ((BASELINE, "baseline"), (TROOP, "troop"),
+                     (get_tuned("axpy", 1.5, a, b), "tuned")):
         us = _time(lambda: K.axpy(1.5, a, b, cfg))
         csv(f"kernel/axpy/{tag},{us:.0f},interp_us OI=0.33 "
             f"v5e_bound_us={3 * n * 2 / HBM_BW * 1e6:.1f}")
@@ -69,7 +74,9 @@ def run(csv=print):
     cache_bytes = 2 * B * S * KV * hd * 2
     flops = 4 * B * H * S * hd
     bound_us = cache_bytes / HBM_BW * 1e6
-    for cfg, tag in ((BASELINE, "baseline"), (TROOP, "troop")):
+    for cfg, tag in ((BASELINE, "baseline"), (TROOP, "troop"),
+                     (get_tuned("decode_attention", q, kc, vc, length),
+                      "tuned")):
         us = _time(lambda: K.decode_attention(q, kc, vc, length, cfg))
         csv(f"kernel/decode_attn/{tag},{us:.0f},interp_us "
             f"OI={flops / cache_bytes:.2f} v5e_bound_us={bound_us:.1f}")

@@ -43,6 +43,15 @@ _OP_RE = re.compile(
     r"(-start|-done)?\(")
 
 
+def cost_analysis(compiled) -> dict:
+    """Version-tolerant ``compiled.cost_analysis()``: some jaxlib versions
+    return a one-element list of dicts, newer ones the dict itself."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
 def _shape_bytes(text: str) -> int:
     total = 0
     for dt, dims in _SHAPE_RE.findall(text):

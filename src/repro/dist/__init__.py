@@ -1,0 +1,16 @@
+"""Distributed primitives: collective matmuls, DDP with compressed
+gradients, and GPipe pipelining.
+
+The mesh-level mirror of the kernel layer: the paper's decoupled-stream /
+overlap ideas applied to inter-chip traffic (ROADMAP north-star: serve and
+train at the speed the hardware allows).
+"""
+from repro.dist.collective_matmul import (allgather_matmul,
+                                          reduce_scatter_matmul)
+from repro.dist.compression import dequantize_int8, quantize_int8
+from repro.dist.ddp import make_ddp_train_step
+from repro.dist.pipeline import bubble_fraction, make_pipeline_fn
+
+__all__ = ["allgather_matmul", "reduce_scatter_matmul",
+           "quantize_int8", "dequantize_int8",
+           "make_ddp_train_step", "make_pipeline_fn", "bubble_fraction"]

@@ -1,0 +1,44 @@
+"""Collective matmuls — the paper's decoupled-stream overlap at mesh level.
+
+Inside a ``shard_map``: instead of `all-gather then matmul` (communication
+fully serialized before compute), the all-gather variant walks a ring —
+each step multiplies the operand shard currently held with the matching
+rows of the weight while ``collective-permute`` rotates the shards, so
+per-step compute overlaps per-step communication (the mesh analogue of
+TROOP mechanism (A)/(B)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def allgather_matmul(x_local, w_full, axis_name: str):
+    """x_local (B, K/n) — the K-shard this device holds; w_full (K, N)
+    replicated.  Returns the full (B, N) product on every device."""
+    n = jax.lax.psum(1, axis_name)            # concrete under shard_map
+    idx = jax.lax.axis_index(axis_name)
+    Kl = x_local.shape[-1]
+    perm = [(i, (i - 1) % n) for i in range(n)]
+
+    # statically unrolled ring: ppermute inside a fori_loop deadlocks the
+    # multi-device CPU backend, and unrolling lets XLA overlap each step's
+    # matmul with the next shard's transfer
+    acc = jnp.zeros((x_local.shape[0], w_full.shape[-1]), jnp.float32)
+    xs = x_local
+    for t in range(n):
+        src = (idx + t) % n                   # shard id currently held
+        w_rows = jax.lax.dynamic_slice_in_dim(w_full, src * Kl, Kl, axis=0)
+        acc = acc + xs.astype(jnp.float32) @ w_rows.astype(jnp.float32)
+        if t < n - 1:
+            xs = jax.lax.ppermute(xs, axis_name, perm)
+    return acc.astype(x_local.dtype)
+
+
+def reduce_scatter_matmul(x_local, w_local, axis_name: str):
+    """x_local (B, K/n), w_local (K/n, N): per-device partial product,
+    reduce-scattered over N -> each device returns its (B, N/n) tile."""
+    partial = x_local.astype(jnp.float32) @ w_local.astype(jnp.float32)
+    out = jax.lax.psum_scatter(partial, axis_name, scatter_dimension=1,
+                               tiled=True)
+    return out.astype(x_local.dtype)

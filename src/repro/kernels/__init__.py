@@ -1,3 +1,24 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Public kernel namespace — registry-dispatched entry points.
+
+Importing this package loads every kernel module, which registers each
+kernel into ``repro.tune.registry`` via ``@troop_kernel``.  The names
+exported here are the dispatching wrappers: call one *with* an explicit
+``TroopConfig`` and it behaves like the raw kernel; call it *without* one
+and the best tuned config for (kernel, shapes, dtype, backend) is resolved
+from the persistent tune cache (heuristic default on a miss).
+"""
+from repro.core.troop import BASELINE, TROOP, TroopConfig
+from repro.kernels.ops import (axpy, batched_gemv, decode_attention,
+                               decode_attention_int8, decode_attention_stats,
+                               dotp, flash_attention, fused_adamw, gemv,
+                               lse_combine, mamba_scan, rmsnorm, wkv6,
+                               wkv6_with_state)
+from repro.tune.cache import get_tuned
+from repro.tune.registry import REGISTRY
+
+__all__ = ["gemv", "dotp", "axpy", "rmsnorm", "fused_adamw",
+           "decode_attention", "decode_attention_stats",
+           "decode_attention_int8", "flash_attention",
+           "wkv6", "wkv6_with_state", "mamba_scan", "batched_gemv",
+           "lse_combine", "BASELINE", "TROOP", "TroopConfig",
+           "get_tuned", "REGISTRY"]

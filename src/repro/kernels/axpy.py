@@ -16,6 +16,14 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.core.troop import TroopConfig
+from repro.tune.registry import itemsize, troop_kernel
+
+
+def _example(small: bool = True):
+    n = 4096 if small else 1 << 20
+    x = jax.random.normal(jax.random.PRNGKey(0), (n,), jnp.bfloat16)
+    y = jax.random.normal(jax.random.PRNGKey(1), (n,), jnp.bfloat16)
+    return (1.5, x, y), {}
 
 
 def _kernel_1s(a_ref, x_ref, y_ref, o_ref):
@@ -32,6 +40,13 @@ def _kernel_2s(a_ref, x0, x1, y0, y1, o0, o1):
                + y1[...].astype(jnp.float32)).astype(o1.dtype)
 
 
+@troop_kernel(
+    "axpy",
+    flops=lambda a, x, y: 2.0 * x.shape[0],
+    bytes=lambda a, x, y: x.shape[0] * (itemsize(x) + 2 * itemsize(y)),
+    space={"streams": (1, 2), "unroll": (1, 2),
+           "block_k": (256, 512, 1024)},
+    ref="axpy", example=_example)
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def axpy(a, x, y, cfg: TroopConfig = TroopConfig()):
     """a scalar, x/y (K,) -> a*x + y (dtype of y)."""

@@ -31,6 +31,7 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.core.troop import TroopConfig
+from repro.tune.registry import itemsize, troop_kernel
 
 _NEG = -1e30
 
@@ -140,6 +141,26 @@ def decode_attention_stats(q, k, v, length, cfg: TroopConfig = TroopConfig(),
     return acc, m, l
 
 
+def _example(small: bool = True):
+    B, H, KV, hd, S = (2, 4, 2, 128, 512) if small else (4, 16, 8, 128, 4096)
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.bfloat16)
+    length = jnp.full((B,), S, jnp.int32)
+    return (q, k, v, length), {}
+
+
+@troop_kernel(
+    "decode_attention",
+    flops=lambda q, k, v, ln: (4.0 * q.shape[0] * q.shape[1]
+                               * k.shape[1] * k.shape[3]),
+    bytes=lambda q, k, v, ln: (
+        k.shape[0] * k.shape[1] * k.shape[2] * k.shape[3]
+        * (itemsize(k) + itemsize(v))
+        + q.shape[0] * q.shape[1] * q.shape[2] * 2 * itemsize(q)),
+    space={"streams": (1, 2), "unroll": (1, 2), "block_k": (256, 512)},
+    ref="decode_attention", example=_example)
 def decode_attention(q, k, v, length, cfg: TroopConfig = TroopConfig()):
     """q (B,H,hd); k,v (B,S,KV,hd); length (B,) valid prefix. -> (B,H,hd)."""
     B, H, hd = q.shape

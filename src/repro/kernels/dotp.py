@@ -15,6 +15,15 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.core.troop import TroopConfig
+from repro.tune.registry import itemsize, troop_kernel
+
+
+def _example(small: bool = True):
+    key = jax.random.PRNGKey(0)
+    n = 4096 if small else 1 << 20
+    x = jax.random.normal(key, (n,), jnp.bfloat16)
+    y = jax.random.normal(jax.random.PRNGKey(1), (n,), jnp.bfloat16)
+    return (x, y), {}
 
 
 def _kernel_1s(x_ref, y_ref, o_ref, acc):
@@ -48,6 +57,13 @@ def _kernel_2s(x0, x1, y0, y1, o_ref, acc):
         o_ref[0, 0] = acc[0, 0]
 
 
+@troop_kernel(
+    "dotp",
+    flops=lambda x, y: 2.0 * x.shape[0],
+    bytes=lambda x, y: x.shape[0] * (itemsize(x) + itemsize(y)) + 4,
+    space={"streams": (1, 2), "unroll": (1, 2, 4),
+           "block_k": (256, 512, 1024)},
+    ref="dotp", example=_example)
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def dotp(x, y, cfg: TroopConfig = TroopConfig()):
     """x, y (K,) -> scalar fp32."""

@@ -16,8 +16,19 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.core.troop import TroopConfig
+from repro.tune.registry import itemsize, troop_kernel
 
 _NEG = -1e30
+
+
+def _example(small: bool = True):
+    B, T, H, KV, hd, S = (1, 128, 4, 2, 64, 128) if small \
+        else (2, 512, 8, 2, 64, 512)
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, T, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    return (q, k, v), {"causal": True}
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc, *,
@@ -58,6 +69,16 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc, *,
         o_ref[0] = jnp.moveaxis(out, 0, 1).astype(o_ref.dtype)
 
 
+@troop_kernel(
+    "flash_attention",
+    flops=lambda q, k, v: (4.0 * q.shape[0] * q.shape[1] * k.shape[1]
+                           * q.shape[2] * q.shape[3]),
+    bytes=lambda q, k, v: (
+        2 * q.shape[0] * q.shape[1] * q.shape[2] * q.shape[3] * itemsize(q)
+        + k.shape[0] * k.shape[1] * k.shape[2] * k.shape[3]
+        * (itemsize(k) + itemsize(v))),
+    space={"unroll": (1, 2), "block_k": (256, 512)},
+    ref="flash_attention", example=_example, key_kwargs=("causal",))
 @functools.partial(jax.jit, static_argnames=("cfg", "causal"))
 def flash_attention(q, k, v, causal: bool = True,
                     cfg: TroopConfig = TroopConfig()):

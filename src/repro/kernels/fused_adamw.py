@@ -16,6 +16,18 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.core.troop import TroopConfig
+from repro.tune.registry import itemsize, numel, troop_kernel
+
+
+def _example(small: bool = True):
+    n = 4096 if small else 1 << 20
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    p = jax.random.normal(ks[0], (n,))
+    g = jax.random.normal(ks[1], (n,))
+    mu = jnp.zeros((n,))
+    nu = jnp.zeros((n,))
+    hp = dict(lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, wd=0.1, bc1=0.1, bc2=0.1)
+    return (p, g, mu, nu), hp
 
 
 def _update(h_ref, p, g, mu, nu, po, muo, nuo):
@@ -37,6 +49,14 @@ def _kernel_2s(h_ref, p0, p1, g0, g1, mu0, mu1, nu0, nu1,
     _update(h_ref, p1, g1, mu1, nu1, po1, muo1, nuo1)
 
 
+@troop_kernel(
+    "fused_adamw",
+    flops=lambda p, g, mu, nu: 12.0 * numel(p),
+    # one pass: read (p, g, mu, nu), write (p', mu', nu'); moments fp32
+    bytes=lambda p, g, mu, nu: numel(p) * (2 * itemsize(p) + itemsize(g)
+                                           + 4 * 4),
+    space={"streams": (1, 2), "unroll": (1, 2), "block_k": (256, 512, 1024)},
+    ref="fused_adamw", example=_example)
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def fused_adamw(p, g, mu, nu, *, lr, b1, b2, eps, wd, bc1, bc2,
                 cfg: TroopConfig = TroopConfig()):

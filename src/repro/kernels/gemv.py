@@ -24,6 +24,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.troop import TroopConfig
+from repro.tune.registry import itemsize, troop_kernel
+
+
+def _example(small: bool = True):
+    key = jax.random.PRNGKey(0)
+    N, K = (128, 512) if small else (2048, 4096)
+    w = jax.random.normal(key, (N, K), jnp.bfloat16)
+    x = jax.random.normal(key, (K,), jnp.bfloat16)
+    return (w, x), {}
 
 
 def _kernel_1s(w_ref, x_ref, o_ref, acc):
@@ -64,6 +73,14 @@ def _kernel_2s(w0_ref, w1_ref, x0_ref, x1_ref, o_ref, acc):
         o_ref[...] = acc[...].astype(o_ref.dtype)
 
 
+@troop_kernel(
+    "gemv",
+    flops=lambda w, x: 2.0 * w.shape[0] * w.shape[1],
+    bytes=lambda w, x: (w.shape[0] * w.shape[1] * itemsize(w)
+                        + w.shape[1] * itemsize(x) + w.shape[0] * 4),
+    space={"streams": (1, 2), "unroll": (1, 2),
+           "block_n": (128, 256), "block_k": (256, 512)},
+    ref="gemv", example=_example)
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def gemv(w, x, cfg: TroopConfig = TroopConfig()):
     """w (N,K), x (K,) -> y (N,) fp32."""

@@ -19,6 +19,20 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.core.troop import TroopConfig
+from repro.tune.registry import itemsize, numel, troop_kernel
+
+
+def _example(small: bool = True):
+    b, T, di, ds = (1, 64, 128, 16) if small else (2, 512, 512, 16)
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (b, T, di))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, T, di)))
+    B = jax.random.normal(ks[2], (b, T, ds))
+    C = jax.random.normal(ks[3], (b, T, ds))
+    A = -jnp.exp(jax.random.normal(ks[4], (di, ds)))
+    D = jnp.ones((di,))
+    s0 = jnp.zeros((b, di, ds))
+    return (x, dt, B, C, A, D, s0), {}
 
 
 def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, o_ref, so_ref,
@@ -55,6 +69,16 @@ def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, o_ref, so_ref,
         so_ref[0] = state[...]
 
 
+@troop_kernel(
+    "mamba_scan",
+    # per (t, channel): state decay + update + output contraction over ds
+    flops=lambda x, dt, B, C, A, D, s0: (6.0 * numel(x) * A.shape[1]),
+    bytes=lambda x, dt, B, C, A, D, s0: (
+        (2 * numel(x) + numel(B) + numel(C)) * itemsize(x)
+        + numel(x) * itemsize(x)            # y out
+        + (numel(A) + numel(D) + numel(s0)) * 4),
+    space={"block_n": (64, 128, 256)},
+    ref="mamba_scan", example=_example)
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def mamba_scan(x, dt, B, C, A, D, state0, cfg: TroopConfig = TroopConfig()):
     """x, dt: (b, T, di); B, C: (b, T, ds); A: (di, ds) (<0); D: (di,);

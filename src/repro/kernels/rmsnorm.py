@@ -11,6 +11,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.troop import TroopConfig
+from repro.tune.registry import itemsize, troop_kernel
+
+
+def _example(small: bool = True):
+    T, d = (8, 256) if small else (256, 4096)
+    x = jax.random.normal(jax.random.PRNGKey(0), (T, d), jnp.bfloat16)
+    s = jax.random.normal(jax.random.PRNGKey(1), (d,), jnp.float32)
+    return (x, s), {}
 
 
 def _kernel(x_ref, s_ref, o_ref, *, eps):
@@ -20,6 +28,13 @@ def _kernel(x_ref, s_ref, o_ref, *, eps):
                   * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
 
 
+@troop_kernel(
+    "rmsnorm",
+    flops=lambda x, s, *a: 4.0 * x.shape[0] * x.shape[1],
+    bytes=lambda x, s, *a: (2 * x.shape[0] * x.shape[1] * itemsize(x)
+                            + x.shape[1] * itemsize(s)),
+    space={"block_n": (64, 128, 256)},
+    ref="rmsnorm", example=_example)
 @functools.partial(jax.jit, static_argnames=("cfg", "eps"))
 def rmsnorm(x, scale, eps: float = 1e-6, cfg: TroopConfig = TroopConfig()):
     """x (T, d), scale (d,) -> normalized x (dtype preserved)."""

@@ -26,6 +26,19 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.core.troop import TroopConfig
+from repro.tune.registry import itemsize, numel, troop_kernel
+
+
+def _example(small: bool = True):
+    B, T, H, hd = (1, 64, 2, 32) if small else (1, 256, 4, 64)
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    r = jax.random.normal(ks[0], (B, T, H, hd))
+    k = jax.random.normal(ks[1], (B, T, H, hd))
+    v = jax.random.normal(ks[2], (B, T, H, hd))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, T, H, hd))))
+    u = 0.5 * jnp.ones((H, hd))
+    s0 = jnp.zeros((B, H, hd, hd))
+    return (r, k, v, w, u, s0), {}
 
 
 def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, so_ref, state, *, bt):
@@ -73,6 +86,16 @@ def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, so_ref, state, *, bt):
         so_ref[0] = state[...]
 
 
+@troop_kernel(
+    "rwkv6",
+    # state update + readout: O(hd) per (t, head, channel) element
+    flops=lambda r, k, v, w, u, s0: 6.0 * numel(r) * r.shape[3],
+    bytes=lambda r, k, v, w, u, s0: (
+        4 * numel(r) * itemsize(r)          # r, k, v, w in
+        + numel(r) * 4 + numel(s0) * 4      # y + final state out (fp32)
+        + numel(u) * itemsize(u)),
+    space={"block_n": (64, 128, 256)},
+    ref="wkv6", example=_example)
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def wkv6(r, k, v, w, u, state0, cfg: TroopConfig = TroopConfig()):
     """r,k,v,w (B,T,H,hd); u (H,hd); state0 (B,H,hd,hd) fp32.

@@ -144,7 +144,7 @@ def _like(tree, params_sds, mesh, rules, boxed):
 def analyze(compiled):
     out = {}
     try:
-        ca = compiled.cost_analysis()
+        ca = RL.cost_analysis(compiled)
         out["flops"] = float(ca.get("flops", 0.0))
         out["bytes"] = float(ca.get("bytes accessed", 0.0))
         out["transcendentals"] = float(ca.get("transcendentals", 0.0))

@@ -113,13 +113,16 @@ def apply_mla_decode(p, cfg, x, cache: MLACache, pos, dtype, mode="absorb"):
         # up-projected once (W_UV) for the single query token.
         wuk = p["wuk"]["w"].astype(dtype).reshape(
             m.kv_lora_rank, H, m.qk_nope_head_dim)
-        q_lat = jnp.einsum("bthi,chi->bthc", q_nope, wuk)
+        q_lat = jnp.einsum("bthi,chi->bthc", q_nope, wuk,
+                           preferred_element_type=jnp.float32).astype(dtype)
         # A3: contract the latent cache in its own dtype (no fp32 copies of
-        # the cache); upcast only the small scores for the fp32 softmax.
+        # the cache); fp32 is only the accumulator (MXU semantics) and the
+        # small scores for the softmax.
         scores = (jnp.einsum("bthc,bsc->bhts", q_lat.astype(c_kv.dtype),
-                             c_kv).astype(jnp.float32)
+                             c_kv, preferred_element_type=jnp.float32)
                   + jnp.einsum("bthi,bsi->bhts", q_pe.astype(k_pe.dtype),
-                               k_pe).astype(jnp.float32)) * scale
+                               k_pe,
+                               preferred_element_type=jnp.float32)) * scale
         scores = PT.constrain(scores,
                               ("batch", None, None, "attn_kv_seq"))
     else:
@@ -135,10 +138,12 @@ def apply_mla_decode(p, cfg, x, cache: MLACache, pos, dtype, mode="absorb"):
     probs = jax.nn.softmax(scores, axis=-1).astype(dtype)
 
     if mode == "absorb":
-        out_lat = jnp.einsum("bhts,bsc->bthc", probs, c_kv)
+        out_lat = jnp.einsum("bhts,bsc->bthc", probs, c_kv,
+                             preferred_element_type=jnp.float32)
         wuv = p["wuv"]["w"].astype(dtype).reshape(
             m.kv_lora_rank, H, m.v_head_dim)
-        out = jnp.einsum("bthc,chi->bthi", out_lat, wuv)
+        out = jnp.einsum("bthc,chi->bthi", out_lat.astype(dtype), wuv,
+                         preferred_element_type=jnp.float32).astype(dtype)
     else:
         v = M.apply_dense(p["wuv"], c_kv, dtype).reshape(
             B, S, H, m.v_head_dim)

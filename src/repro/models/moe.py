@@ -133,7 +133,9 @@ def apply_moe(p, cfg, x, *, dtype, num_groups: int = 1):
     capacity = max(int(n * k / E * mo.capacity_factor + 0.5), k)
     xf = PT.constrain(x.reshape(G, n, d), ("batch", None, None))
 
-    logits = M.apply_dense(p["router"], xf, dtype)             # (G, n, E)
+    # fp32 router: bf16 logits quantize at ~2^-8 and flip near-tie top-k
+    # picks between the batched and the token-by-token decode paths
+    logits = M.apply_dense(p["router"], xf, jnp.float32)       # (G, n, E)
     dispatch, valid, gates, aux = jax.vmap(
         lambda xg, lg: _route_group(xg, lg, mo, capacity))(xf, logits)
 

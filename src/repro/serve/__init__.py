@@ -1,5 +1,6 @@
 from repro.serve.scheduler import Request, ServingEngine, splice_cache
-from repro.serve.step import make_prefill_step, make_serve_step
+from repro.serve.step import (make_prefill_step, make_serve_step,
+                              tuned_kernel_configs)
 
 __all__ = ["Request", "ServingEngine", "splice_cache",
-           "make_prefill_step", "make_serve_step"]
+           "make_prefill_step", "make_serve_step", "tuned_kernel_configs"]

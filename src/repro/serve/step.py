@@ -3,11 +3,43 @@
 serve_step is the paper's workload: one new token against a KV cache — every
 matmul a GEMV-class memory-bound op.  Greedy sampling keeps the step a pure
 function (temperature sampling threads an rng key).
+
+``tuned_kernel_configs`` resolves the best-known TroopConfigs for the decode
+hot kernels at the serving shapes (from the persistent tune cache, heuristic
+defaults when untuned) so the serving layer and kernel-backed model paths
+read tuned configs from one place.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+
+def tuned_kernel_configs(model_cfg, batch_size: int, max_seq: int,
+                         dtype=jnp.bfloat16):
+    """TroopConfigs for the decode-path kernels at the serving shapes.
+
+    Pure shape-level lookup (ShapeDtypeStruct placeholders — nothing is
+    allocated or traced): decode attention over the KV cache and the
+    GEMV-class readout projection.
+    """
+    import repro.kernels  # noqa: F401  (populates the tune registry)
+    from repro.tune import get_tuned
+
+    sds = jax.ShapeDtypeStruct
+    B, S = batch_size, max_seq
+    KV, hd, H = (model_cfg.num_kv_heads, model_cfg.head_dim,
+                 model_cfg.num_heads)
+    d, V = model_cfg.d_model, model_cfg.vocab_size
+    return {
+        "decode_attention": get_tuned(
+            "decode_attention",
+            sds((B, H, hd), dtype), sds((B, S, KV, hd), dtype),
+            sds((B, S, KV, hd), dtype), sds((B,), jnp.int32)),
+        "gemv": get_tuned("gemv", sds((V, d), dtype), sds((d,), dtype)),
+        "rmsnorm": get_tuned("rmsnorm", sds((B, d), dtype),
+                             sds((d,), jnp.float32)),
+    }
 
 
 def make_prefill_step(model):
@@ -18,7 +50,10 @@ def make_prefill_step(model):
     return prefill_step
 
 
-def make_serve_step(model, *, temperature: float = 0.0):
+def make_serve_step(model, *, temperature: float = 0.0,
+                    troop_configs=None):
+    """``troop_configs`` (from ``tuned_kernel_configs``) is attached to the
+    returned step for kernel-backed decode paths and introspection."""
     def serve_step(params, batch, caches):
         logits, caches = model.decode_step(params, batch, caches)
         if temperature > 0:
@@ -28,4 +63,5 @@ def make_serve_step(model, *, temperature: float = 0.0):
         else:
             next_tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
         return next_tok, caches
+    serve_step.troop_configs = troop_configs
     return serve_step

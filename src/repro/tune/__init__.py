@@ -1,0 +1,40 @@
+"""repro.tune — roofline-guided autotuning + kernel dispatch.
+
+The subsystem closes the paper's loop (a kernel is done only at the
+roofline) in four pieces:
+
+  registry  — ``@troop_kernel`` decorator; every Pallas kernel declares its
+              roofline cost model and tunable TroopConfig space
+  search    — enumerate candidates, prune analytically (Spatz cycle model /
+              closed-form roofline terms), time survivors, score each as
+              fraction-of-roofline
+  cache     — JSON-persistent tuned configs keyed kernel|shapes|backend,
+              with an in-process LRU (``REPRO_TUNE_CACHE`` overrides the
+              path)
+  dispatch  — ``get_tuned(name, *args)`` picks the cached best config;
+              kernels called without an explicit TroopConfig route through
+              it automatically
+
+Quickstart::
+
+    from repro import tune
+    import repro.kernels                      # populates the registry
+    res = tune.tune("gemv", w, x)             # prune -> time -> cache
+    cfg = tune.get_tuned("gemv", w, x)        # cached best (or heuristic)
+"""
+from repro.tune.cache import (TuneCache, config_from_dict, config_to_dict,
+                              default_cache, get_tuned, resolve_path)
+from repro.tune.registry import (DEFAULT_SPACE, REGISTRY, KernelSpec,
+                                 cache_key, names, troop_kernel)
+from repro.tune.search import (Candidate, TuneResult, enumerate_space,
+                               measure, predict_fraction, prune,
+                               roofline_time, tune)
+
+__all__ = [
+    "DEFAULT_SPACE", "REGISTRY", "KernelSpec", "cache_key", "names",
+    "troop_kernel",
+    "TuneCache", "config_from_dict", "config_to_dict", "default_cache",
+    "get_tuned", "resolve_path",
+    "Candidate", "TuneResult", "enumerate_space", "measure",
+    "predict_fraction", "prune", "roofline_time", "tune",
+]

@@ -13,7 +13,9 @@ def run_with_devices(code: str, n: int = 8):
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
     env["PYTHONPATH"] = os.path.join(REPO, "src")
-    env.pop("JAX_PLATFORMS", None)
+    # force the host platform: the fake-device flag is CPU-only, and letting
+    # jax probe for an accelerator hangs on machines with libtpu installed
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                          capture_output=True, text=True, env=env,
                          timeout=420)

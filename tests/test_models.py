@@ -11,9 +11,9 @@ from repro.models import modules as M
 B, T = 2, 16
 
 
-def make(arch, capacity_factor=None, **rt_over):
+def make(arch, capacity_factor=None, dtype=None, **rt_over):
     import dataclasses
-    cfg = reduced(get_config(arch))
+    cfg = reduced(get_config(arch), **({"dtype": dtype} if dtype else {}))
     if capacity_factor and cfg.moe is not None:
         cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
             cfg.moe, capacity_factor=capacity_factor))
@@ -63,9 +63,13 @@ def test_decode_matches_teacher_forcing(arch):
 
     Capacity-based MoE drops depend on the routing-group token count, so the
     invariant only holds drop-free: use a large capacity factor here (serving
-    configs do the same — see DESIGN.md).
+    configs do the same — see DESIGN.md).  fp32 activations: at bf16 the
+    two paths' ~1e-3 reassociation noise can flip a near-tie MoE top-k pick
+    (observed margin 6e-4 on deepseek), which is a property of routing
+    discreteness, not of the cache logic under test — fp32 makes the
+    invariant well-posed and lets the tolerance tighten 30x.
     """
-    cfg, model, params = make(arch, capacity_factor=8.0)
+    cfg, model, params = make(arch, capacity_factor=8.0, dtype="float32")
     if cfg.frontend == "vision":
         pytest.skip("prefix handling covered by smoke")
     Tt = 8
@@ -82,7 +86,7 @@ def test_decode_matches_teacher_forcing(arch):
     dec = jnp.stack(outs, axis=1)
     np.testing.assert_allclose(
         np.asarray(dec, np.float32), np.asarray(full_logits, np.float32),
-        rtol=6e-2, atol=6e-2)
+        rtol=2e-3, atol=2e-3)
 
 
 def test_prefill_then_decode_continuation():

@@ -64,7 +64,7 @@ def test_scan_body_counted_once_methodology():
         return jax.lax.scan(lambda c, wi: (c @ wi, None), x, w)[0]
     x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
     w = jax.ShapeDtypeStruct((8, 64, 64), jnp.float32)
-    c = jax.jit(scanned).lower(x, w).compile().cost_analysis()["flops"]
-    unroll = jax.jit(lambda x, w: x @ w[0] @ w[1]).lower(
-        x, w).compile().cost_analysis()["flops"]
+    c = RL.cost_analysis(jax.jit(scanned).lower(x, w).compile())["flops"]
+    unroll = RL.cost_analysis(jax.jit(lambda x, w: x @ w[0] @ w[1]).lower(
+        x, w).compile())["flops"]
     assert c < 2.5 * unroll / 2     # ~1 body, not 8

@@ -1,0 +1,195 @@
+"""Tune subsystem: registry round-trip, analytic pruning, cache
+persistence across a save/load cycle, dispatch fallback, and the
+no-re-timing guarantee on a cache hit (the tune_report acceptance check)."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels as K  # populates the registry
+from repro import tune
+from repro.core.troop import TroopConfig
+from repro.kernels import ref as R
+
+ALL_KERNELS = ("gemv", "dotp", "axpy", "rmsnorm", "decode_attention",
+               "flash_attention", "fused_adamw", "mamba_scan", "rwkv6")
+
+
+@pytest.fixture
+def tmp_cache(tmp_path, monkeypatch):
+    """Point the default cache at a fresh file (per-path singleton, so no
+    global reset is needed)."""
+    path = str(tmp_path / "tune_cache.json")
+    monkeypatch.setenv("REPRO_TUNE_CACHE", path)
+    return path
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+def test_registry_has_every_kernel():
+    assert set(ALL_KERNELS) <= set(tune.names())
+    for name in ALL_KERNELS:
+        spec = tune.REGISTRY[name]
+        assert callable(spec.fn)
+        assert callable(spec.flops) and callable(spec.bytes)
+        assert spec.space, name
+        assert spec.example is not None, name
+
+
+def test_registry_cost_models_accept_shape_structs():
+    for name in ALL_KERNELS:
+        spec = tune.REGISTRY[name]
+        args, _ = spec.example(small=True)
+        structs = [jax.ShapeDtypeStruct(a.shape, a.dtype)
+                   if hasattr(a, "shape") else a for a in args]
+        assert spec.flops(*structs) > 0, name
+        assert spec.bytes(*structs) > 0, name
+        assert spec.key(*structs) == spec.key(*args), name
+
+
+def test_registry_dispatch_matches_reference(tmp_cache):
+    """Calling the public entry point WITHOUT a config routes through
+    get_tuned and still computes the right answer."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (128, 512), jnp.bfloat16)
+    x = jax.random.normal(jax.random.PRNGKey(1), (512,), jnp.bfloat16)
+    np.testing.assert_allclose(np.asarray(K.gemv(w, x), np.float32),
+                               np.asarray(R.gemv(w, x), np.float32),
+                               rtol=3e-2, atol=3e-2)
+    xs = jax.random.normal(jax.random.PRNGKey(2), (8, 256), jnp.bfloat16)
+    s = jax.random.normal(jax.random.PRNGKey(3), (256,), jnp.float32)
+    np.testing.assert_allclose(np.asarray(K.rmsnorm(xs, s), np.float32),
+                               np.asarray(R.rmsnorm(xs, s), np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_explicit_config_bypasses_dispatch(tmp_cache):
+    """Positional/keyword TroopConfig uses the raw kernel path (exact same
+    numerics as spec.fn)."""
+    spec = tune.REGISTRY["dotp"]
+    x = jax.random.normal(jax.random.PRNGKey(0), (4096,), jnp.float32)
+    y = jax.random.normal(jax.random.PRNGKey(1), (4096,), jnp.float32)
+    cfg = TroopConfig(streams=1, unroll=1)
+    np.testing.assert_array_equal(np.asarray(K.dotp(x, y, cfg)),
+                                  np.asarray(spec.fn(x, y, cfg=cfg)))
+
+
+# --------------------------------------------------------------------------
+# search: enumeration + analytic prune
+# --------------------------------------------------------------------------
+def test_enumerate_space_validates_configs():
+    for name in ALL_KERNELS:
+        spec = tune.REGISTRY[name]
+        cfgs = tune.enumerate_space(spec)
+        assert cfgs, name
+        for cfg in cfgs:
+            cfg.validate()
+        assert len(set(cfgs)) == len(cfgs), f"{name}: duplicate candidates"
+
+
+@pytest.mark.parametrize("name", ["gemv", "dotp", "decode_attention"])
+@pytest.mark.parametrize("keep", [1, 2, 4])
+def test_prune_never_discards_predicted_best(name, keep):
+    spec = tune.REGISTRY[name]
+    args, _ = spec.example(small=True)
+    structs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in args
+               if hasattr(a, "shape")]
+    cands = [tune.Candidate(cfg, tune.predict_fraction(spec, cfg, *structs))
+             for cfg in tune.enumerate_space(spec)]
+    best = max(cands, key=lambda c: c.predicted)
+    survivors = tune.prune(cands, keep)
+    assert len(survivors) == min(keep, len(cands))
+    assert best.cfg in [s.cfg for s in survivors]
+
+
+def test_predictor_prefers_troop_mechanisms():
+    """Sanity on the analytic model: decoupled streams beat the single
+    interface on the paper's memory-bound kernels."""
+    for name in ("gemv", "dotp", "axpy"):
+        spec = tune.REGISTRY[name]
+        args, _ = spec.example(small=True)
+        lo = tune.predict_fraction(
+            spec, TroopConfig(streams=1, unroll=1), *args)
+        hi = tune.predict_fraction(
+            spec, TroopConfig(streams=2, unroll=2), *args)
+        assert hi > lo, name
+
+
+# --------------------------------------------------------------------------
+# cache + end-to-end tune -> dispatch
+# --------------------------------------------------------------------------
+def test_get_tuned_falls_back_on_miss(tmp_cache):
+    spec = tune.REGISTRY["gemv"]
+    w = jax.ShapeDtypeStruct((64, 256), jnp.bfloat16)
+    x = jax.ShapeDtypeStruct((256,), jnp.bfloat16)
+    cfg = tune.get_tuned("gemv", w, x)
+    assert cfg == spec.heuristic(w, x)
+    assert tune.default_cache().misses >= 1
+
+
+def test_tune_cache_roundtrip_and_no_retiming(tmp_cache):
+    spec = tune.REGISTRY["rmsnorm"]
+    args, kw = spec.example(small=True)
+    res = tune.tune("rmsnorm", *args, kernel_kwargs=kw, keep=2, iters=1)
+    assert not res.from_cache and res.timings_run >= 1
+    assert res.measured_s is not None and res.fraction > 0
+
+    # second call: resolved from cache, zero timing invocations
+    res2 = tune.tune("rmsnorm", *args, kernel_kwargs=kw, keep=2, iters=1)
+    assert res2.from_cache and res2.timings_run == 0
+    assert res2.best == res.best
+
+    # persisted: a brand-new cache instance reads the same best config
+    assert os.path.exists(tmp_cache)
+    fresh = tune.TuneCache(tmp_cache)
+    assert len(fresh) == 1
+    cfg = tune.get_tuned("rmsnorm", *args, cache=fresh)
+    assert cfg == res.best
+
+    # dispatch consumes it (shape-only lookup)
+    structs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in args]
+    assert tune.get_tuned("rmsnorm", *structs) == res.best
+
+
+def test_cache_file_is_json_keyed_by_kernel_shape_backend(tmp_cache):
+    spec = tune.REGISTRY["rmsnorm"]
+    args, kw = spec.example(small=True)
+    tune.tune("rmsnorm", *args, kernel_kwargs=kw, keep=1, iters=1)
+    with open(tmp_cache) as f:
+        data = json.load(f)
+    (key,) = data.keys()
+    assert key.startswith("rmsnorm|")
+    assert key.endswith(f"|{jax.default_backend()}")
+    assert "config" in data[key] and "fraction_of_roofline" in data[key]
+
+
+def test_cache_tolerates_corrupt_file(tmp_path):
+    p = tmp_path / "broken.json"
+    p.write_text("{not json")
+    c = tune.TuneCache(str(p))
+    assert len(c) == 0
+    c.put("k", {"config": tune.config_to_dict(TroopConfig())})
+    c.save()
+    assert len(tune.TuneCache(str(p))) == 1
+
+
+def test_cache_lru_eviction_keeps_disk_contents(tmp_path):
+    c = tune.TuneCache(str(tmp_path / "c.json"), capacity=2)
+    for i in range(5):
+        c.put(f"k{i}", {"config": tune.config_to_dict(TroopConfig())})
+    assert len(c._lru) == 2            # hot view bounded
+    assert len(c) == 5                 # disk dict complete
+    assert c.get("k0") is not None     # evicted from LRU, still served
+
+
+def test_tuned_serve_configs(tmp_cache):
+    """serve.step consumes the tune cache at shape level."""
+    from repro.configs.qwen15_05b import CONFIG as CFG
+    from repro.serve.step import tuned_kernel_configs
+    cfgs = tuned_kernel_configs(CFG, batch_size=2, max_seq=128)
+    assert set(cfgs) == {"decode_attention", "gemv", "rmsnorm"}
+    for v in cfgs.values():
+        assert isinstance(v, TroopConfig)
