@@ -1,0 +1,158 @@
+"""Serving-engine benchmark -> table + BENCH_serve.json.
+
+Runs the continuous-batching engine end to end under both cache backends
+(dense, paged) on a reduced arch and reports decode steps/s, tokens/s, and
+prefill-compile counts; then times the decode-attention kernels (dense and
+paged layouts) at the serving shapes and scores each as a measured
+fraction-of-roofline (t_roofline / t_measured, tune subsystem denominators).
+
+    PYTHONPATH=src python benchmarks/serve_bench.py --fast
+
+Interpret-mode wall times on CPU are NOT TPU performance (see
+DESIGN.md §3) — the value here is that the whole engine/kernel stack is
+exercised for real and the numbers are comparable run over run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(
+    __file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+
+def bench_engine(arch: str, backend: str, *, slots, cache_len, requests,
+                 max_new, page_size):
+    import jax
+    import numpy as np
+    from repro.configs import get_config, reduced
+    from repro.models import RuntimeConfig, build_model
+    from repro.models import modules as M
+    from repro.serve.kvcache import PagedBackend
+    from repro.serve.scheduler import Request, ServingEngine
+    from repro.serve.step import make_prefill_step, make_serve_step
+
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg, RuntimeConfig(remat="none"))
+    params = M.unbox(model.init(jax.random.PRNGKey(0)))
+    be = PagedBackend(page_size=page_size) if backend == "paged" else "dense"
+    eng = ServingEngine(
+        model, slots=slots, cache_len=cache_len,
+        prefill_step=make_prefill_step(model),
+        serve_step=make_serve_step(model), params=params, backend=be)
+    rng = np.random.default_rng(0)
+    for i in range(requests):
+        eng.submit(Request(
+            rid=i, prompt=rng.integers(1, min(cfg.vocab_size, 1000),
+                                       int(rng.integers(4, 20))),
+            max_new_tokens=max_new))
+    t0 = time.perf_counter()
+    finished = eng.run_until_drained()
+    wall = time.perf_counter() - t0
+    m = eng.metrics()
+    m.update({"arch": cfg.name, "wall_s": wall,
+              "requests_submitted": requests,
+              "all_finished": len(finished) == requests})
+    return m
+
+
+def bench_decode_kernels(*, slots, cache_len, page_size, iters):
+    """Dense vs paged decode-attention at the serving shapes."""
+    import jax
+    import jax.numpy as jnp
+    import repro.kernels  # noqa: F401  (populates the registry)
+    from repro.tune import REGISTRY
+    from repro.tune.cache import get_tuned
+    from repro.tune.search import measure, roofline_time
+
+    B, S, page = slots, cache_len, page_size
+    KV, H, hd = 2, 4, 64
+    nblk = -(-S // page)
+    P = B * nblk + 1
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.bfloat16)
+    length = jnp.full((B,), S - 1, jnp.int32)
+    k_pool = jax.random.normal(ks[1], (P, page, KV, hd), jnp.bfloat16)
+    v_pool = jax.random.normal(ks[2], (P, page, KV, hd), jnp.bfloat16)
+    import numpy as np
+    perm = np.random.default_rng(0).permutation(P - 1) + 1
+    bt = jnp.asarray(perm[:B * nblk].reshape(B, nblk), jnp.int32)
+
+    cases = {
+        "decode_attention": (q, k, v, length),
+        "paged_decode_attention": (q, k_pool, v_pool, bt, length),
+    }
+    rows = []
+    for name, args in cases.items():
+        spec = REGISTRY[name]
+        cfg = get_tuned(name, *args)
+        t = measure(spec, cfg, args, iters=iters)
+        roof = roofline_time(spec, args)
+        rows.append({
+            "kernel": name,
+            "shape": f"B={B} S={S} KV={KV} H={H} hd={hd}"
+                     + (f" page={page}" if "paged" in name else ""),
+            "measured_us": t * 1e6,
+            "roofline_us": roof * 1e6,
+            "fraction_of_roofline": roof / t if t else 0.0,
+        })
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer requests / timing iterations (CI smoke)")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=64)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--max-new", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args(argv)
+
+    import jax
+    requests = args.requests or (6 if args.fast else 12)
+    max_new = args.max_new or (6 if args.fast else 16)
+    iters = 1 if args.fast else 3
+
+    engines = []
+    for backend in ("dense", "paged"):
+        m = bench_engine(args.arch, backend, slots=args.slots,
+                         cache_len=args.cache_len, requests=requests,
+                         max_new=max_new, page_size=args.page_size)
+        engines.append(m)
+        print(f"{backend:<7} {m['decode_steps']:>4} steps  "
+              f"{m['decode_steps_per_s']:>8.2f} steps/s  "
+              f"{m['tokens_per_s']:>8.2f} tok/s  "
+              f"{m['prefill_traces']} prefill compiles")
+
+    kernels = bench_decode_kernels(slots=args.slots, cache_len=args.cache_len,
+                                   page_size=args.page_size, iters=iters)
+    for r in kernels:
+        print(f"{r['kernel']:<24} {r['measured_us']:>10.1f} us  "
+              f"roof {r['roofline_us']:>8.3f} us  "
+              f"frac {r['fraction_of_roofline']:.3e}")
+
+    payload = {
+        "backend": jax.default_backend(),
+        "interpret_mode": True,
+        "engines": engines,
+        "decode_kernels": kernels,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    print(f"wrote {args.out}")
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,7 @@ from repro.serve.step import make_prefill_step, make_serve_step
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--backend", choices=("dense", "paged"), default="paged")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
@@ -31,12 +32,13 @@ def main():
     model = build_model(cfg, RuntimeConfig(remat="none"))
     params = M.unbox(model.init(jax.random.PRNGKey(0)))
     print(f"serving {cfg.name}: params={cfg.param_count():,} "
-          f"slots={args.slots}")
+          f"slots={args.slots} backend={args.backend}")
 
     engine = ServingEngine(
         model, slots=args.slots, cache_len=128,
         prefill_step=make_prefill_step(model),
-        serve_step=make_serve_step(model), params=params)
+        serve_step=make_serve_step(model), params=params,
+        backend=args.backend)
 
     rng = np.random.default_rng(0)
     for i in range(args.requests):
@@ -46,11 +48,13 @@ def main():
             max_new_tokens=args.max_new))
 
     t0 = time.perf_counter()
-    engine.run_until_drained()
+    finished = engine.run_until_drained()
     dt = time.perf_counter() - t0
-    toks = args.requests * args.max_new
-    print(f"generated {toks} tokens in {engine.steps} decode steps, "
-          f"{dt:.1f}s ({toks / dt:.1f} tok/s on CPU)")
+    m = engine.metrics()
+    print(f"generated {m['tokens_generated']} tokens "
+          f"({len(finished)} requests) in {engine.steps} decode steps, "
+          f"{dt:.1f}s ({m['tokens_generated'] / dt:.1f} tok/s on CPU, "
+          f"{m['prefill_traces']} prefill compiles)")
 
 
 if __name__ == "__main__":

@@ -169,6 +169,134 @@ def decode_attention(q, k, v, length, cfg: TroopConfig = TroopConfig()):
     return out.reshape(B, H, hd).astype(q.dtype)
 
 
+# --------------------------------------------------------------------------
+# Paged variant: block-table gather feeding the same two-stream pipeline
+# --------------------------------------------------------------------------
+def _epilogue_norm(o_ref, l_s, acc):
+    o_ref[0] = acc[...] / jnp.maximum(l_s[...], 1e-30)
+
+
+def _kernel_paged_1s(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                     m_s, l_s, acc, *, scale, page):
+    b, j = pl.program_id(0), pl.program_id(1)
+    pl.when(j == 0)(lambda: _prologue(m_s, l_s, acc))
+    _block_update(q_ref[0], k_ref[0], v_ref[0], j * page, len_ref[b],
+                  scale, m_s, l_s, acc)
+    pl.when(j == pl.num_programs(1) - 1)(
+        lambda: _epilogue_norm(o_ref, l_s, acc))
+
+
+def _kernel_paged_2s(bt_ref, len_ref, q_ref, k0, v0, k1, v1, o_ref,
+                     m_s, l_s, acc, *, scale, page, half):
+    b, j = pl.program_id(0), pl.program_id(1)
+    pl.when(j == 0)(lambda: _prologue(m_s, l_s, acc))
+    q, valid = q_ref[0], len_ref[b]
+    _block_update(q, k0[0], v0[0], j * page, valid, scale, m_s, l_s, acc)
+    _block_update(q, k1[0], v1[0], (half + j) * page, valid, scale,
+                  m_s, l_s, acc)
+    pl.when(j == pl.num_programs(1) - 1)(
+        lambda: _epilogue_norm(o_ref, l_s, acc))
+
+
+def _paged_example(small: bool = True):
+    import numpy as np
+    B, H, KV, hd, page, nblk = (2, 4, 2, 128, 16, 4) if small \
+        else (4, 16, 8, 128, 16, 16)
+    P = 1 + B * nblk
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.bfloat16)
+    k_pool = jax.random.normal(ks[1], (P, page, KV, hd), jnp.bfloat16)
+    v_pool = jax.random.normal(ks[2], (P, page, KV, hd), jnp.bfloat16)
+    # permuted tables: physically scattered pages, logically contiguous
+    perm = np.random.default_rng(0).permutation(P - 1) + 1
+    bt = jnp.asarray(perm[:B * nblk].reshape(B, nblk), jnp.int32)
+    length = jnp.asarray([max(1, nblk * page - 5 * i) for i in range(B)],
+                         jnp.int32)
+    return (q, k_pool, v_pool, bt, length), {}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _paged_decode_attention(q, k_pool, v_pool, block_tables, length,
+                            cfg: TroopConfig = TroopConfig()):
+    B, H, hd = q.shape
+    page, KV = k_pool.shape[1], k_pool.shape[2]
+    nblk = block_tables.shape[1]
+    G = H // KV
+    scale = hd ** -0.5
+    qg = q.reshape(B, KV, G, hd)
+    streams = cfg.streams if nblk % 2 == 0 else 1
+    half = nblk // streams
+
+    scratch = [pltpu.VMEM((KV, G, 1), jnp.float32),
+               pltpu.VMEM((KV, G, 1), jnp.float32),
+               pltpu.VMEM((KV, G, hd), jnp.float32)]
+    q_spec = pl.BlockSpec((1, KV, G, hd), lambda b, j, bt, ln: (b, 0, 0, 0))
+    out_spec = pl.BlockSpec((1, KV, G, hd), lambda b, j, bt, ln: (b, 0, 0, 0))
+    out_shape = jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32)
+    # the block-table gather: the page index for grid step (b, j) is read
+    # from the scalar-prefetched table, so the DMA engine streams physically
+    # scattered pages back-to-back — mechanism (E) at HBM granularity
+    lo = pl.BlockSpec((1, page, KV, hd),
+                      lambda b, j, bt, ln: (bt[b, j], 0, 0, 0))
+    hi = pl.BlockSpec((1, page, KV, hd),
+                      lambda b, j, bt, ln, o=half: (bt[b, o + j], 0, 0, 0))
+
+    if streams == 1:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2, grid=(B, nblk),
+            in_specs=[q_spec, lo, lo], out_specs=out_spec,
+            scratch_shapes=scratch)
+        out = pl.pallas_call(
+            functools.partial(_kernel_paged_1s, scale=scale, page=page),
+            grid_spec=grid_spec, out_shape=out_shape,
+            interpret=cfg.interpret,
+        )(block_tables, length, qg, k_pool, v_pool)
+    else:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2, grid=(B, half),
+            in_specs=[q_spec, lo, lo, hi, hi], out_specs=out_spec,
+            scratch_shapes=scratch)
+        out = pl.pallas_call(
+            functools.partial(_kernel_paged_2s, scale=scale, page=page,
+                              half=half),
+            grid_spec=grid_spec, out_shape=out_shape,
+            interpret=cfg.interpret,
+        )(block_tables, length, qg, k_pool, v_pool, k_pool, v_pool)
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+@troop_kernel(
+    "paged_decode_attention",
+    flops=lambda q, kp, vp, bt, ln: (4.0 * q.shape[0] * q.shape[1]
+                                     * bt.shape[1] * kp.shape[1]
+                                     * q.shape[2]),
+    bytes=lambda q, kp, vp, bt, ln: (
+        q.shape[0] * bt.shape[1] * kp.shape[1] * kp.shape[2] * kp.shape[3]
+        * (itemsize(kp) + itemsize(vp))
+        + q.shape[0] * q.shape[1] * q.shape[2] * 2 * itemsize(q)
+        + bt.shape[0] * bt.shape[1] * itemsize(bt)),
+    space={"streams": (1, 2)},
+    ref="paged_decode_attention", example=_paged_example)
+def paged_decode_attention(q, k_pool, v_pool, block_tables, length,
+                           cfg: TroopConfig = TroopConfig()):
+    """Flash-decode over a paged KV cache (serve.kvcache layout).
+
+    q (B,H,hd); k_pool/v_pool (P,page,KV,hd); block_tables (B,nblk) int32
+    mapping logical block -> physical page; length (B,) valid prefix.
+    Returns (B,H,hd) in q.dtype.
+
+    Same two-stream online-softmax pipeline as ``decode_attention``, but the
+    KV stream is gathered through the scalar-prefetched block table — pages
+    are disjoint by construction (the allocator never hands a page to two
+    slots), so the decoupled streams read conflict-free regions no matter
+    how fragmented the pool is.  ``streams=2`` walks the two halves of the
+    slot's logical sequence concurrently (falls back to one stream when the
+    table length is odd).
+    """
+    return _paged_decode_attention(q, k_pool, v_pool, block_tables, length,
+                                   cfg)
+
+
 def _block_update_q8(q, k8, ks, v8, vs, s0, valid, scale, m_s, l_s, acc):
     """Online-softmax update reading an int8 cache block: dequantization
     happens in VMEM after the (halved) HBM stream — mechanism (A)+(E) with

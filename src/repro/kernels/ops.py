@@ -14,7 +14,8 @@ from repro.core.troop import BASELINE, TROOP, TroopConfig
 from repro.kernels.axpy import axpy
 from repro.kernels.decode_attention import (decode_attention,
                                             decode_attention_int8,
-                                            decode_attention_stats)
+                                            decode_attention_stats,
+                                            paged_decode_attention)
 from repro.kernels.dotp import dotp
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.fused_adamw import fused_adamw
@@ -25,7 +26,7 @@ from repro.kernels.rwkv6 import wkv6
 
 __all__ = ["gemv", "dotp", "axpy", "rmsnorm", "fused_adamw",
            "decode_attention", "decode_attention_stats", "decode_attention_int8",
-           "flash_attention",
+           "paged_decode_attention", "flash_attention",
            "wkv6", "wkv6_with_state", "mamba_scan", "batched_gemv",
            "lse_combine", "BASELINE", "TROOP", "TroopConfig"]
 

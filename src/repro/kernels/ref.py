@@ -52,6 +52,16 @@ def decode_attention(q, k, v, length):
     return out.reshape(B, H, hd)
 
 
+def paged_decode_attention(q, k_pool, v_pool, block_tables, length):
+    """Paged flash-decode oracle: gather the block table to the dense
+    logical view, then the dense decode_attention oracle."""
+    B, nblk = block_tables.shape
+    page, KV, hd = k_pool.shape[1:]
+    k = k_pool[block_tables].reshape(B, nblk * page, KV, hd)
+    v = v_pool[block_tables].reshape(B, nblk * page, KV, hd)
+    return decode_attention(q, k, v, length)
+
+
 def flash_attention(q, k, v, causal=True):
     """q (B,T,H,hd), k/v (B,S,KV,hd) -> (B,T,H,hd). fp32 softmax oracle."""
     B, T, H, hd = q.shape

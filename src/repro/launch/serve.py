@@ -1,9 +1,13 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> --smoke``.
 
 Continuous-batching engine around the jitted prefill/decode steps (the
-paper's decode workload).  ``--smoke`` uses the reduced config on the host.
+paper's decode workload): bucketed batched prefill (one compile per length
+bucket), pluggable cache backend (``--backend paged`` is the default:
+page-pool KV with block tables, see serve.kvcache).  ``--smoke`` uses the
+reduced config on the host and prints the engine metrics.
 """
 import argparse
+import json
 
 import jax
 import numpy as np
@@ -11,24 +15,38 @@ import numpy as np
 from repro.configs import get_config, reduced
 from repro.models import RuntimeConfig, build_model
 from repro.models import modules as M
+from repro.serve.kvcache import PagedBackend
 from repro.serve.scheduler import Request, ServingEngine
-from repro.serve.step import make_prefill_step, make_serve_step
+from repro.serve.step import (make_prefill_step, make_serve_step,
+                              tuned_kernel_configs)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--backend", choices=("dense", "paged"), default="paged")
+    ap.add_argument("--kernel-decode", action="store_true",
+                    help="attend via the tuned Pallas paged kernel (no "
+                         "gathered dense view; slow in CPU interpret mode)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="pool pages per layer (default: full occupancy)")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=128)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
 
+    if args.kernel_decode and args.backend != "paged":
+        raise SystemExit("--kernel-decode requires --backend paged "
+                         "(the kernel reads the page pool + block table)")
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduced(cfg)
-    model = build_model(cfg, RuntimeConfig(remat="none"))
+    model = build_model(cfg, RuntimeConfig(
+        remat="none", paged_kernel_decode=args.kernel_decode))
     params = M.unbox(model.init(jax.random.PRNGKey(0)))
 
     extras = None
@@ -38,19 +56,32 @@ def main():
             else cfg.frontend_tokens
         extras = lambda req: {"frontend": 0.1 * jnp.ones(
             (1, F, cfg.d_model), jnp.bfloat16)}
+
+    backend = PagedBackend(page_size=args.page_size,
+                           num_pages=args.num_pages) \
+        if args.backend == "paged" else "dense"
+    configs = tuned_kernel_configs(cfg, args.slots, args.cache_len,
+                                   page_size=args.page_size,
+                                   num_pages=args.num_pages)
     engine = ServingEngine(
         model, slots=args.slots, cache_len=args.cache_len,
         prefill_step=make_prefill_step(model),
-        serve_step=make_serve_step(model), params=params,
-        prefill_extras=extras)
+        serve_step=make_serve_step(model, temperature=args.temperature,
+                                   troop_configs=configs),
+        params=params, prefill_extras=extras, backend=backend)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         engine.submit(Request(
             rid=i, prompt=rng.integers(1, min(cfg.vocab_size, 1000),
                                        int(rng.integers(4, 16))),
             max_new_tokens=args.max_new))
-    engine.run_until_drained()
-    print(f"served {args.requests} requests in {engine.steps} decode steps")
+    finished = engine.run_until_drained()
+    m = engine.metrics()
+    print(f"served {len(finished)}/{args.requests} requests in "
+          f"{engine.steps} decode steps "
+          f"({m['prefill_traces']} prefill compiles, "
+          f"backend={engine.backend.name})")
+    print(json.dumps(m, indent=1, default=str))
 
 
 if __name__ == "__main__":

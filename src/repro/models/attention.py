@@ -13,6 +13,7 @@ from jax.ad_checkpoint import checkpoint_name as _checkpoint_name
 
 from repro.core import partitioning as PT
 from repro.models import modules as M
+from repro.serve.kvcache import PagedKVCache, PageSpec  # noqa: F401 (re-export)
 
 
 class KVCache(NamedTuple):
@@ -220,8 +221,73 @@ def update_cache(cache_arr, new, pos):
                      out_specs=cspec, check_rep=False)(cache_arr, row, pos)
 
 
-def apply_attention_decode(p, cfg, x, cache: KVCache, pos, dtype):
+def update_paged_cache(pool, new, pos, block_tables):
+    """Paged cache write: route the new token row through the block table.
+
+    pool (P, page, KV, hd); new (B, 1, KV, hd); pos (B,); block_tables
+    (B, nblk).  Token ``pos`` of slot ``b`` lives at page
+    ``block_tables[b, pos // page]`` row ``pos % page`` — O(tokens) bytes,
+    no full-cache rewrite, and (unlike the dense scatter) the write lands in
+    a page that is physically disjoint from every other slot's pages.
+    """
+    page = pool.shape[1]
+    row = new[:, 0].astype(pool.dtype)
+    pid = jnp.take_along_axis(block_tables, (pos // page)[:, None],
+                              axis=1)[:, 0]
+    return pool.at[pid, pos % page].set(row, mode="drop")
+
+
+def gather_paged_kv(cache: PagedKVCache, block_tables):
+    """Dense logical view of a paged cache: (B, nblk*page, KV, hd).
+
+    Pure-jnp reference path (the oracle for the Pallas
+    ``paged_decode_attention`` kernel, which streams pages directly from the
+    pool without materializing this view).
+    """
+    B, nblk = block_tables.shape
+    page, KV, hd = cache.k_pool.shape[1:]
+    k = cache.k_pool[block_tables].reshape(B, nblk * page, KV, hd)
+    v = cache.v_pool[block_tables].reshape(B, nblk * page, KV, hd)
+    return k, v
+
+
+def apply_attention_decode_paged(p, cfg, x, cache: PagedKVCache, pos,
+                                 dtype, block_tables, use_kernel=False):
+    """Single-token decode against a paged cache (see serve.kvcache).
+
+    ``use_kernel``: attend through the tuned Pallas
+    ``kernels.paged_decode_attention`` (block-table gather inside the
+    kernel — the pool is streamed page by page, no dense copy).  Default is
+    the jnp reference path, which materializes the gathered logical view
+    (full-capacity traffic: fine as oracle / GSPMD path, not the
+    at-the-roofline stream — see DESIGN.md §4).
+    """
+    assert block_tables is not None, \
+        "paged caches need batch['block_tables'] in the decode batch"
+    B = x.shape[0]
+    q, k_new, v_new = _project_qkv(
+        p, cfg, x, x, pos[:, None], pos[:, None], dtype)
+    new_cache = PagedKVCache(
+        update_paged_cache(cache.k_pool, k_new, pos, block_tables),
+        update_paged_cache(cache.v_pool, v_new, pos, block_tables))
+    if use_kernel:
+        from repro.kernels import ops as KO   # lazy: keeps models jnp-only
+        out = KO.paged_decode_attention(      # dispatches via repro.tune
+            q[:, 0], new_cache.k_pool, new_cache.v_pool, block_tables,
+            pos + 1)[:, None]
+    else:
+        k, v = gather_paged_kv(new_cache, block_tables)
+        out = attend(q, k, v, causal=False, length=pos + 1, decode=True)
+    out = M.apply_dense(p["wo"], out.reshape(B, 1, -1), dtype)
+    return out, new_cache
+
+
+def apply_attention_decode(p, cfg, x, cache, pos, dtype, block_tables=None,
+                           use_kernel=False):
     """Single-token decode. ``pos``: (B,) current position; cache has fixed S."""
+    if isinstance(cache, PagedKVCache):
+        return apply_attention_decode_paged(p, cfg, x, cache, pos, dtype,
+                                            block_tables, use_kernel)
     B = x.shape[0]
     q, k_new, v_new = _project_qkv(
         p, cfg, x, x, pos[:, None], pos[:, None], dtype)
@@ -260,6 +326,13 @@ def cross_kv(p, cfg, enc_out, dtype) -> KVCache:
     k = M.apply_dense(p["wk"], enc_out, dtype).reshape(B, S, KV, hd)
     v = M.apply_dense(p["wv"], enc_out, dtype).reshape(B, S, KV, hd)
     return KVCache(k, v)
+
+
+def init_paged_cache(cfg, spec: PageSpec, dtype) -> PagedKVCache:
+    """Zeroed page pools for one attention sublayer (shared across slots)."""
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    shape = (spec.num_pages, spec.page_size, KV, hd)
+    return PagedKVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
 
 
 def init_cache(cfg, B: int, S: int, dtype, quantized: bool = False) -> KVCache:

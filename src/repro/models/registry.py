@@ -38,9 +38,12 @@ class Model:
     def decode_step(self, params, batch, caches):
         return T.decode_step(params, self.cfg, self.rt, batch, caches)
 
-    def init_caches(self, B, S, dtype=None):
+    def init_caches(self, B, S, dtype=None, page_spec=None):
+        """Decode caches; ``page_spec`` (serve.kvcache.PageSpec) switches
+        plain attention KV leaves to the shared paged layout."""
         dtype = dtype or jnp.dtype(self.cfg.dtype)
-        return T.init_caches(self.cfg, self.rt, B, S, dtype)
+        return T.init_caches(self.cfg, self.rt, B, S, dtype,
+                             page_spec=page_spec)
 
 
 def build_model(cfg, rt: RuntimeConfig = RuntimeConfig()) -> Model:

@@ -35,6 +35,9 @@ class RuntimeConfig:
     cache_dtype: str = "bfloat16"  # bf16 | int8 (quantized KV, §Perf)
     scan_layers: bool = True
     loss_chunk: int = 0            # 0 = unchunked softmax xent
+    paged_kernel_decode: bool = False  # paged decode via the tuned Pallas
+    #   kernel (no gathered dense view); default off: the jnp path is the
+    #   GSPMD-shardable reference (interpret-mode Pallas is slow on CPU)
 
 
 @dataclass(frozen=True)
@@ -138,7 +141,8 @@ def _zero_state(cfg, mixer, B, dtype):
 
 
 def _apply_sublayer(p, cfg, rt, x, *, mixer, ffn, positions, state, dtype,
-                    decode=False, pos=None, return_cache=False, enc_kv=None):
+                    decode=False, pos=None, return_cache=False, enc_kv=None,
+                    pages=None):
     """Returns (x, new_state_or_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     out_state = {}
@@ -150,8 +154,10 @@ def _apply_sublayer(p, cfg, rt, x, *, mixer, ffn, positions, state, dtype,
                 o, c = ML.apply_mla_decode(p["mixer"], cfg, h, state["mixer"],
                                            pos, dtype, rt.mla_decode)
             else:
-                o, c = A.apply_attention_decode(p["mixer"], cfg, h,
-                                                state["mixer"], pos, dtype)
+                o, c = A.apply_attention_decode(
+                    p["mixer"], cfg, h, state["mixer"], pos, dtype,
+                    block_tables=pages,
+                    use_kernel=rt.paged_kernel_decode)
             out_state["mixer"] = c
         else:
             if cfg.attention == "mla":
@@ -211,13 +217,14 @@ def _apply_sublayer(p, cfg, rt, x, *, mixer, ffn, positions, state, dtype,
 
 
 def _apply_repeat(ps, cfg, rt, x, *, pattern, positions, states, dtype,
-                  decode=False, pos=None, return_cache=False, enc_kv=None):
+                  decode=False, pos=None, return_cache=False, enc_kv=None,
+                  pages=None):
     new_states, aux = [], jnp.zeros((), jnp.float32)
     for p, (mixer, ffn), st in zip(ps, pattern, states):
         x, ns, a = _apply_sublayer(
             p, cfg, rt, x, mixer=mixer, ffn=ffn, positions=positions,
             state=st, dtype=dtype, decode=decode, pos=pos,
-            return_cache=return_cache, enc_kv=enc_kv)
+            return_cache=return_cache, enc_kv=enc_kv, pages=pages)
         new_states.append(ns)
         aux = aux + a
     return x, new_states, aux
@@ -225,7 +232,7 @@ def _apply_repeat(ps, cfg, rt, x, *, pattern, positions, states, dtype,
 
 def _run_groups(params_groups, groups, cfg, rt, x, *, positions, states,
                 dtype, decode=False, pos=None, return_cache=False,
-                enc_kv=None):
+                enc_kv=None, pages=None):
     """states: list (per group) of stacked per-repeat state lists."""
     out_states = []
     aux_total = jnp.zeros((), jnp.float32)
@@ -237,7 +244,8 @@ def _run_groups(params_groups, groups, cfg, rt, x, *, positions, states,
             return _apply_repeat(p_rep, cfg, rt, x, pattern=g.pattern,
                                  positions=positions, states=st_rep,
                                  dtype=dtype, decode=decode, pos=pos,
-                                 return_cache=return_cache, enc_kv=enc_kv)
+                                 return_cache=return_cache, enc_kv=enc_kv,
+                                 pages=pages)
 
         if rt.remat == "dots":
             body = jax.checkpoint(
@@ -351,8 +359,14 @@ def prefill(params, cfg, rt, batch):
     return readout(params, cfg, x, dtype), caches
 
 
-def init_caches(cfg, rt, B, S, dtype):
-    """Pre-allocated decode caches for every group/sublayer."""
+def init_caches(cfg, rt, B, S, dtype, page_spec=None):
+    """Pre-allocated decode caches for every group/sublayer.
+
+    With ``page_spec`` (a ``serve.kvcache.PageSpec``) plain attention KV
+    leaves become shared ``PagedKVCache`` page pools addressed by the
+    engine's block table; MLA, int8-quantized and cross-attention caches
+    keep the dense per-slot layout (documented fallback, DESIGN.md §4).
+    """
     groups = plan_groups(cfg)
     out = []
     for g in groups:
@@ -360,9 +374,12 @@ def init_caches(cfg, rt, B, S, dtype):
         for (m, f) in g.pattern:
             if m == "attn":
                 quant = rt.cache_dtype == "int8" and cfg.attention != "mla"
-                c = (ML.init_mla_cache(cfg, B, S, dtype)
-                     if cfg.attention == "mla"
-                     else A.init_cache(cfg, B, S, dtype, quantized=quant))
+                if cfg.attention == "mla":
+                    c = ML.init_mla_cache(cfg, B, S, dtype)
+                elif page_spec is not None and not quant:
+                    c = A.init_paged_cache(cfg, page_spec, dtype)
+                else:
+                    c = A.init_cache(cfg, B, S, dtype, quantized=quant)
                 entry = {"mixer": c}
                 if cfg.encoder_decoder:
                     entry["xkv"] = A.init_cache(
@@ -379,7 +396,8 @@ def init_caches(cfg, rt, B, S, dtype):
 
 
 def decode_step(params, cfg, rt, batch, caches):
-    """batch: tokens (B,1), pos (B,). Returns (logits (B,1,V), new caches)."""
+    """batch: tokens (B,1), pos (B,) [+ block_tables (B,nblk) when the cache
+    is paged]. Returns (logits (B,1,V), new caches)."""
     dtype = jnp.dtype(cfg.dtype)
     groups = plan_groups(cfg)
     pos = batch["pos"]
@@ -387,5 +405,5 @@ def decode_step(params, cfg, rt, batch, caches):
     x, new_caches, _ = _run_groups(
         params["groups"], groups, cfg, rt, x, positions=pos[:, None],
         states=caches, dtype=dtype, decode=True, pos=pos,
-        enc_kv=batch.get("enc_kv"))
+        enc_kv=batch.get("enc_kv"), pages=batch.get("block_tables"))
     return readout(params, cfg, x, dtype), new_caches

@@ -1,6 +1,12 @@
+from repro.serve.kvcache import (BlockAllocator, CacheBackend, DenseBackend,
+                                 PagedBackend, PagedKVCache, PageSpec,
+                                 bucket_length, make_backend)
 from repro.serve.scheduler import Request, ServingEngine, splice_cache
 from repro.serve.step import (make_prefill_step, make_serve_step,
-                              tuned_kernel_configs)
+                              sample_keys, tuned_kernel_configs)
 
 __all__ = ["Request", "ServingEngine", "splice_cache",
-           "make_prefill_step", "make_serve_step", "tuned_kernel_configs"]
+           "BlockAllocator", "CacheBackend", "DenseBackend", "PagedBackend",
+           "PagedKVCache", "PageSpec", "bucket_length", "make_backend",
+           "make_prefill_step", "make_serve_step", "sample_keys",
+           "tuned_kernel_configs"]

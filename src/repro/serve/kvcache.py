@@ -1,0 +1,396 @@
+"""Paged KV-cache subsystem: page pool + block tables behind ``CacheBackend``.
+
+The paper's decode workload streams the KV cache at OI~=1; every wasted byte
+moves the roofline bound itself.  A dense per-slot cache of capacity S wastes
+``(S - len) / S`` of its traffic-eligible bytes on padding.  This module
+stores KV in fixed-size *pages* (a shared pool per layer) with per-slot
+*block tables* mapping logical block -> physical page — the software analog
+of TROOP mechanisms (D)/(E): pages are hardware-aligned layout granules
+(``core.troop.sublane``), physically disjoint by construction, so the
+decoupled streams of the paged decode kernel read conflict-free contiguous
+regions regardless of how slots come and go.
+
+Two backends implement one protocol:
+
+  * ``DenseBackend``  — the original layout: per-slot dense caches,
+    admission splices prefill rows with pad + dynamic_update_slice.
+  * ``PagedBackend``  — page pool + host-side ``BlockAllocator``; admission
+    scatters prefill KV into freshly allocated pages and frees them when the
+    request finishes (no splicing, no padding traffic).
+
+The engine (``serve.scheduler``) talks only to the protocol; the model
+(``models.attention``) recognizes ``PagedKVCache`` leaves and routes decode
+reads/writes through the block table it receives in the step batch.
+
+Kept import-light on purpose: no top-level ``repro.models`` import (models
+import this module for the ``PagedKVCache`` leaf type).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, NamedTuple, Optional, Protocol
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.troop import sublane
+
+NULL_PAGE = 0          # page 0 is never allocated: idle slots point here
+
+
+class PagedKVCache(NamedTuple):
+    """Paged KV leaf: page pools, indexed by a per-slot block table.
+
+    ``k_pool``/``v_pool``: (P, page, KV, hd) — or (L, P, page, KV, hd) when
+    the layer group is stacked for ``lax.scan``.  The block table is *not*
+    part of the leaf: it is per-step input (``batch["block_tables"]``), while
+    the pools are per-step state — one table addresses every layer's pool.
+    """
+    k_pool: jax.Array
+    v_pool: jax.Array
+
+    @property
+    def page_size(self) -> int:
+        return self.k_pool.shape[-3]
+
+    @property
+    def num_pages(self) -> int:
+        return self.k_pool.shape[-4]
+
+
+@dataclass(frozen=True)
+class PageSpec:
+    """Static paging geometry for one engine."""
+    page_size: int            # tokens per page (a troop layout granule)
+    num_pages: int            # physical pages per layer pool (incl. null)
+    blocks_per_slot: int      # logical blocks per slot (= ceil(S / page))
+
+    def validate(self, dtype="bfloat16"):
+        g = sublane(dtype)
+        assert self.page_size % g == 0, \
+            f"page_size {self.page_size} not a multiple of the " \
+            f"{g}-row layout granule for {dtype} (mechanism D)"
+        assert self.num_pages > NULL_PAGE + 1
+        return self
+
+    @staticmethod
+    def for_engine(slots: int, cache_len: int, page_size: int,
+                   num_pages: Optional[int] = None,
+                   dtype="bfloat16") -> "PageSpec":
+        blocks = -(-cache_len // page_size)
+        pages = num_pages if num_pages is not None else slots * blocks + 1
+        return PageSpec(page_size, pages, blocks).validate(dtype)
+
+
+class BlockAllocator:
+    """Host-side free list over physical pages [1, num_pages)."""
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self._free: List[int] = list(range(num_pages - 1, NULL_PAGE, -1))
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        if n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, pages: List[int]):
+        for p in pages:
+            assert p != NULL_PAGE
+            self._free.append(p)
+
+
+# --------------------------------------------------------------------------
+# Tree splicing helpers (shared by both backends)
+# --------------------------------------------------------------------------
+def _batch_dim(dst_shape, src_shape, slots):
+    """Batch dim for a B=1 splice: where dst == slots and src == 1 (prefer
+    dim 1: stacked layer caches are (layers, B, ...))."""
+    for d in (1, 0):
+        if len(dst_shape) > d and dst_shape[d] == slots \
+                and src_shape[d] == 1:
+            return d
+    raise ValueError(f"cannot locate batch dim: {dst_shape} vs {src_shape}")
+
+
+def splice_row(dst, src, row: int, slot: int, slots: int,
+               axis: Optional[int] = None):
+    """Insert row ``row`` of a batched prefill array into slot ``slot`` of a
+    batch-cache array, padding trailing (sequence) dims up to dst size.
+
+    ``axis`` is the leaf's slot axis (from ``slot_axes`` — exact, no shape
+    guessing); without it, fall back to the B=1 heuristic (compat shim).
+    """
+    bi = _batch_dim(dst.shape, src.shape, slots) if axis is None else axis
+    if bi < 0:
+        return dst                 # slot-independent leaf (shared pool)
+    src = jax.lax.index_in_dim(src, row, axis=bi, keepdims=True)
+    src = src.astype(dst.dtype)
+    pads = []
+    for d in range(src.ndim):
+        tgt = 1 if d == bi else dst.shape[d]
+        pads.append((0, tgt - src.shape[d]))
+    src = jnp.pad(src, pads)
+    start = [0] * dst.ndim
+    start[bi] = slot
+    return jax.lax.dynamic_update_slice(dst, src, tuple(start))
+
+
+def slot_axes(model, slots: int, cache_len: int, page_spec=None):
+    """Per-leaf slot axis of the cache tree, derived structurally: diff the
+    ``eval_shape`` of ``init_caches`` at two slot counts — the axis whose
+    extent changes is the slot axis (-1: slot-independent, e.g. a shared
+    page pool).  No allocation, no shape heuristics — a state leaf whose
+    head/seq extent happens to equal ``slots`` cannot be misidentified."""
+    a = jax.eval_shape(
+        lambda: model.init_caches(slots, cache_len, page_spec=page_spec))
+    b = jax.eval_shape(
+        lambda: model.init_caches(slots + 1, cache_len, page_spec=page_spec))
+
+    def axis(x, y):
+        for d, (p, q) in enumerate(zip(x.shape, y.shape)):
+            if p != q:
+                return d
+        return -1
+
+    return jax.tree.map(axis, a, b)
+
+
+def _is_paged(x) -> bool:
+    return isinstance(x, PagedKVCache)
+
+
+def _pool_scatter(pool, rows, pages: List[int]):
+    """Write prefill KV rows into allocated pages of one pool leaf.
+
+    pool: (P, page, KV, hd) or (L, P, page, KV, hd) when the layer group is
+    stacked; rows: (T, KV, hd) / (L, T, KV, hd) correspondingly — padded or
+    truncated to exactly fill the pages.
+    """
+    stacked = pool.ndim == 5
+    t_axis = 1 if stacked else 0
+    page = pool.shape[t_axis + 1]
+    need = len(pages) * page
+    T = rows.shape[t_axis]
+    if T < need:
+        pads = [(0, 0)] * rows.ndim
+        pads[t_axis] = (0, need - T)
+        rows = jnp.pad(rows, pads)
+    elif T > need:
+        rows = jax.lax.slice_in_dim(rows, 0, need, axis=t_axis)
+    shp = (rows.shape[:t_axis] + (len(pages), page) + rows.shape[t_axis + 1:])
+    buf = rows.reshape(shp).astype(pool.dtype)
+    idx = jnp.asarray(pages, jnp.int32)
+    if stacked:
+        return pool.at[:, idx].set(buf)
+    return pool.at[idx].set(buf)
+
+
+# --------------------------------------------------------------------------
+# Backends
+# --------------------------------------------------------------------------
+class CacheBackend(Protocol):
+    """What the serving engine needs from a cache layout."""
+
+    name: str
+
+    def init_caches(self, model, slots: int, cache_len: int): ...
+
+    def check_admissible(self, tokens: int):
+        """Raise if a request needing ``tokens`` rows can NEVER be admitted
+        (backpressure must not degenerate into a silent drop)."""
+        ...
+
+    def reserve(self, slot: int, tokens: int) -> bool:
+        """Claim capacity for ``tokens`` total rows in ``slot``; False if
+        the backing store is exhausted (engine defers admission)."""
+        ...
+
+    def admit(self, caches, prefill_caches, *, row: int, slot: int,
+              prompt_len: int):
+        """Move row ``row`` of a batched-prefill cache into ``slot``."""
+        ...
+
+    def release(self, slot: int):
+        """Return ``slot``'s capacity to the pool (request finished)."""
+        ...
+
+    def batch_extras(self) -> Dict[str, Any]:
+        """Extra decode-batch entries (e.g. the block table)."""
+        ...
+
+    def stats(self) -> Dict[str, Any]: ...
+
+
+class DenseBackend:
+    """The original layout: per-slot dense caches of capacity ``cache_len``."""
+
+    name = "dense"
+
+    def __init__(self):
+        self.slots = 0
+
+    def init_caches(self, model, slots: int, cache_len: int):
+        self.slots = slots
+        self.cache_len = cache_len
+        self._axes = slot_axes(model, slots, cache_len)
+        return model.init_caches(slots, cache_len)
+
+    def check_admissible(self, tokens: int):
+        pass
+
+    def reserve(self, slot: int, tokens: int) -> bool:
+        return True
+
+    def admit(self, caches, prefill_caches, *, row: int, slot: int,
+              prompt_len: int):
+        return jax.tree.map(
+            lambda dst, src, ax: splice_row(dst, src, row, slot, self.slots,
+                                            axis=ax),
+            caches, prefill_caches, self._axes)
+
+    def release(self, slot: int):
+        pass
+
+    def batch_extras(self) -> Dict[str, Any]:
+        return {}
+
+    def stats(self) -> Dict[str, Any]:
+        return {"backend": self.name, "cache_tokens": self.slots *
+                getattr(self, "cache_len", 0)}
+
+
+class PagedBackend:
+    """Page pool + block tables; pages are troop layout granules.
+
+    ``num_pages=None`` sizes the pool for full occupancy (capacity parity
+    with dense); smaller values overcommit HBM — admission then *defers*
+    when the pool is exhausted instead of OOMing, exactly like a production
+    engine under memory pressure.
+    """
+
+    name = "paged"
+
+    def __init__(self, page_size: int = 16,
+                 num_pages: Optional[int] = None):
+        self.page_size = page_size
+        self.num_pages = num_pages
+        self.spec: Optional[PageSpec] = None
+
+    def init_caches(self, model, slots: int, cache_len: int):
+        dtype = jnp.dtype(model.cfg.dtype)
+        self.slots = slots
+        self.cache_len = cache_len
+        self.spec = PageSpec.for_engine(slots, cache_len, self.page_size,
+                                        self.num_pages, dtype)
+        self.allocator = BlockAllocator(self.spec.num_pages)
+        self.block_tables = np.full(
+            (slots, self.spec.blocks_per_slot), NULL_PAGE, np.int32)
+        self._slot_pages: Dict[int, List[int]] = {}
+        self._axes = slot_axes(model, slots, cache_len, page_spec=self.spec)
+        return model.init_caches(slots, cache_len, page_spec=self.spec)
+
+    def _pages_needed(self, tokens: int) -> int:
+        return -(-min(tokens, self.cache_len) // self.spec.page_size)
+
+    def check_admissible(self, tokens: int):
+        """Raised at submit time — before anything is popped or reserved —
+        so an impossible request never strands queue entries or pages."""
+        need = self._pages_needed(tokens)
+        if need > self.spec.num_pages - 1:
+            raise ValueError(
+                f"request needs {need} pages but the pool holds "
+                f"{self.spec.num_pages - 1}: it can never be admitted — "
+                f"raise num_pages or lower prompt_len + max_new_tokens")
+
+    def reserve(self, slot: int, tokens: int) -> bool:
+        pages = self.allocator.alloc(self._pages_needed(tokens))
+        if pages is None:
+            return False
+        self._slot_pages[slot] = pages
+        self.block_tables[slot] = NULL_PAGE
+        self.block_tables[slot, :len(pages)] = pages
+        return True
+
+    def admit(self, caches, prefill_caches, *, row: int, slot: int,
+              prompt_len: int):
+        pages = self._slot_pages[slot]
+        page = self.spec.page_size
+        n_prefill = -(-prompt_len // page)
+
+        def one(dst, src):
+            if _is_paged(dst):
+                # src is the dense prefill KVCache for this sublayer;
+                # its batch axis is 0 (unstacked) or 1 (stacked layers)
+                b_axis = 0 if dst.k_pool.ndim == 4 else 1
+                k_rows = jax.lax.index_in_dim(
+                    src.k, row, axis=b_axis, keepdims=False)
+                v_rows = jax.lax.index_in_dim(
+                    src.v, row, axis=b_axis, keepdims=False)
+                use = pages[:n_prefill]
+                return PagedKVCache(
+                    _pool_scatter(dst.k_pool, k_rows, use),
+                    _pool_scatter(dst.v_pool, v_rows, use))
+            return dst
+
+        # paged leaves first (is_leaf stops recursion there), then the
+        # remaining dense leaves (mamba/rwkv state, MLA, cross-attn KV,
+        # int8 scales) take the dense splice path along their slot axis.
+        caches = jax.tree.map(one, caches, prefill_caches, is_leaf=_is_paged)
+
+        def dense(dst, src, ax):
+            if _is_paged(dst):
+                return dst
+            return splice_row(dst, src, row, slot, self.slots, axis=ax)
+
+        return jax.tree.map(dense, caches, prefill_caches, self._axes,
+                            is_leaf=_is_paged)
+
+    def release(self, slot: int):
+        pages = self._slot_pages.pop(slot, None)
+        if pages:
+            self.allocator.free(pages)
+        self.block_tables[slot] = NULL_PAGE
+
+    def batch_extras(self) -> Dict[str, Any]:
+        return {"block_tables": jnp.asarray(self.block_tables)}
+
+    def stats(self) -> Dict[str, Any]:
+        sp = self.spec
+        return {
+            "backend": self.name,
+            "page_size": sp.page_size if sp else self.page_size,
+            "num_pages": sp.num_pages if sp else self.num_pages,
+            "pages_free": self.allocator.num_free if sp else None,
+            "pages_in_use": (sp.num_pages - 1 - self.allocator.num_free)
+            if sp else None,
+        }
+
+
+def make_backend(backend) -> CacheBackend:
+    """'dense' | 'paged' | an instance -> a CacheBackend instance."""
+    if backend is None:
+        return DenseBackend()
+    if isinstance(backend, str):
+        if backend == "dense":
+            return DenseBackend()
+        if backend == "paged":
+            return PagedBackend()
+        raise ValueError(f"unknown cache backend {backend!r}")
+    return backend
+
+
+def bucket_length(n: int, min_bucket: int = 8,
+                  cap: Optional[int] = None) -> int:
+    """Power-of-2 prefill bucket for a prompt of length ``n`` — one XLA
+    prefill compile per bucket, ever (the recompile-free admission path)."""
+    b = max(min_bucket, 1 << max(0, math.ceil(math.log2(max(n, 1)))))
+    if cap is not None:
+        b = min(b, cap)
+    return b

@@ -1,20 +1,30 @@
-"""Continuous-batching serving engine (slot-based, decode-centric).
+"""Continuous-batching serving engine (paged KV, bucketed batched prefill).
 
 The decode step — the paper's workload — runs every cycle over all active
-slots; finished/empty slots admit queued requests, whose prefill output is
-spliced into the batch cache at the slot index.  Pure host-side control
+slots.  Admission is *recompile-free*: queued prompts are padded to
+power-of-2 length buckets and prefilled together in one fixed-size batch, so
+XLA compiles at most one prefill executable per bucket, ever (the seed
+engine compiled once per distinct prompt length at B=1).  Cache placement
+goes through a ``CacheBackend`` (``serve.kvcache``): the paged backend
+allocates block-table pages per request and frees them on finish — no
+host-side ``jnp.pad`` + ``dynamic_update_slice`` splicing over the whole
+tree, and no padding bytes in the decode stream.  Pure host-side control
 around two jitted functions (prefill_step, serve_step), as production
 engines do.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.serve.kvcache import (CacheBackend, bucket_length, make_backend,
+                                 splice_row)
 
 
 @dataclasses.dataclass
@@ -24,40 +34,37 @@ class Request:
     max_new_tokens: int = 16
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # lifecycle metadata (filled by the engine)
+    submit_step: int = -1
+    admit_step: int = -1
+    finish_step: int = -1
 
-
-def _batch_dim(dst_shape, src_shape, slots):
-    """Batch dim: where dst == slots and src == 1 (prefer dim 1: stacked
-    layer caches are (layers, B, ...))."""
-    for d in (1, 0):
-        if len(dst_shape) > d and dst_shape[d] == slots \
-                and src_shape[d] == 1:
-            return d
-    raise ValueError(f"cannot locate batch dim: {dst_shape} vs {src_shape}")
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
 
 
 def splice_cache(batch_cache, one_cache, slot: int, slots: int):
-    """Insert a B=1 prefill cache into slot ``slot`` of the batch cache,
-    padding the sequence dim (prompt len -> cache capacity)."""
-    def one(dst, src):
-        bi = _batch_dim(dst.shape, src.shape, slots)
-        src = src.astype(dst.dtype)
-        # pad every dim after bi up to dst size (seq dims)
-        pads = []
-        for d in range(src.ndim):
-            tgt = 1 if d == bi else dst.shape[d]
-            pads.append((0, tgt - src.shape[d]))
-        src = jnp.pad(src, pads)
-        start = [0] * dst.ndim
-        start[bi] = slot
-        return jax.lax.dynamic_update_slice(dst, src, tuple(start))
-    return jax.tree.map(one, batch_cache, one_cache)
+    """Insert a B=1 prefill cache into slot ``slot`` of the batch cache
+    (compat shim over ``kvcache.splice_row``; the engine itself splices
+    through its ``CacheBackend``)."""
+    return jax.tree.map(
+        lambda dst, src: splice_row(dst, src, 0, slot, slots),
+        batch_cache, one_cache)
 
 
 class ServingEngine:
+    """Slot-based continuous batching over a pluggable cache backend.
+
+    ``backend``: 'dense' (default, the original layout), 'paged', or a
+    ``CacheBackend`` instance.  ``prefill_batch`` admissions share one
+    bucketed prefill call; ``min_bucket`` is the smallest prompt bucket.
+    """
+
     def __init__(self, model, *, slots: int, cache_len: int,
                  prefill_step, serve_step, params, stop_token: int = -1,
-                 prefill_extras=None):
+                 prefill_extras=None, backend=None,
+                 prefill_batch: Optional[int] = None, min_bucket: int = 8):
         """``prefill_extras(req) -> dict``: extra prefill batch entries
         (modality frontend stubs for enc-dec / VLM archs)."""
         self.model = model
@@ -65,67 +72,212 @@ class ServingEngine:
         self.cache_len = cache_len
         self.params = params
         self.prefill_extras = prefill_extras
-        self.prefill_step = jax.jit(prefill_step)
+        self.backend: CacheBackend = make_backend(backend)
+        self.prefill_batch = prefill_batch or min(slots, 4)
+        self.min_bucket = min(min_bucket, cache_len)
+        # frontend tokens prepended to the decoder sequence (VLM archs)
+        self._front = model.cfg.frontend_tokens \
+            if getattr(model.cfg, "frontend", None) == "vision" else 0
+        # right-padding a prompt is exact only for causal attention: a
+        # recurrent mixer (mamba/rwkv) scans THROUGH pad tokens and hands
+        # decode a polluted state — those archs prefill at exact length
+        # (same-length prompts still batch; compiles are per length, as in
+        # the seed engine, instead of per bucket)
+        self._exact_prefill = any(
+            m != "attn" for (m, f) in model.cfg.layer_kinds())
+
+        self._prefill_traces = 0
+
+        def counted_prefill(params, batch):
+            self._prefill_traces += 1      # runs at trace time only
+            return prefill_step(params, batch)
+
+        self.prefill_step = jax.jit(counted_prefill)
         self.serve_step = jax.jit(serve_step, donate_argnums=(2,))
-        self.caches = model.init_caches(slots, cache_len)
+        self.caches = self.backend.init_caches(model, slots, cache_len)
         self.active: Dict[int, Optional[Request]] = {
             i: None for i in range(slots)}
         self.pos = np.zeros((slots,), np.int32)
         self.last_tok = np.zeros((slots,), np.int32)
+        # per-admission nonce: a request reusing a slot must not replay its
+        # predecessor's sampling randomness at equal positions
+        self._nonce = np.zeros((slots,), np.int32)
         self.queue: deque = deque()
         self.stop_token = stop_token
         self.steps = 0
+        # ------------------------------------------------------- metrics
+        self.tokens_generated = 0
+        self.requests_admitted = 0
+        self.requests_finished = 0
+        self.prefill_calls = 0
+        self.prefill_s = 0.0
+        self.decode_s = 0.0
+
+    @property
+    def prefill_traces(self) -> int:
+        """Prefill executables compiled so far (== distinct buckets used)."""
+        return self._prefill_traces
 
     # -------------------------------------------------------------- admit
     def submit(self, req: Request):
+        # impossible requests fail HERE, loudly — once queued, a request is
+        # only ever deferred (transient pool pressure), never dropped
+        rows = self._front + req.prompt_len
+        if rows >= self.cache_len:
+            raise ValueError(
+                f"prompt needs {rows} cache rows (incl. frontend) but "
+                f"cache_len is {self.cache_len}")
+        self.backend.check_admissible(rows + req.max_new_tokens)
+        req.submit_step = self.steps
         self.queue.append(req)
 
-    def _admit(self):
-        for slot, occupant in self.active.items():
-            if occupant is not None or not self.queue:
-                continue
-            req = self.queue.popleft()
-            batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
-            if self.prefill_extras is not None:
-                batch.update(self.prefill_extras(req))
-            next_tok, cache1 = self.prefill_step(self.params, batch)
-            self.caches = splice_cache(self.caches, cache1, slot, self.slots)
+    def _free_slots(self) -> List[int]:
+        return [s for s, r in self.active.items() if r is None]
+
+    def _admit_group(self, group, slots_for):
+        """One bucketed batched prefill for ``group`` (list of Requests)."""
+        if self._exact_prefill:
+            bucket = group[0].prompt_len       # group is same-length
+        else:
+            bucket = max(bucket_length(r.prompt_len, self.min_bucket,
+                                       self.cache_len) for r in group)
+        Bp = self.prefill_batch
+        tokens = np.zeros((Bp, bucket), np.int32)
+        lengths = np.ones((Bp,), np.int32)
+        for i, req in enumerate(group):
+            tokens[i, :req.prompt_len] = req.prompt
+            lengths[i] = self._front + req.prompt_len
+        batch = {"tokens": jnp.asarray(tokens),
+                 "length": jnp.asarray(lengths)}
+        if self.prefill_extras is not None:
+            extras: Dict[str, Any] = {}
+            per_req = [self.prefill_extras(r) for r in group]
+            for k in per_req[0]:
+                rows = [e[k] for e in per_req]
+                rows += [rows[-1]] * (Bp - len(rows))   # pad batch rows
+                extras[k] = jnp.concatenate(rows, axis=0)
+            batch.update(extras)
+
+        t0 = time.perf_counter()
+        next_tok, prefill_caches = self.prefill_step(self.params, batch)
+        next_tok = np.asarray(next_tok)
+        self.prefill_calls += 1
+
+        for i, req in enumerate(group):
+            slot = slots_for[i]
+            plen = self._front + req.prompt_len
+            self.caches = self.backend.admit(
+                self.caches, prefill_caches, row=i, slot=slot,
+                prompt_len=plen)
             self.active[slot] = req
-            self.pos[slot] = len(req.prompt)
-            tok = int(np.asarray(next_tok)[0, 0])
+            req.admit_step = self.steps
+            self.requests_admitted += 1
+            self._nonce[slot] = self.requests_admitted
+            self.pos[slot] = plen
+            tok = int(next_tok[i])
             req.out.append(tok)
+            self.tokens_generated += 1
             self.last_tok[slot] = tok
+        self.prefill_s += time.perf_counter() - t0
+
+    def _admit(self):
+        """Admit as many queued requests as slots + cache capacity allow
+        (possibly several bucketed prefill calls)."""
+        while self.queue:
+            free = self._free_slots()
+            if not free:
+                return
+            group, slots_for = [], []
+            while (self.queue and free
+                   and len(group) < self.prefill_batch):
+                req = self.queue[0]
+                if self._exact_prefill and group \
+                        and req.prompt_len != group[0].prompt_len:
+                    break                      # exact-length groups only
+                slot = free[0]
+                need = self._front + req.prompt_len + req.max_new_tokens
+                if not self.backend.reserve(slot, need):
+                    break                  # pool exhausted: defer admission
+                self.queue.popleft()
+                free.pop(0)
+                group.append(req)
+                slots_for.append(slot)
+            if not group:
+                return
+            self._admit_group(group, slots_for)
 
     # -------------------------------------------------------------- decode
-    def step(self):
+    def step(self) -> Optional[List[Request]]:
+        """One engine cycle: admit, then decode every active slot.
+
+        Returns the requests that finished this cycle, or ``None`` when the
+        engine is idle (nothing active after admission).
+        """
         self._admit()
         if not any(r is not None for r in self.active.values()):
-            return False
+            return None
         batch = {"tokens": jnp.asarray(self.last_tok[:, None]),
-                 "pos": jnp.asarray(self.pos)}
+                 "pos": jnp.asarray(self.pos),
+                 "sample_nonce": jnp.asarray(self._nonce)}
+        batch.update(self.backend.batch_extras())
+        t0 = time.perf_counter()
         next_tok, self.caches = self.serve_step(
             self.params, batch, self.caches)
         toks = np.asarray(next_tok)[:, 0]
+        self.decode_s += time.perf_counter() - t0
+        finished: List[Request] = []
         for slot, req in self.active.items():
             if req is None:
                 continue
             tok = int(toks[slot])
             req.out.append(tok)
+            self.tokens_generated += 1
             self.last_tok[slot] = tok
             self.pos[slot] += 1
             if len(req.out) >= req.max_new_tokens or tok == self.stop_token \
                     or self.pos[slot] >= self.cache_len - 1:
                 req.done = True
+                req.finish_step = self.steps
                 self.active[slot] = None
+                self.backend.release(slot)
+                self.requests_finished += 1
+                finished.append(req)
         self.steps += 1
-        return True
+        return finished
 
-    def run_until_drained(self, max_steps: int = 10_000):
-        finished = []
+    def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
+        """Run until queue + slots are empty (or ``max_steps`` decode steps
+        have run *in this call* — a long-lived engine keeps serving across
+        calls); returns every request that finished during the run."""
+        finished: List[Request] = []
+        start = self.steps
         while (self.queue or any(r is not None
                                  for r in self.active.values())):
-            if not self.step():
+            if self.steps - start >= max_steps:
                 break
-            if self.steps > max_steps:
+            out = self.step()
+            if out is None:
                 break
-        return self.steps
+            finished.extend(out)
+        return finished
+
+    # ------------------------------------------------------------- metrics
+    def metrics(self) -> Dict[str, Any]:
+        """Engine throughput/latency counters + backend occupancy."""
+        m = {
+            "decode_steps": self.steps,
+            "tokens_generated": self.tokens_generated,
+            "requests_admitted": self.requests_admitted,
+            "requests_finished": self.requests_finished,
+            "prefill_calls": self.prefill_calls,
+            "prefill_traces": self.prefill_traces,
+            "prefill_s": self.prefill_s,
+            "decode_s": self.decode_s,
+            "decode_steps_per_s": (self.steps / self.decode_s
+                                   if self.decode_s else 0.0),
+            "tokens_per_s": (self.tokens_generated
+                             / (self.decode_s + self.prefill_s)
+                             if self.decode_s + self.prefill_s else 0.0),
+        }
+        m.update(self.backend.stats())
+        return m

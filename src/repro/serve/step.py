@@ -2,7 +2,13 @@
 
 serve_step is the paper's workload: one new token against a KV cache — every
 matmul a GEMV-class memory-bound op.  Greedy sampling keeps the step a pure
-function (temperature sampling threads an rng key).
+function (temperature sampling derives a per-(slot, position) key so samples
+are independent across the batch).
+
+prefill_step is *bucketed*: it takes a fixed-size batch of right-padded
+prompts plus their valid lengths and reads each row's next token at
+``length - 1`` — so the engine compiles one prefill executable per length
+bucket instead of one per distinct prompt length.
 
 ``tuned_kernel_configs`` resolves the best-known TroopConfigs for the decode
 hot kernels at the serving shapes (from the persistent tune cache, heuristic
@@ -16,14 +22,20 @@ import jax.numpy as jnp
 
 
 def tuned_kernel_configs(model_cfg, batch_size: int, max_seq: int,
-                         dtype=jnp.bfloat16):
+                         dtype=jnp.bfloat16, page_size: int = 16,
+                         num_pages=None):
     """TroopConfigs for the decode-path kernels at the serving shapes.
 
     Pure shape-level lookup (ShapeDtypeStruct placeholders — nothing is
-    allocated or traced): decode attention over the KV cache and the
-    GEMV-class readout projection.
+    allocated or traced): decode attention over the KV cache (dense and
+    paged layouts) and the GEMV-class readout projection.  The paged pool
+    geometry comes from ``PageSpec.for_engine`` — the same formula the
+    engine allocates with — so the tuned-config key always matches the
+    pool the engine will actually run (pass ``num_pages`` when
+    overcommitting).
     """
     import repro.kernels  # noqa: F401  (populates the tune registry)
+    from repro.serve.kvcache import PageSpec
     from repro.tune import get_tuned
 
     sds = jax.ShapeDtypeStruct
@@ -31,11 +43,19 @@ def tuned_kernel_configs(model_cfg, batch_size: int, max_seq: int,
     KV, hd, H = (model_cfg.num_kv_heads, model_cfg.head_dim,
                  model_cfg.num_heads)
     d, V = model_cfg.d_model, model_cfg.vocab_size
+    spec = PageSpec.for_engine(B, S, page_size, num_pages, jnp.dtype(dtype))
+    P, nblk = spec.num_pages, spec.blocks_per_slot
     return {
         "decode_attention": get_tuned(
             "decode_attention",
             sds((B, H, hd), dtype), sds((B, S, KV, hd), dtype),
             sds((B, S, KV, hd), dtype), sds((B,), jnp.int32)),
+        "paged_decode_attention": get_tuned(
+            "paged_decode_attention",
+            sds((B, H, hd), dtype),
+            sds((P, page_size, KV, hd), dtype),
+            sds((P, page_size, KV, hd), dtype),
+            sds((B, nblk), jnp.int32), sds((B,), jnp.int32)),
         "gemv": get_tuned("gemv", sds((V, d), dtype), sds((d,), dtype)),
         "rmsnorm": get_tuned("rmsnorm", sds((B, d), dtype),
                              sds((d,), jnp.float32)),
@@ -43,23 +63,54 @@ def tuned_kernel_configs(model_cfg, batch_size: int, max_seq: int,
 
 
 def make_prefill_step(model):
+    """Bucketed batched prefill: batch = {tokens (Bp, L) right-padded,
+    length (Bp,) valid rows incl. any frontend prefix} -> (next_tok (Bp,),
+    caches).  Without ``length`` the last position is read (B=1 compat)."""
     def prefill_step(params, batch):
-        logits, caches = model.prefill(params, batch)
-        next_tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
-        return next_tok, caches
+        length = batch.get("length")
+        feed = {k: v for k, v in batch.items() if k != "length"}
+        logits, caches = model.prefill(params, feed)
+        if length is None:
+            next_tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
+            return next_tok.astype(jnp.int32), caches
+        # gather each row's last valid position first: O(Bp*V) argmax
+        # instead of O(Bp*L*V) over positions that are then discarded
+        last = jnp.take_along_axis(
+            logits, (length - 1)[:, None, None], axis=1)[:, 0]   # (Bp, V)
+        next_tok = jnp.argmax(last, axis=-1)
+        return next_tok.astype(jnp.int32), caches
     return prefill_step
 
 
-def make_serve_step(model, *, temperature: float = 0.0,
+def sample_keys(pos, batch_size: int, seed: int = 0, nonce=None):
+    """Per-(request, slot, position) sampling keys: fold the slot index,
+    the row's position, and a per-admission ``nonce`` into one base key, so
+    no two slots, no two steps of one slot, and no two requests reusing a
+    slot ever share a key (the seed engine folded only ``pos[0]``, giving
+    every slot the same key each step: correlated samples — and without
+    the nonce, a request re-admitted to the same slot would replay its
+    predecessor's randomness position for position)."""
+    base = jax.random.PRNGKey(seed)
+    keys = jax.vmap(jax.random.fold_in, (None, 0))(
+        base, jnp.arange(batch_size))
+    keys = jax.vmap(jax.random.fold_in)(keys, pos)
+    if nonce is not None:
+        keys = jax.vmap(jax.random.fold_in)(keys, nonce)
+    return keys
+
+
+def make_serve_step(model, *, temperature: float = 0.0, seed: int = 0,
                     troop_configs=None):
     """``troop_configs`` (from ``tuned_kernel_configs``) is attached to the
     returned step for kernel-backed decode paths and introspection."""
     def serve_step(params, batch, caches):
         logits, caches = model.decode_step(params, batch, caches)
         if temperature > 0:
-            key = jax.random.fold_in(jax.random.PRNGKey(0), batch["pos"][0])
-            next_tok = jax.random.categorical(
-                key, logits[:, -1, :] / temperature)[:, None].astype(jnp.int32)
+            keys = sample_keys(batch["pos"], batch["pos"].shape[0], seed,
+                               nonce=batch.get("sample_nonce"))
+            next_tok = jax.vmap(
+                lambda k, row: jax.random.categorical(k, row / temperature)
+            )(keys, logits[:, -1, :])[:, None].astype(jnp.int32)
         else:
             next_tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
         return next_tok, caches

@@ -91,6 +91,38 @@ def test_decode_attention(B, H, KV, hd, S, dt):
         np.testing.assert_allclose(got, want, **tol(dt))
 
 
+@pytest.mark.parametrize("B,H,KV,hd,page,nblk", [
+    (2, 8, 8, 64, 16, 8), (2, 8, 2, 64, 32, 4), (1, 16, 4, 128, 16, 3),
+])
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_attention(B, H, KV, hd, page, nblk, dt):
+    """Block-table gather == dense flash-decode (incl. odd-nblk fallback)."""
+    P = 1 + B * nblk
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, hd), dt)
+    k_pool = jax.random.normal(ks[1], (P, page, KV, hd), dt)
+    v_pool = jax.random.normal(ks[2], (P, page, KV, hd), dt)
+    # physically scattered, logically contiguous tables + ragged lengths
+    perm = np.random.default_rng(0).permutation(P - 1) + 1
+    bt = jnp.asarray(perm[:B * nblk].reshape(B, nblk), jnp.int32)
+    S = nblk * page
+    length = jnp.asarray([(S // 2 + 17 * b) % S + 1 for b in range(B)],
+                         jnp.int32)
+    want = np.asarray(R.paged_decode_attention(q, k_pool, v_pool, bt, length),
+                      np.float32)
+    for cfg in (BASELINE, TROOP):
+        got = np.asarray(
+            K.paged_decode_attention(q, k_pool, v_pool, bt, length, cfg),
+            np.float32)
+        np.testing.assert_allclose(got, want, **tol(dt))
+    # paged result == dense kernel over the gathered logical view
+    k_d = k_pool[bt].reshape(B, S, KV, hd)
+    v_d = v_pool[bt].reshape(B, S, KV, hd)
+    dense = np.asarray(K.decode_attention(q, k_d, v_d, length, TROOP),
+                       np.float32)
+    np.testing.assert_allclose(dense, want, **tol(dt))
+
+
 @pytest.mark.parametrize("B,T,H,KV,hd,S", [
     (2, 256, 8, 8, 64, 256), (1, 512, 8, 2, 64, 512),
 ])

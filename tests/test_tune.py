@@ -15,7 +15,8 @@ from repro.core.troop import TroopConfig
 from repro.kernels import ref as R
 
 ALL_KERNELS = ("gemv", "dotp", "axpy", "rmsnorm", "decode_attention",
-               "flash_attention", "fused_adamw", "mamba_scan", "rwkv6")
+               "paged_decode_attention", "flash_attention", "fused_adamw",
+               "mamba_scan", "rwkv6")
 
 
 @pytest.fixture
@@ -190,6 +191,7 @@ def test_tuned_serve_configs(tmp_cache):
     from repro.configs.qwen15_05b import CONFIG as CFG
     from repro.serve.step import tuned_kernel_configs
     cfgs = tuned_kernel_configs(CFG, batch_size=2, max_seq=128)
-    assert set(cfgs) == {"decode_attention", "gemv", "rmsnorm"}
+    assert set(cfgs) == {"decode_attention", "paged_decode_attention",
+                         "gemv", "rmsnorm"}
     for v in cfgs.values():
         assert isinstance(v, TroopConfig)
