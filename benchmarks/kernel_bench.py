@@ -46,6 +46,19 @@ def run(csv=print):
         csv(f"kernel/gemv/{tag},{us:.0f},interp_us OI={flops / bytes_:.2f} "
             f"v5e_bound_us={bound_us:.1f}")
 
+    # quantized GEMV (repro.quant): bf16 / int8 / int4 side by side — the
+    # bytes ratio IS the roofline move (values + scale traffic, DESIGN §5)
+    from repro.quant import quantize
+    from repro.tune import REGISTRY
+    wf = jax.random.normal(key, (N, Kd), jnp.float32)
+    for bits in (8, 4):
+        qt = quantize(wf, bits=bits, group_size=128, axis=-1)
+        q_bytes = REGISTRY["qgemv"].bytes(qt.values, qt.scales, x)
+        us = _time(lambda: K.qgemv(qt.values, qt.scales, x, TROOP))
+        csv(f"kernel/qgemv/int{bits},{us:.0f},interp_us "
+            f"bytes_ratio_vs_bf16={q_bytes / bytes_:.2f} "
+            f"v5e_bound_us={q_bytes / HBM_BW * 1e6:.1f}")
+
     # DOTP
     n = 1 << 20
     a = jax.random.normal(key, (n,), jnp.bfloat16)
@@ -81,14 +94,19 @@ def run(csv=print):
         csv(f"kernel/decode_attn/{tag},{us:.0f},interp_us "
             f"OI={flops / cache_bytes:.2f} v5e_bound_us={bound_us:.1f}")
 
-    # int8 quantized flash-decode (§Perf A4): half the cache stream
+    # int8 quantized flash-decode (§Perf A4): half the cache stream — the
+    # bytes come from the registered (audited) cost model, scales included
     from repro.models.attention import quantize_kv
     k8, ksc = quantize_kv(kc)
     v8, vsc = quantize_kv(vc)
-    q8_bytes = B * S * KV * hd * 2 * 1 + B * S * KV * 2 * 2
+    q8_bytes = REGISTRY["decode_attention_int8"].bytes(
+        q, k8, ksc, v8, vsc, length)
     us = _time(lambda: K.decode_attention_int8(q, k8, ksc, v8, vsc,
-                                               length, TROOP))
-    csv(f"kernel/decode_attn_int8/troop,{us:.0f},interp_us "
+                                               length,
+                                               get_tuned("decode_attention_int8",
+                                                         q, k8, ksc, v8, vsc,
+                                                         length)))
+    csv(f"kernel/decode_attn_int8/tuned,{us:.0f},interp_us "
         f"bytes_ratio_vs_bf16={q8_bytes / cache_bytes:.2f} "
         f"v5e_bound_us={q8_bytes / HBM_BW * 1e6:.1f}")
 

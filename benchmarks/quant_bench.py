@@ -1,0 +1,262 @@
+"""Quantization benchmark -> table + BENCH_quant.json.
+
+Quantization moves the roofline itself (DESIGN.md §5): at OI ~= 1 the
+bound is bytes/BW, so the headline numbers here are *modeled bytes* ratios
+(exact, from the registry's audited cost models — int8/int4 values + scale
+traffic vs the bf16 stream) next to measured interpret-mode wall times and
+fraction-of-roofline, plus the accuracy cost vs the fp32 oracle:
+
+  * qgemv int8 / int4  vs gemv bf16      (the decode projection GEMV)
+  * paged_decode_attention_int8 vs bf16  (the paged decode cache stream)
+
+Acceptance self-checks (raise on violation): qgemv-int8 modeled bytes
+<= 0.6x the bf16 gemv bytes at the same shape, and int8 outputs within
+rtol ~2e-2 of the fp32 oracle (int4 documented at ~2e-1).
+
+    PYTHONPATH=src python benchmarks/quant_bench.py --fast
+
+Interpret-mode wall times on CPU are NOT TPU performance (DESIGN.md §3);
+the modeled-bytes ratios are exact on any backend.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(
+    __file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+INT8_RTOL = 2e-2       # documented tolerance vs the fp32 oracle
+INT4_RTOL = 2e-1
+
+
+def _measure(fn, iters):
+    import jax
+    out = fn()
+    jax.tree.map(lambda x: x.block_until_ready(), out)
+    best = float("inf")
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.tree.map(lambda x: x.block_until_ready(), out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_qgemv(*, N, K, iters):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    import repro.kernels as Kn
+    from repro.kernels import ref as R
+    from repro.quant import quantize
+    from repro.tune import REGISTRY
+    from repro.tune.cache import get_tuned
+    from repro.tune.search import roofline_time
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    w = jax.random.normal(ks[0], (N, K), jnp.float32)
+    x = jax.random.normal(ks[1], (K,), jnp.bfloat16)
+    oracle = np.asarray(R.gemv(w, x.astype(jnp.float32)))
+    scale = float(np.max(np.abs(oracle)))
+
+    wb = w.astype(jnp.bfloat16)
+    spec_bf = REGISTRY["gemv"]
+    bf_bytes = spec_bf.bytes(wb, x)
+    cfg = get_tuned("gemv", wb, x)
+    t_bf = _measure(lambda: Kn.gemv(wb, x, cfg), iters)
+    rows = [{
+        "kernel": "gemv", "dtype": "bfloat16", "shape": f"N={N} K={K}",
+        "modeled_bytes": bf_bytes, "bytes_ratio_vs_bf16": 1.0,
+        "measured_us": t_bf * 1e6,
+        "roofline_us": roofline_time(spec_bf, (wb, x)) * 1e6,
+        "fraction_of_roofline": roofline_time(spec_bf, (wb, x)) / t_bf,
+        "max_rel_err_vs_fp32": float(
+            np.max(np.abs(np.asarray(Kn.gemv(wb, x, cfg)) - oracle))
+            / scale),
+    }]
+    spec_q = REGISTRY["qgemv"]
+    for bits, rtol in ((8, INT8_RTOL), (4, INT4_RTOL)):
+        qt = quantize(w, bits=bits, group_size=128, axis=-1)
+        args = (qt.values, qt.scales, x)
+        q_bytes = spec_q.bytes(*args)
+        qcfg = get_tuned("qgemv", *args)
+        t = _measure(lambda: Kn.qgemv(*args, qcfg), iters)
+        y = np.asarray(Kn.qgemv(*args, qcfg))
+        err = float(np.max(np.abs(y - oracle)) / scale)
+        ratio = q_bytes / bf_bytes
+        rows.append({
+            "kernel": "qgemv", "dtype": f"int{bits}",
+            "shape": f"N={N} K={K} g=128",
+            "modeled_bytes": q_bytes, "bytes_ratio_vs_bf16": ratio,
+            "measured_us": t * 1e6,
+            "roofline_us": roofline_time(spec_q, args) * 1e6,
+            "fraction_of_roofline": roofline_time(spec_q, args) / t,
+            "max_rel_err_vs_fp32": err,
+            "speedup_vs_bf16": t_bf / t,
+        })
+        if bits == 8:
+            assert ratio <= 0.6, \
+                f"qgemv int8 modeled bytes {ratio:.3f}x bf16 (want <= 0.6)"
+            assert err <= INT8_RTOL, \
+                f"qgemv int8 err {err:.4f} vs fp32 oracle (want <= {INT8_RTOL})"
+        else:
+            assert err <= INT4_RTOL, err
+    return rows
+
+
+def bench_paged_decode(*, B, S, page, iters):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    import repro.kernels as Kn
+    from repro.quant import quantize_kv
+    from repro.tune import REGISTRY
+    from repro.tune.cache import get_tuned
+    from repro.tune.search import roofline_time
+
+    KV, H, hd = 2, 4, 64
+    nblk = -(-S // page)
+    P = B * nblk + 1
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.bfloat16)
+    k_pool = jax.random.normal(ks[1], (P, page, KV, hd), jnp.float32)
+    v_pool = jax.random.normal(ks[2], (P, page, KV, hd), jnp.float32)
+    perm = np.random.default_rng(0).permutation(P - 1) + 1
+    bt = jnp.asarray(perm[:B * nblk].reshape(B, nblk), jnp.int32)
+    length = jnp.full((B,), S - 1, jnp.int32)
+
+    kb, vb = k_pool.astype(jnp.bfloat16), v_pool.astype(jnp.bfloat16)
+    spec_bf = REGISTRY["paged_decode_attention"]
+    args_bf = (q, kb, vb, bt, length)
+    cfg = get_tuned(*(("paged_decode_attention",) + args_bf))
+    t_bf = _measure(lambda: Kn.paged_decode_attention(*args_bf, cfg), iters)
+    bf_bytes = spec_bf.bytes(*args_bf)
+    oracle = np.asarray(
+        Kn.paged_decode_attention(*args_bf, cfg), np.float32)
+    scale = float(np.max(np.abs(oracle)))
+
+    k8, ksc = quantize_kv(k_pool)
+    v8, vsc = quantize_kv(v_pool)
+    spec_q = REGISTRY["paged_decode_attention_int8"]
+    args_q = (q, k8, ksc, v8, vsc, bt, length)
+    qcfg = get_tuned(*(("paged_decode_attention_int8",) + args_q))
+    t_q = _measure(
+        lambda: Kn.paged_decode_attention_int8(*args_q, qcfg), iters)
+    q_bytes = spec_q.bytes(*args_q)
+    err = float(np.max(np.abs(np.asarray(
+        Kn.paged_decode_attention_int8(*args_q, qcfg), np.float32)
+        - oracle)) / scale)
+    rows = [
+        {"kernel": "paged_decode_attention", "dtype": "bfloat16",
+         "shape": f"B={B} S={S} page={page} KV={KV} hd={hd}",
+         "modeled_bytes": bf_bytes, "bytes_ratio_vs_bf16": 1.0,
+         "measured_us": t_bf * 1e6,
+         "fraction_of_roofline": roofline_time(spec_bf, args_bf) / t_bf},
+        {"kernel": "paged_decode_attention_int8", "dtype": "int8",
+         "shape": f"B={B} S={S} page={page} KV={KV} hd={hd}",
+         "modeled_bytes": q_bytes,
+         "bytes_ratio_vs_bf16": q_bytes / bf_bytes,
+         "measured_us": t_q * 1e6,
+         "fraction_of_roofline": roofline_time(spec_q, args_q) / t_q,
+         "max_rel_err_vs_bf16": err,
+         "speedup_vs_bf16": t_bf / t_q},
+    ]
+    assert q_bytes / bf_bytes <= 0.6, "int8 paged stream not under 0.6x"
+    return rows
+
+
+def bench_engine_int8(*, slots, cache_len, requests, max_new):
+    """End-to-end: bf16-paged vs int8-paged engine tokens/s (greedy)."""
+    import jax
+    import numpy as np
+    from repro.configs import get_config, reduced
+    from repro.models import RuntimeConfig, build_model
+    from repro.models import modules as M
+    from repro.serve.kvcache import PagedBackend
+    from repro.serve.scheduler import Request, ServingEngine
+    from repro.serve.step import make_prefill_step, make_serve_step
+
+    cfg = reduced(get_config("qwen1.5-0.5b"))
+    out = []
+    for tag, rt, be in (
+            ("paged-bf16", RuntimeConfig(remat="none"), PagedBackend()),
+            ("paged-int8",
+             RuntimeConfig(remat="none", kv_cache_dtype="int8"),
+             PagedBackend(page_size=32, kv_dtype="int8"))):
+        model = build_model(cfg, rt)
+        params = M.unbox(model.init(jax.random.PRNGKey(0)))
+        eng = ServingEngine(
+            model, slots=slots, cache_len=cache_len,
+            prefill_step=make_prefill_step(model),
+            serve_step=make_serve_step(model), params=params, backend=be)
+        rng = np.random.default_rng(0)
+        for i in range(requests):
+            eng.submit(Request(
+                rid=i, prompt=rng.integers(1, min(cfg.vocab_size, 1000),
+                                           int(rng.integers(4, 16))),
+                max_new_tokens=max_new))
+        t0 = time.perf_counter()
+        finished = eng.run_until_drained()
+        m = eng.metrics()
+        m.update({"engine": tag, "wall_s": time.perf_counter() - t0,
+                  "all_finished": len(finished) == requests})
+        out.append(m)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="small shapes / fewer iterations (CI smoke)")
+    ap.add_argument("--out", default="BENCH_quant.json")
+    args = ap.parse_args(argv)
+
+    import jax
+    iters = 1 if args.fast else 3
+    N, K = (256, 1024) if args.fast else (2048, 4096)
+    S, page = (128, 32) if args.fast else (1024, 32)
+
+    gemv_rows = bench_qgemv(N=N, K=K, iters=iters)
+    decode_rows = bench_paged_decode(B=4, S=S, page=page, iters=iters)
+    engines = bench_engine_int8(slots=4, cache_len=64,
+                                requests=4 if args.fast else 8,
+                                max_new=4 if args.fast else 12)
+
+    hdr = (f"{'kernel':<28}{'dtype':<10}{'bytes':>12}{'ratio':>8}"
+           f"{'meas_us':>12}{'frac-roof':>12}{'rel-err':>10}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in gemv_rows + decode_rows:
+        err = r.get("max_rel_err_vs_fp32", r.get("max_rel_err_vs_bf16"))
+        print(f"{r['kernel']:<28}{r['dtype']:<10}"
+              f"{r['modeled_bytes']:>12.0f}"
+              f"{r['bytes_ratio_vs_bf16']:>8.3f}"
+              f"{r['measured_us']:>12.1f}"
+              f"{r['fraction_of_roofline']:>12.3e}"
+              + (f"{err:>10.4f}" if err is not None else ""))
+    for m in engines:
+        print(f"{m['engine']:<16} {m['decode_steps']:>4} steps  "
+              f"{m['tokens_per_s']:>8.2f} tok/s  kv={m.get('kv_dtype')}")
+
+    payload = {
+        "backend": jax.default_backend(),
+        "interpret_mode": True,
+        "int8_rtol": INT8_RTOL, "int4_rtol": INT4_RTOL,
+        "qgemv": gemv_rows,
+        "paged_decode": decode_rows,
+        "engines": engines,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    print(f"wrote {args.out}")
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -3,19 +3,13 @@
 Used with error feedback on the data-parallel reduction: the quantization
 residual is carried to the next step, so the *sum* of dequantized updates
 converges to the sum of true gradients (tested as a hypothesis property).
+
+Thin wrappers over the ``repro.quant`` primitives — one absmax
+implementation serves gradients, KV caches and weights alike; the
+error-feedback residual semantics in ``dist/ddp.py`` are unchanged.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
+from repro.quant.tensor import dequantize_int8, quantize_int8  # noqa: F401
 
-
-def quantize_int8(x):
-    """x (any shape) -> (int8 values, fp32 scalar scale)."""
-    xf = x.astype(jnp.float32)
-    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
-    return q, scale
-
-
-def dequantize_int8(q, scale):
-    return q.astype(jnp.float32) * scale
+__all__ = ["quantize_int8", "dequantize_int8"]

@@ -8,17 +8,20 @@ and the best tuned config for (kernel, shapes, dtype, backend) is resolved
 from the persistent tune cache (heuristic default on a miss).
 """
 from repro.core.troop import BASELINE, TROOP, TroopConfig
-from repro.kernels.ops import (axpy, batched_gemv, decode_attention,
-                               decode_attention_int8, decode_attention_stats,
-                               dotp, flash_attention, fused_adamw, gemv,
-                               lse_combine, mamba_scan, paged_decode_attention,
-                               rmsnorm, wkv6, wkv6_with_state)
+from repro.kernels.ops import (axpy, batched_gemv, batched_qgemv,
+                               decode_attention, decode_attention_int8,
+                               decode_attention_stats, dotp, flash_attention,
+                               fused_adamw, gemv, lse_combine, mamba_scan,
+                               paged_decode_attention,
+                               paged_decode_attention_int8, qgemv, rmsnorm,
+                               wkv6, wkv6_with_state)
 from repro.tune.cache import get_tuned
 from repro.tune.registry import REGISTRY
 
 __all__ = ["gemv", "dotp", "axpy", "rmsnorm", "fused_adamw",
            "decode_attention", "decode_attention_stats",
            "decode_attention_int8", "paged_decode_attention",
+           "paged_decode_attention_int8", "qgemv", "batched_qgemv",
            "flash_attention",
            "wkv6", "wkv6_with_state", "mamba_scan", "batched_gemv",
            "lse_combine", "BASELINE", "TROOP", "TroopConfig",

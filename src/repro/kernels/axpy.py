@@ -44,6 +44,7 @@ def _kernel_2s(a_ref, x0, x1, y0, y1, o0, o1):
     "axpy",
     flops=lambda a, x, y: 2.0 * x.shape[0],
     bytes=lambda a, x, y: x.shape[0] * (itemsize(x) + 2 * itemsize(y)),
+    streamed=lambda a, x, y: [x, y, y],      # y read + y-shaped result out
     space={"streams": (1, 2), "unroll": (1, 2),
            "block_k": (256, 512, 1024)},
     ref="axpy", example=_example)

@@ -159,6 +159,7 @@ def _example(small: bool = True):
         k.shape[0] * k.shape[1] * k.shape[2] * k.shape[3]
         * (itemsize(k) + itemsize(v))
         + q.shape[0] * q.shape[1] * q.shape[2] * 2 * itemsize(q)),
+    streamed=lambda q, k, v, ln: [k, v, q, q],   # cache + q in + q-like out
     space={"streams": (1, 2), "unroll": (1, 2), "block_k": (256, 512)},
     ref="decode_attention", example=_example)
 def decode_attention(q, k, v, length, cfg: TroopConfig = TroopConfig()):
@@ -265,6 +266,13 @@ def _paged_decode_attention(q, k_pool, v_pool, block_tables, length,
     return out.reshape(B, H, hd).astype(q.dtype)
 
 
+def _paged_streamed(q, kp, vp, bt, ln):
+    """Per-slot page traffic (nblk pages each for k and v), not pool size."""
+    view = (q.shape[0], bt.shape[1] * kp.shape[1], kp.shape[2], kp.shape[3])
+    return [jax.ShapeDtypeStruct(view, kp.dtype),
+            jax.ShapeDtypeStruct(view, vp.dtype), q, q, bt]
+
+
 @troop_kernel(
     "paged_decode_attention",
     flops=lambda q, kp, vp, bt, ln: (4.0 * q.shape[0] * q.shape[1]
@@ -275,6 +283,7 @@ def _paged_decode_attention(q, k_pool, v_pool, block_tables, length,
         * (itemsize(kp) + itemsize(vp))
         + q.shape[0] * q.shape[1] * q.shape[2] * 2 * itemsize(q)
         + bt.shape[0] * bt.shape[1] * itemsize(bt)),
+    streamed=_paged_streamed,
     space={"streams": (1, 2)},
     ref="paged_decode_attention", example=_paged_example)
 def paged_decode_attention(q, k_pool, v_pool, block_tables, length,
@@ -316,6 +325,31 @@ def _kernel_q8(len_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref,
         lambda: _epilogue(o_ref, m_ref, l_ref, m_s, l_s, acc))
 
 
+def _int8_example(small: bool = True):
+    from repro.quant.tensor import quantize_kv
+    (q, k, v, length), _ = _example(small)
+    k8, ks = quantize_kv(k)
+    v8, vs = quantize_kv(v)
+    return (q, k8, ks, v8, vs, length), {}
+
+
+@troop_kernel(
+    "decode_attention_int8",
+    flops=lambda q, k8, ks, v8, vs, ln: (4.0 * q.shape[0] * q.shape[1]
+                                         * k8.shape[1] * k8.shape[3]),
+    # §Perf A4 audit: the scale tensors ARE streamed (one row per cache
+    # row) — a bytes model that ignores them overstates the roofline win
+    # by hd/(hd+2) and mis-scores fraction-of-roofline in repro.tune
+    bytes=lambda q, k8, ks, v8, vs, ln: (
+        k8.shape[0] * k8.shape[1] * k8.shape[2] * k8.shape[3]
+        * (itemsize(k8) + itemsize(v8))
+        + k8.shape[0] * k8.shape[1] * k8.shape[2]
+        * (itemsize(ks) + itemsize(vs))
+        + q.shape[0] * q.shape[1] * q.shape[2] * 2 * itemsize(q)),
+    streamed=lambda q, k8, ks, v8, vs, ln: [k8, v8, ks, vs, q, q],
+    space={"streams": (1,), "unroll": (1, 2), "block_k": (256, 512)},
+    default=TroopConfig(streams=1),
+    ref="decode_attention_int8", example=_int8_example)
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def decode_attention_int8(q, k8, k_scale, v8, v_scale, length,
                           cfg: TroopConfig = TroopConfig()):
@@ -357,3 +391,140 @@ def decode_attention_int8(q, k8, k_scale, v8, v_scale, length,
     )(length, qg, k8, k_scale, v8, v_scale)
     out = acc / jnp.maximum(l, 1e-30)
     return out.reshape(B, H, hd).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# Quantized paged variant: int8 page pools + scale pages, same block-table
+# gather feeding the fused-dequant online-softmax pipeline
+# --------------------------------------------------------------------------
+def _kernel_paged_q8_1s(bt_ref, len_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref,
+                        o_ref, m_s, l_s, acc, *, scale, page):
+    b, j = pl.program_id(0), pl.program_id(1)
+    pl.when(j == 0)(lambda: _prologue(m_s, l_s, acc))
+    _block_update_q8(q_ref[0], k_ref[0], ks_ref[0], v_ref[0], vs_ref[0],
+                     j * page, len_ref[b], scale, m_s, l_s, acc)
+    pl.when(j == pl.num_programs(1) - 1)(
+        lambda: _epilogue_norm(o_ref, l_s, acc))
+
+
+def _kernel_paged_q8_2s(bt_ref, len_ref, q_ref, k0, ks0, v0, vs0,
+                        k1, ks1, v1, vs1, o_ref, m_s, l_s, acc,
+                        *, scale, page, half):
+    b, j = pl.program_id(0), pl.program_id(1)
+    pl.when(j == 0)(lambda: _prologue(m_s, l_s, acc))
+    q, valid = q_ref[0], len_ref[b]
+    _block_update_q8(q, k0[0], ks0[0], v0[0], vs0[0], j * page, valid,
+                     scale, m_s, l_s, acc)
+    _block_update_q8(q, k1[0], ks1[0], v1[0], vs1[0], (half + j) * page,
+                     valid, scale, m_s, l_s, acc)
+    pl.when(j == pl.num_programs(1) - 1)(
+        lambda: _epilogue_norm(o_ref, l_s, acc))
+
+
+def _paged_int8_example(small: bool = True):
+    from repro.quant.tensor import quantize_kv
+    (q, k_pool, v_pool, bt, length), _ = _paged_example(small)
+    k8, ks = quantize_kv(k_pool)
+    v8, vs = quantize_kv(v_pool)
+    return (q, k8, ks, v8, vs, bt, length), {}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _paged_decode_attention_int8(q, k_pool, k_scales, v_pool, v_scales,
+                                 block_tables, length,
+                                 cfg: TroopConfig = TroopConfig()):
+    B, H, hd = q.shape
+    page, KV = k_pool.shape[1], k_pool.shape[2]
+    nblk = block_tables.shape[1]
+    G = H // KV
+    scale = hd ** -0.5
+    qg = q.reshape(B, KV, G, hd)
+    streams = cfg.streams if nblk % 2 == 0 else 1
+    half = nblk // streams
+
+    scratch = [pltpu.VMEM((KV, G, 1), jnp.float32),
+               pltpu.VMEM((KV, G, 1), jnp.float32),
+               pltpu.VMEM((KV, G, hd), jnp.float32)]
+    q_spec = pl.BlockSpec((1, KV, G, hd), lambda b, j, bt, ln: (b, 0, 0, 0))
+    out_spec = pl.BlockSpec((1, KV, G, hd), lambda b, j, bt, ln: (b, 0, 0, 0))
+    out_shape = jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32)
+    # value pages and their scale pages ride the SAME table entry: one
+    # allocator, one gather — the scale page is just a second (tiny) DMA
+    lo = pl.BlockSpec((1, page, KV, hd),
+                      lambda b, j, bt, ln: (bt[b, j], 0, 0, 0))
+    lo_s = pl.BlockSpec((1, page, KV, 1),
+                        lambda b, j, bt, ln: (bt[b, j], 0, 0, 0))
+    hi = pl.BlockSpec((1, page, KV, hd),
+                      lambda b, j, bt, ln, o=half: (bt[b, o + j], 0, 0, 0))
+    hi_s = pl.BlockSpec((1, page, KV, 1),
+                        lambda b, j, bt, ln, o=half: (bt[b, o + j], 0, 0, 0))
+
+    if streams == 1:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2, grid=(B, nblk),
+            in_specs=[q_spec, lo, lo_s, lo, lo_s], out_specs=out_spec,
+            scratch_shapes=scratch)
+        out = pl.pallas_call(
+            functools.partial(_kernel_paged_q8_1s, scale=scale, page=page),
+            grid_spec=grid_spec, out_shape=out_shape,
+            interpret=cfg.interpret,
+        )(block_tables, length, qg, k_pool, k_scales, v_pool, v_scales)
+    else:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2, grid=(B, half),
+            in_specs=[q_spec, lo, lo_s, lo, lo_s, hi, hi_s, hi, hi_s],
+            out_specs=out_spec, scratch_shapes=scratch)
+        out = pl.pallas_call(
+            functools.partial(_kernel_paged_q8_2s, scale=scale, page=page,
+                              half=half),
+            grid_spec=grid_spec, out_shape=out_shape,
+            interpret=cfg.interpret,
+        )(block_tables, length, qg, k_pool, k_scales, v_pool, v_scales,
+          k_pool, k_scales, v_pool, v_scales)
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def _paged_int8_streamed(q, kp, ks, vp, vs, bt, ln):
+    B, nblk, page, KV, hd = (q.shape[0], bt.shape[1], kp.shape[1],
+                             kp.shape[2], kp.shape[3])
+    view = (B, nblk * page, KV, hd)
+    sview = (B, nblk * page, KV, 1)
+    return [jax.ShapeDtypeStruct(view, kp.dtype),
+            jax.ShapeDtypeStruct(view, vp.dtype),
+            jax.ShapeDtypeStruct(sview, ks.dtype),
+            jax.ShapeDtypeStruct(sview, vs.dtype), q, q, bt]
+
+
+@troop_kernel(
+    "paged_decode_attention_int8",
+    flops=lambda q, kp, ks, vp, vs, bt, ln: (
+        4.0 * q.shape[0] * q.shape[1] * bt.shape[1] * kp.shape[1]
+        * q.shape[2]),
+    # per-slot page traffic at quantized width + scale pages + q io + table
+    bytes=lambda q, kp, ks, vp, vs, bt, ln: (
+        q.shape[0] * bt.shape[1] * kp.shape[1] * kp.shape[2] * kp.shape[3]
+        * (itemsize(kp) + itemsize(vp))
+        + q.shape[0] * bt.shape[1] * kp.shape[1] * kp.shape[2]
+        * (itemsize(ks) + itemsize(vs))
+        + q.shape[0] * q.shape[1] * q.shape[2] * 2 * itemsize(q)
+        + bt.shape[0] * bt.shape[1] * itemsize(bt)),
+    streamed=_paged_int8_streamed,
+    space={"streams": (1, 2)},
+    ref="paged_decode_attention_int8", example=_paged_int8_example)
+def paged_decode_attention_int8(q, k_pool, k_scales, v_pool, v_scales,
+                                block_tables, length,
+                                cfg: TroopConfig = TroopConfig()):
+    """Flash-decode over int8 page pools with per-(token, head) scale pages.
+
+    q (B,H,hd); k_pool/v_pool (P,page,KV,hd) int8; k_scales/v_scales
+    (P,page,KV,1); block_tables (B,nblk) int32; length (B,).  Returns
+    (B,H,hd) in q.dtype.
+
+    Identical pipeline to ``paged_decode_attention`` — scalar-prefetched
+    block-table gather, two-stream walk of the logical sequence (odd-nblk
+    tables fall back to one stream) — but the cache stream is int8 + scale
+    pages, ~0.53x the bf16 bytes at hd=128, and the dequant multiply runs
+    in-register between the page DMA and the MXU (DESIGN.md §5).
+    """
+    return _paged_decode_attention_int8(q, k_pool, k_scales, v_pool,
+                                        v_scales, block_tables, length, cfg)

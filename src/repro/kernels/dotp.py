@@ -61,6 +61,7 @@ def _kernel_2s(x0, x1, y0, y1, o_ref, acc):
     "dotp",
     flops=lambda x, y: 2.0 * x.shape[0],
     bytes=lambda x, y: x.shape[0] * (itemsize(x) + itemsize(y)) + 4,
+    streamed=lambda x, y: [x, y, jax.ShapeDtypeStruct((1,), jnp.float32)],
     space={"streams": (1, 2), "unroll": (1, 2, 4),
            "block_k": (256, 512, 1024)},
     ref="dotp", example=_example)

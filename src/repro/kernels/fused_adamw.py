@@ -55,6 +55,9 @@ def _kernel_2s(h_ref, p0, p1, g0, g1, mu0, mu1, nu0, nu1,
     # one pass: read (p, g, mu, nu), write (p', mu', nu'); moments fp32
     bytes=lambda p, g, mu, nu: numel(p) * (2 * itemsize(p) + itemsize(g)
                                            + 4 * 4),
+    streamed=lambda p, g, mu, nu: [p, p, g] + [
+        jax.ShapeDtypeStruct(p.shape, jnp.float32)] * 4,
+    #   p in + p' out + g in + (mu, nu) fp32 in/out
     space={"streams": (1, 2), "unroll": (1, 2), "block_k": (256, 512, 1024)},
     ref="fused_adamw", example=_example)
 @functools.partial(jax.jit, static_argnames=("cfg",))

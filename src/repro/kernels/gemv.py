@@ -78,6 +78,8 @@ def _kernel_2s(w0_ref, w1_ref, x0_ref, x1_ref, o_ref, acc):
     flops=lambda w, x: 2.0 * w.shape[0] * w.shape[1],
     bytes=lambda w, x: (w.shape[0] * w.shape[1] * itemsize(w)
                         + w.shape[1] * itemsize(x) + w.shape[0] * 4),
+    streamed=lambda w, x: [
+        w, x, jax.ShapeDtypeStruct((w.shape[0],), jnp.float32)],
     space={"streams": (1, 2), "unroll": (1, 2),
            "block_n": (128, 256), "block_k": (256, 512)},
     ref="gemv", example=_example)

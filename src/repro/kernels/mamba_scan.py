@@ -77,6 +77,14 @@ def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, o_ref, so_ref,
         (2 * numel(x) + numel(B) + numel(C)) * itemsize(x)
         + numel(x) * itemsize(x)            # y out
         + (numel(A) + numel(D) + numel(s0)) * 4),
+    streamed=lambda x, dt, B, C, A, D, s0: [
+        x, jax.ShapeDtypeStruct(dt.shape, x.dtype),      # x, dt in
+        jax.ShapeDtypeStruct(B.shape, x.dtype),
+        jax.ShapeDtypeStruct(C.shape, x.dtype),
+        x,                                               # y out (x-shaped)
+        jax.ShapeDtypeStruct(A.shape, jnp.float32),
+        jax.ShapeDtypeStruct(D.shape, jnp.float32),
+        jax.ShapeDtypeStruct(s0.shape, jnp.float32)],
     space={"block_n": (64, 128, 256)},
     ref="mamba_scan", example=_example)
 @functools.partial(jax.jit, static_argnames=("cfg",))

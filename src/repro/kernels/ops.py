@@ -15,7 +15,8 @@ from repro.kernels.axpy import axpy
 from repro.kernels.decode_attention import (decode_attention,
                                             decode_attention_int8,
                                             decode_attention_stats,
-                                            paged_decode_attention)
+                                            paged_decode_attention,
+                                            paged_decode_attention_int8)
 from repro.kernels.dotp import dotp
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.fused_adamw import fused_adamw
@@ -23,10 +24,12 @@ from repro.kernels.gemv import gemv
 from repro.kernels.mamba_scan import mamba_scan
 from repro.kernels.rmsnorm import rmsnorm
 from repro.kernels.rwkv6 import wkv6
+from repro.quant.kernels import batched_qgemv, qgemv
 
 __all__ = ["gemv", "dotp", "axpy", "rmsnorm", "fused_adamw",
            "decode_attention", "decode_attention_stats", "decode_attention_int8",
-           "paged_decode_attention", "flash_attention",
+           "paged_decode_attention", "paged_decode_attention_int8",
+           "flash_attention", "qgemv", "batched_qgemv",
            "wkv6", "wkv6_with_state", "mamba_scan", "batched_gemv",
            "lse_combine", "BASELINE", "TROOP", "TroopConfig"]
 

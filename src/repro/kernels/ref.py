@@ -62,6 +62,41 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, length):
     return decode_attention(q, k, v, length)
 
 
+def decode_attention_int8(q, k8, k_scale, v8, v_scale, length):
+    """Quantized flash-decode oracle: dequantize the int8 cache (values *
+    per-(token, head) scale), then the dense decode_attention oracle."""
+    k = k8.astype(jnp.float32) * k_scale.astype(jnp.float32)
+    v = v8.astype(jnp.float32) * v_scale.astype(jnp.float32)
+    return decode_attention(q, k, v, length)
+
+
+def paged_decode_attention_int8(q, k_pool, k_scales, v_pool, v_scales,
+                                block_tables, length):
+    """Quantized paged oracle: gather value AND scale pages through the
+    block table, dequantize the logical view, then the dense oracle."""
+    B, nblk = block_tables.shape
+    page, KV, hd = k_pool.shape[1:]
+    k = (k_pool[block_tables].astype(jnp.float32)
+         * k_scales[block_tables].astype(jnp.float32))
+    v = (v_pool[block_tables].astype(jnp.float32)
+         * v_scales[block_tables].astype(jnp.float32))
+    return decode_attention(q, k.reshape(B, nblk * page, KV, hd),
+                            v.reshape(B, nblk * page, KV, hd), length)
+
+
+def qgemv(wq, scales, x):
+    """Fused-dequant GEMV oracle: grouped dequant then fp32 GEMV."""
+    from repro.quant.tensor import dequantize_values
+    bits = 8 if wq.shape[1] == x.shape[-1] else 4
+    w = dequantize_values(wq, scales, axis=-1, bits=bits)
+    return jnp.dot(w, x.astype(jnp.float32).T).T
+
+
+def batched_qgemv(wq, scales, xs):
+    """xs (B, K) -> (B, N): same oracle, batch on the lane dim."""
+    return qgemv(wq, scales, xs)
+
+
 def flash_attention(q, k, v, causal=True):
     """q (B,T,H,hd), k/v (B,S,KV,hd) -> (B,T,H,hd). fp32 softmax oracle."""
     B, T, H, hd = q.shape

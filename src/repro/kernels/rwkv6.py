@@ -94,6 +94,13 @@ def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, so_ref, state, *, bt):
         4 * numel(r) * itemsize(r)          # r, k, v, w in
         + numel(r) * 4 + numel(s0) * 4      # y + final state out (fp32)
         + numel(u) * itemsize(u)),
+    streamed=lambda r, k, v, w, u, s0: [
+        r, jax.ShapeDtypeStruct(k.shape, r.dtype),
+        jax.ShapeDtypeStruct(v.shape, r.dtype),
+        jax.ShapeDtypeStruct(w.shape, r.dtype),
+        jax.ShapeDtypeStruct(r.shape, jnp.float32),      # y out
+        jax.ShapeDtypeStruct(s0.shape, jnp.float32),     # final state out
+        u],
     space={"block_n": (64, 128, 256)},
     ref="wkv6", example=_example)
 @functools.partial(jax.jit, static_argnames=("cfg",))

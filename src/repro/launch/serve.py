@@ -29,9 +29,21 @@ def main():
     ap.add_argument("--kernel-decode", action="store_true",
                     help="attend via the tuned Pallas paged kernel (no "
                          "gathered dense view; slow in CPU interpret mode)")
-    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="tokens per page (default: the layout granule — "
+                         "16 for bf16 pools, 32 for --kv-cache-dtype int8)")
     ap.add_argument("--num-pages", type=int, default=None,
                     help="pool pages per layer (default: full occupancy)")
+    ap.add_argument("--quantize-weights", choices=("none", "int8", "int4"),
+                    default="none",
+                    help="quantize matmul weights via repro.quant."
+                         "quantize_params (MLP/attention projections; "
+                         "embeddings/norms stay raw — DESIGN.md §5)")
+    ap.add_argument("--kv-cache-dtype", choices=("model", "int8"),
+                    default="model",
+                    help="int8: quantized KV (int8 page pools + scale "
+                         "pages under --backend paged; per-slot int8 "
+                         "caches under --backend dense)")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=128)
     ap.add_argument("--requests", type=int, default=8)
@@ -42,12 +54,27 @@ def main():
     if args.kernel_decode and args.backend != "paged":
         raise SystemExit("--kernel-decode requires --backend paged "
                          "(the kernel reads the page pool + block table)")
+    kv_int8 = args.kv_cache_dtype == "int8"
+    if args.page_size is None:
+        from repro.quant.tensor import granule
+        args.page_size = granule() if kv_int8 else 16
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduced(cfg)
     model = build_model(cfg, RuntimeConfig(
-        remat="none", paged_kernel_decode=args.kernel_decode))
+        remat="none", paged_kernel_decode=args.kernel_decode,
+        quantize_weights=args.quantize_weights,
+        kv_cache_dtype="int8" if kv_int8 else ""))
     params = M.unbox(model.init(jax.random.PRNGKey(0)))
+    if args.quantize_weights != "none":
+        from repro.quant import quantize_params, quantized_stats
+        params = quantize_params(
+            params, bits=8 if args.quantize_weights == "int8" else 4)
+        qs = quantized_stats(params)
+        print(f"quantized {qs['quantized_leaves']} weight leaves: "
+              f"{qs['quantized_bytes']:,} B (was "
+              f"{qs['quantized_fp32_bytes']:,} B fp32); "
+              f"{qs['raw_bytes']:,} B left raw")
 
     extras = None
     if cfg.encoder_decoder or cfg.frontend == "vision":
@@ -58,7 +85,8 @@ def main():
             (1, F, cfg.d_model), jnp.bfloat16)}
 
     backend = PagedBackend(page_size=args.page_size,
-                           num_pages=args.num_pages) \
+                           num_pages=args.num_pages,
+                           kv_dtype="int8" if kv_int8 else None) \
         if args.backend == "paged" else "dense"
     configs = tuned_kernel_configs(cfg, args.slots, args.cache_len,
                                    page_size=args.page_size,

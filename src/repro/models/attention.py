@@ -29,16 +29,10 @@ class KVCache(NamedTuple):
         return self.k_scale is not None
 
 
-def quantize_kv(x):
-    """(B, T, KV, hd) -> int8 values + per-(B,T,KV) scale."""
-    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
-    scale = jnp.maximum(amax / 127.0, 1e-8)
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
-    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
-
-
-def dequantize_kv(q, scale, dtype):
-    return q.astype(dtype) * scale.astype(dtype)
+# Thin views over the repro.quant primitives (kept under their historical
+# names — §Perf A4 predates the quant subsystem; one absmax implementation
+# now serves KV caches, page pools and gradient compression alike).
+from repro.quant.tensor import dequantize_kv, quantize_kv  # noqa: E402,F401
 
 
 def attention_init(key, cfg, *, cross: bool = False):
@@ -237,17 +231,23 @@ def update_paged_cache(pool, new, pos, block_tables):
     return pool.at[pid, pos % page].set(row, mode="drop")
 
 
-def gather_paged_kv(cache: PagedKVCache, block_tables):
+def gather_paged_kv(cache: PagedKVCache, block_tables,
+                    dtype=jnp.bfloat16):
     """Dense logical view of a paged cache: (B, nblk*page, KV, hd).
 
     Pure-jnp reference path (the oracle for the Pallas
-    ``paged_decode_attention`` kernel, which streams pages directly from the
-    pool without materializing this view).
+    ``paged_decode_attention`` kernels, which stream pages directly from
+    the pool without materializing this view).  int8 pools are dequantized
+    through their gathered scale pages (to ``dtype``).
     """
     B, nblk = block_tables.shape
     page, KV, hd = cache.k_pool.shape[1:]
     k = cache.k_pool[block_tables].reshape(B, nblk * page, KV, hd)
     v = cache.v_pool[block_tables].reshape(B, nblk * page, KV, hd)
+    if cache.quantized:
+        ks = cache.k_scale_pool[block_tables].reshape(B, nblk * page, KV, 1)
+        vs = cache.v_scale_pool[block_tables].reshape(B, nblk * page, KV, 1)
+        return dequantize_kv(k, ks, dtype), dequantize_kv(v, vs, dtype)
     return k, v
 
 
@@ -267,16 +267,33 @@ def apply_attention_decode_paged(p, cfg, x, cache: PagedKVCache, pos,
     B = x.shape[0]
     q, k_new, v_new = _project_qkv(
         p, cfg, x, x, pos[:, None], pos[:, None], dtype)
-    new_cache = PagedKVCache(
-        update_paged_cache(cache.k_pool, k_new, pos, block_tables),
-        update_paged_cache(cache.v_pool, v_new, pos, block_tables))
+    if cache.quantized:
+        # int8 pools: quantize the new token row and write value + scale
+        # pages through the same table entry (§Perf A4 at page granularity)
+        k8, ks = quantize_kv(k_new)
+        v8, vs = quantize_kv(v_new)
+        new_cache = PagedKVCache(
+            update_paged_cache(cache.k_pool, k8, pos, block_tables),
+            update_paged_cache(cache.v_pool, v8, pos, block_tables),
+            update_paged_cache(cache.k_scale_pool, ks, pos, block_tables),
+            update_paged_cache(cache.v_scale_pool, vs, pos, block_tables))
+    else:
+        new_cache = PagedKVCache(
+            update_paged_cache(cache.k_pool, k_new, pos, block_tables),
+            update_paged_cache(cache.v_pool, v_new, pos, block_tables))
     if use_kernel:
         from repro.kernels import ops as KO   # lazy: keeps models jnp-only
-        out = KO.paged_decode_attention(      # dispatches via repro.tune
-            q[:, 0], new_cache.k_pool, new_cache.v_pool, block_tables,
-            pos + 1)[:, None]
+        if cache.quantized:
+            out = KO.paged_decode_attention_int8(   # dispatches via tune
+                q[:, 0], new_cache.k_pool, new_cache.k_scale_pool,
+                new_cache.v_pool, new_cache.v_scale_pool, block_tables,
+                pos + 1)[:, None]
+        else:
+            out = KO.paged_decode_attention(        # dispatches via tune
+                q[:, 0], new_cache.k_pool, new_cache.v_pool, block_tables,
+                pos + 1)[:, None]
     else:
-        k, v = gather_paged_kv(new_cache, block_tables)
+        k, v = gather_paged_kv(new_cache, block_tables, dtype)
         out = attend(q, k, v, causal=False, length=pos + 1, decode=True)
     out = M.apply_dense(p["wo"], out.reshape(B, 1, -1), dtype)
     return out, new_cache
@@ -329,9 +346,18 @@ def cross_kv(p, cfg, enc_out, dtype) -> KVCache:
 
 
 def init_paged_cache(cfg, spec: PageSpec, dtype) -> PagedKVCache:
-    """Zeroed page pools for one attention sublayer (shared across slots)."""
+    """Zeroed page pools for one attention sublayer (shared across slots).
+
+    ``spec.kv_dtype == "int8"`` allocates int8 value pools plus bf16 scale
+    pages (same page indices — the allocator is oblivious to them)."""
     KV, hd = cfg.num_kv_heads, cfg.head_dim
     shape = (spec.num_pages, spec.page_size, KV, hd)
+    if jnp.dtype(spec.kv_dtype) == jnp.dtype(jnp.int8):
+        sshape = shape[:-1] + (1,)
+        return PagedKVCache(jnp.zeros(shape, jnp.int8),
+                            jnp.zeros(shape, jnp.int8),
+                            jnp.ones(sshape, jnp.bfloat16),
+                            jnp.ones(sshape, jnp.bfloat16))
     return PagedKVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
 
 

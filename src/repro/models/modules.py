@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name as _checkpoint_name
 import numpy as np
 
+from repro.quant.tensor import QuantizedTensor
+
 
 # --------------------------------------------------------------------------
 # Param boxing
@@ -71,8 +73,14 @@ def dense_init(key, in_dim: int, out_dim: int, axes, *, bias: bool = False,
 
 def apply_dense(p, x, dtype=None):
     w = p["w"]
-    if dtype is not None:
+    if isinstance(w, QuantizedTensor):
+        # repro.quant weights (DESIGN.md §5): grouped dequant on the fly —
+        # the GSPMD-shardable reference of the fused-dequant qgemv kernels
+        # (which stream the int8/int4 bytes + scales; repro.quant.kernels)
+        w = w.dequantize(dtype or x.dtype)
+    elif dtype is not None:
         w = w.astype(dtype)
+    if dtype is not None:
         x = x.astype(dtype)
     y = x @ w
     if "b" in p:

@@ -38,6 +38,17 @@ class RuntimeConfig:
     paged_kernel_decode: bool = False  # paged decode via the tuned Pallas
     #   kernel (no gathered dense view); default off: the jnp path is the
     #   GSPMD-shardable reference (interpret-mode Pallas is slow on CPU)
+    # ---- repro.quant (DESIGN.md §5): a quantized engine is one flag ----
+    quantize_weights: str = "none"  # none | int8 | int4: matmul-weight
+    #   quantization policy tag; the launcher applies
+    #   repro.quant.quantize_params and apply_dense dequantizes on the fly
+    kv_cache_dtype: str = ""       # "" -> cache_dtype. "int8" under the
+    #   paged backend stores int8 page pools + scale pages (dense backends
+    #   fall back to the per-slot int8 layout, same as cache_dtype="int8")
+
+    def kv_dtype(self) -> str:
+        """Resolved KV-cache storage dtype (serving alias wins)."""
+        return self.kv_cache_dtype or self.cache_dtype
 
 
 @dataclass(frozen=True)
@@ -174,7 +185,7 @@ def _apply_sublayer(p, cfg, rt, x, *, mixer, ffn, positions, state, dtype,
                                       return_kv=return_cache)
                 if return_cache:
                     o, kv = o
-                    if rt.cache_dtype == "int8":    # §Perf A4
+                    if rt.kv_dtype() == "int8":     # §Perf A4
                         qk, ks = A.quantize_kv(kv.k)
                         qv, vs = A.quantize_kv(kv.v)
                         kv = A.KVCache(qk, qv, ks, vs)
@@ -346,7 +357,7 @@ def train_logits(params, cfg, rt, batch):
 def prefill(params, cfg, rt, batch):
     """Full-sequence forward that also returns decode caches."""
     dtype = jnp.dtype(cfg.dtype)
-    cache_dtype = jnp.dtype(rt.cache_dtype) if rt.cache_dtype != "int8" \
+    cache_dtype = jnp.dtype(rt.kv_dtype()) if rt.kv_dtype() != "int8" \
         else dtype
     groups = plan_groups(cfg)
     x = embed_inputs(params, cfg, batch, dtype)
@@ -364,19 +375,23 @@ def init_caches(cfg, rt, B, S, dtype, page_spec=None):
 
     With ``page_spec`` (a ``serve.kvcache.PageSpec``) plain attention KV
     leaves become shared ``PagedKVCache`` page pools addressed by the
-    engine's block table; MLA, int8-quantized and cross-attention caches
-    keep the dense per-slot layout (documented fallback, DESIGN.md §4).
+    engine's block table — int8 pools with scale pages when the spec says
+    ``kv_dtype="int8"`` (DESIGN.md §5); MLA, dense-int8
+    (``cache_dtype="int8"`` without an int8 page spec) and cross-attention
+    caches keep the dense per-slot layout (documented fallback, §4).
     """
     groups = plan_groups(cfg)
+    paged_int8 = page_spec is not None and \
+        jnp.dtype(page_spec.kv_dtype) == jnp.dtype(jnp.int8)
     out = []
     for g in groups:
         per_rep = []
         for (m, f) in g.pattern:
             if m == "attn":
-                quant = rt.cache_dtype == "int8" and cfg.attention != "mla"
+                quant = rt.kv_dtype() == "int8" and cfg.attention != "mla"
                 if cfg.attention == "mla":
                     c = ML.init_mla_cache(cfg, B, S, dtype)
-                elif page_spec is not None and not quant:
+                elif page_spec is not None and (not quant or paged_int8):
                     c = A.init_paged_cache(cfg, page_spec, dtype)
                 else:
                     c = A.init_cache(cfg, B, S, dtype, quantized=quant)

@@ -1,0 +1,43 @@
+"""repro.quant — quantization as a first-class subsystem.
+
+Quantization is the software lever that moves the memory roofline itself:
+at OI ~= 1 every operand byte is the bound, so int8 halves (int4 quarters)
+the attainable decode time (DESIGN.md §5).  Three layers:
+
+  * ``tensor``  — ``QuantizedTensor`` pytree, absmax calibration,
+    grouped/per-tensor quantize/dequantize, int4 nibble packing; plus the
+    repo's two historical int8 layouts (``quantize_kv``, ``quantize_int8``)
+    as thin views.
+  * ``params``  — ``quantize_params``: policy-driven pass over a model's
+    params pytree (MLP/attention projections yes; embeddings/norms no).
+  * ``kernels`` — fused-dequant Pallas kernels (``qgemv``,
+    ``batched_qgemv``), registered with ``repro.tune`` under bytes models
+    that count quantized widths and scale traffic.  Imported lazily so
+    model code can use the tensor layer without touching Pallas; the int8
+    decode-attention kernels live with their bf16 siblings in
+    ``repro.kernels.decode_attention``.
+"""
+from repro.quant.params import (default_policy, quantize_params,
+                                quantized_stats)
+from repro.quant.tensor import (QuantizedTensor, absmax_scales, dequantize,
+                                dequantize_int8, dequantize_kv,
+                                dequantize_values, granule, pack_int4,
+                                quantize, quantize_int8, quantize_kv,
+                                unpack_int4)
+
+__all__ = [
+    "QuantizedTensor", "absmax_scales", "quantize", "dequantize",
+    "dequantize_values", "pack_int4", "unpack_int4", "granule",
+    "quantize_kv", "dequantize_kv", "quantize_int8", "dequantize_int8",
+    "quantize_params", "default_policy", "quantized_stats",
+    "qgemv", "batched_qgemv",
+]
+
+
+def __getattr__(name):
+    # Pallas kernels resolve lazily: keeps `import repro.quant` light for
+    # model code while `repro.quant.qgemv` still works.
+    if name in ("qgemv", "batched_qgemv"):
+        from repro.quant import kernels as _k
+        return getattr(_k, name)
+    raise AttributeError(f"module 'repro.quant' has no attribute {name!r}")

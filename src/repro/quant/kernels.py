@@ -1,0 +1,201 @@
+"""Fused-dequant GEMV kernels — quantization applied AT the roofline.
+
+``qgemv``/``batched_qgemv`` stream int8 (or packed-int4) weights plus their
+per-group scales and dequantize *in register*, between the DMA and the MXU:
+
+  (A) streams=2   — the quantized weight, its scale blocks and x are each
+                    fetched as two disjoint contiguous K-halves (independent
+                    BlockSpecs -> two DMAs in flight per grid step).
+  (C) shadow acc  — fp32 accumulator in VMEM scratch; y commits once per
+                    row-tile.
+  (D) alignment   — the scale group is a multiple of the int8 layout
+                    granule and divides block_k, so each (block_n, block_k)
+                    weight tile consumes whole scale blocks: the dequant
+                    multiply is one reshape-broadcast on the VPU, never a
+                    gather across tile edges (DESIGN.md §5).
+  (E) layout      — int4 packs two values per byte along K, so a packed
+                    block is still one dense contiguous HBM region.
+
+At OI ~= 1 the runtime bound is bytes/BW, so int8 halves and int4 quarters
+the attainable decode-GEMV time — the registered ``bytes=`` models count
+the quantized widths *and* the scale traffic, which is what ``repro.tune``
+scores fraction-of-roofline against.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.core.troop import TroopConfig
+from repro.quant.tensor import quantize
+from repro.tune.registry import itemsize, numel, troop_kernel
+
+
+def _infer_bits(wq, K: int) -> int:
+    """8 if the stored K extent is logical, 4 if nibble-packed (K//2)."""
+    if wq.shape[1] == K:
+        return 8
+    assert wq.shape[1] == K // 2, \
+        f"weight K extent {wq.shape[1]} matches neither K={K} (int8) nor " \
+        f"K//2={K // 2} (packed int4)"
+    return 4
+
+
+def _dequant_block(w_ref, s_ref, *, bits: int, g: int):
+    """(bn, bk[, packed]) int8 + (bn, bk//g) scales -> (bn, bk) fp32."""
+    w8 = w_ref[...]
+    if bits == 4:
+        lo = jnp.right_shift(jnp.left_shift(w8, 4), 4)   # sign-extend
+        hi = jnp.right_shift(w8, 4)
+        w8 = jnp.stack([lo, hi], axis=-1).reshape(w8.shape[0], -1)
+    bn, bk = w8.shape
+    s = s_ref[...].astype(jnp.float32)                   # (bn, bk // g)
+    w = w8.astype(jnp.float32).reshape(bn, bk // g, g) * s[:, :, None]
+    return w.reshape(bn, bk)
+
+
+def _kernel_1s(w_ref, s_ref, x_ref, o_ref, acc, *, bits, g):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        acc[...] = jnp.zeros_like(acc)
+
+    w = _dequant_block(w_ref, s_ref, bits=bits, g=g)
+    acc[...] += jnp.dot(w, x_ref[...].astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _():
+        o_ref[...] = acc[...].astype(o_ref.dtype)
+
+
+def _kernel_2s(w0, s0, x0, w1, s1, x1, o_ref, acc, *, bits, g):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        acc[...] = jnp.zeros_like(acc)
+
+    a = jnp.dot(_dequant_block(w0, s0, bits=bits, g=g),
+                x0[...].astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    b = jnp.dot(_dequant_block(w1, s1, bits=bits, g=g),
+                x1[...].astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    acc[...] += a + b
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _():
+        o_ref[...] = acc[...].astype(o_ref.dtype)
+
+
+def _qgemv_2d(wq, scales, x2, cfg: TroopConfig):
+    """wq (N, Ks) int8, scales (N, K//g), x2 (K, B) -> (N, B) fp32."""
+    N = wq.shape[0]
+    K, B = x2.shape
+    bits = _infer_bits(wq, K)
+    g = K // scales.shape[1]
+    pack = 2 if bits == 4 else 1
+
+    bn = min(cfg.block_n, N)
+    while N % bn:
+        bn //= 2
+    streams = cfg.streams if (K // g) % 2 == 0 and cfg.streams == 2 else 1
+    Kh = K // streams
+    bk = max(min(cfg.block_k * cfg.unroll, Kh) // g * g, g)
+    while Kh % bk:
+        bk -= g
+    steps = Kh // bk
+    body = functools.partial(
+        _kernel_1s if streams == 1 else _kernel_2s, bits=bits, g=g)
+
+    # block index maps share j: the packed weight, its scale blocks and the
+    # x slice advance in lockstep along K (bk elements = bk//pack bytes =
+    # bk//g scale entries per step)
+    w_lo = pl.BlockSpec((bn, bk // pack), lambda i, j: (i, j))
+    w_hi = pl.BlockSpec((bn, bk // pack), lambda i, j, o=steps: (i, j + o))
+    s_lo = pl.BlockSpec((bn, bk // g), lambda i, j: (i, j))
+    s_hi = pl.BlockSpec((bn, bk // g), lambda i, j, o=steps: (i, j + o))
+    x_lo = pl.BlockSpec((bk, B), lambda i, j: (j, 0))
+    x_hi = pl.BlockSpec((bk, B), lambda i, j, o=steps: (j + o, 0))
+
+    if streams == 1:
+        in_specs, ops = [w_lo, s_lo, x_lo], (wq, scales, x2)
+    else:
+        in_specs = [w_lo, s_lo, x_lo, w_hi, s_hi, x_hi]
+        ops = (wq, scales, x2, wq, scales, x2)
+    return pl.pallas_call(
+        body,
+        grid=(N // bn, steps),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bn, B), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, B), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bn, B), jnp.float32)],
+        interpret=cfg.interpret,
+    )(*ops)
+
+
+# --------------------------------------------------------------------------
+# registration
+# --------------------------------------------------------------------------
+def _example(small: bool = True, bits: int = 8, batch: int = 0):
+    N, K = (128, 512) if small else (2048, 4096)
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    w = jax.random.normal(ks[0], (N, K), jnp.float32)
+    qt = quantize(w, bits=bits, group_size=128, axis=-1)
+    if batch:
+        x = jax.random.normal(ks[1], (batch, K), jnp.bfloat16)
+    else:
+        x = jax.random.normal(ks[1], (K,), jnp.bfloat16)
+    return (qt.values, qt.scales, x), {}
+
+
+def _qgemv_bytes(wq, s, x):
+    K = x.shape[-1]
+    B = x.shape[0] if len(x.shape) == 2 else 1
+    return (numel(wq) * itemsize(wq) + numel(s) * itemsize(s)
+            + B * K * itemsize(x) + B * wq.shape[0] * 4)
+
+
+def _qgemv_streamed(wq, s, x):
+    out = (x.shape[0], wq.shape[0]) if len(x.shape) == 2 else (wq.shape[0],)
+    return [wq, s, x, jax.ShapeDtypeStruct(out, jnp.float32)]
+
+
+_QSPACE = {"streams": (1, 2), "unroll": (1, 2),
+           "block_n": (128, 256), "block_k": (256, 512)}
+
+
+@troop_kernel(
+    "qgemv",
+    flops=lambda wq, s, x: 2.0 * wq.shape[0] * x.shape[0],
+    bytes=_qgemv_bytes,
+    streamed=_qgemv_streamed,
+    space=_QSPACE,
+    ref="qgemv", example=_example)
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def qgemv(wq, scales, x, cfg: TroopConfig = TroopConfig()):
+    """Quantized GEMV: wq (N, K | K//2-packed) int8, scales (N, K//g),
+    x (K,) -> y (N,) fp32.  Bit width inferred from the packed extent."""
+    return _qgemv_2d(wq, scales, x.reshape(-1, 1), cfg).reshape(-1)
+
+
+@troop_kernel(
+    "batched_qgemv",
+    flops=lambda wq, s, xs: 2.0 * xs.shape[0] * wq.shape[0] * xs.shape[1],
+    bytes=_qgemv_bytes,
+    streamed=_qgemv_streamed,
+    space=_QSPACE,
+    ref="batched_qgemv",
+    example=functools.partial(_example, batch=4))
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def batched_qgemv(wq, scales, xs, cfg: TroopConfig = TroopConfig()):
+    """Small-batch decode projection: xs (B, K) -> (B, N) fp32.  The batch
+    rides the lane dim of one kernel invocation — the weight stream (the
+    roofline term) is unchanged from ``qgemv``."""
+    return _qgemv_2d(wq, scales, xs.T, cfg).T

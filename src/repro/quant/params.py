@@ -1,0 +1,134 @@
+"""``quantize_params`` — walk a model's params pytree and quantize the
+matmul weights by path policy.
+
+Policy (the ISSUE's "MLP/attention projections yes; embeddings/norms no"):
+
+  * quantize: ``w`` leaves of the dense projections the models apply
+    through ``modules.apply_dense`` — attention/MLA/rwkv projections
+    (wq/wk/wv/wo/wg/wr/wdkv), MLP halves (wi_gate/wi_up), the lm_head;
+  * keep raw: embeddings (the ``table`` doubles as the tied unembed),
+    positional tables, norms, biases, routers, MoE *expert* stacks (the
+    MoE dispatch einsums read ``p[...]["w"]`` directly — a shared-expert
+    MLP nested under an expert block still quantizes, it goes through
+    ``apply_dense``), MLA up-projections wuk/wuv (the absorbed decode path
+    reads the raw array to build the latent-space einsums).
+
+Grouping is along the *contraction* axis (``axis=-2`` of an (in, out)
+weight — stacked layer groups (L, in, out) slice through ``lax.scan``
+untouched because the axis is stored negative), with ``group_size`` a
+multiple of the int8 layout granule so scale blocks tile exactly with the
+mechanism-D blocks the qgemv kernels fetch (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.tensor import QuantizedTensor, granule, quantize
+
+# dense projections that every model applies via modules.apply_dense
+QUANTIZE_KEYS = frozenset({
+    "wq", "wk", "wv", "wo", "wg", "wr", "wdkv",
+    "wi_gate", "wi_up", "lm_head",
+})
+# raw-array access in model code: never quantize these
+EXCLUDE_KEYS = frozenset({"wuk", "wuv", "embed", "pos_table", "router"})
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return tuple(out)
+
+
+def default_policy(keys: Tuple[str, ...], leaf) -> bool:
+    """True iff the leaf at dict-path ``keys`` is a quantizable weight."""
+    if len(keys) < 2 or keys[-1] != "w":
+        return False
+    if any(k in EXCLUDE_KEYS for k in keys):
+        return False
+    if keys[-2] not in QUANTIZE_KEYS:
+        return False
+    arr = getattr(leaf, "value", leaf)          # boxed Param or raw array
+    if getattr(arr, "ndim", 0) < 2:
+        return False
+    return jnp.issubdtype(jnp.asarray(arr).dtype, jnp.floating)
+
+
+def _moe_expert_prefixes(paths) -> set:
+    """Dict-prefixes of MoE blocks: any dict that also holds a ``router``
+    is an expert container — its direct wi_*/wo members are the stacked
+    expert weights read raw by the dispatch einsums."""
+    out = set()
+    for keys in paths:
+        if len(keys) >= 2 and keys[-2] == "router":
+            out.add(keys[:-2])
+    return out
+
+
+def quantize_params(params, *, bits: int = 8, group_size: int = 128,
+                    policy: Optional[Callable] = None,
+                    scale_dtype=jnp.float32):
+    """Quantize the matmul weights of an (unboxed) params pytree.
+
+    Returns the same tree with policy-selected ``w`` leaves replaced by
+    ``QuantizedTensor``s (``modules.apply_dense`` dequantizes on the fly;
+    the decode GEMVs have fused-dequant Pallas kernels in
+    ``repro.quant.kernels``).  ``bits``: 8 or 4 (int4 packs two values per
+    byte).  ``group_size`` groups the contraction axis and must be a
+    multiple of the int8 layout granule (mechanism-D alignment).
+    """
+    assert bits in (8, 4)
+    assert group_size % granule() == 0, \
+        f"group_size {group_size} not a multiple of the {granule()}-row " \
+        f"int8 layout granule (mechanism D — see DESIGN.md §5)"
+    pol = policy or default_policy
+    leaves, _ = jax.tree_util.tree_flatten_with_path(params)
+    moe = _moe_expert_prefixes([_path_keys(p) for p, _ in leaves])
+
+    def visit(path, leaf):
+        keys = _path_keys(path)
+        if len(keys) >= 2 and keys[:-2] in moe:
+            return leaf                          # stacked MoE expert weights
+        if not pol(keys, leaf):
+            return leaf
+        # int4 packs pairs along the contraction axis: odd extents stay int8
+        b = bits if (bits == 8 or leaf.shape[-2] % 2 == 0) else 8
+        return quantize(leaf, bits=b, group_size=group_size, axis=-2,
+                        scale_dtype=scale_dtype)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def quantized_stats(params) -> Dict[str, Any]:
+    """Byte accounting of a (possibly) quantized tree: raw vs quantized
+    leaf counts, total parameter bytes (the roofline numerator), and the
+    fp32 bytes the quantized leaves replaced (the roofline *move*)."""
+    import math
+    n_q = n_raw = b_q = b_raw = b_was = 0
+
+    def visit(leaf):
+        nonlocal n_q, n_raw, b_q, b_raw, b_was
+        if isinstance(leaf, QuantizedTensor):
+            n_q += 1
+            b_q += leaf.nbytes
+            b_was += int(math.prod(leaf.shape)) * 4
+        else:
+            n_raw += 1
+            b_raw += getattr(leaf, "size", 0) * \
+                jnp.dtype(getattr(leaf, "dtype", jnp.float32)).itemsize
+        return leaf
+
+    jax.tree.map(visit, params,
+                 is_leaf=lambda x: isinstance(x, QuantizedTensor))
+    return {"quantized_leaves": n_q, "raw_leaves": n_raw,
+            "quantized_bytes": int(b_q), "raw_bytes": int(b_raw),
+            "quantized_fp32_bytes": int(b_was)}

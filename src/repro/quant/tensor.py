@@ -1,0 +1,232 @@
+"""QuantizedTensor — the repo's one quantized-array representation.
+
+TROOP's completion criterion is ``runtime == bytes / BW``: on a low-OI
+kernel every operand byte IS the bound, so shrinking operand bytes moves
+the roofline itself (PAPER §II; "Know your rooflines!", PAPERS.md).  This
+module is the primitive layer every quantized path shares:
+
+  * ``QuantizedTensor`` — a pytree of int8 storage (int4 packs two values
+    per byte along the grouped axis) + per-group absmax scales.  The
+    group size is a multiple of the ``core.troop`` layout granule for
+    int8 storage, so scale blocks tile exactly with the mechanism-D
+    hardware granules the kernels block on (one scale block per
+    (block_n, group) tile — no scale fetch ever straddles a tile edge).
+  * ``quantize`` / ``dequantize`` — absmax calibration and its inverse,
+    grouped along one (reduction) axis or per-tensor.
+  * ``pack_int4`` / ``unpack_int4`` — nibble packing used by the int4
+    kernels (low nibble = even index, high nibble = odd index).
+
+Consumers: ``repro.quant.params`` (weight pytrees), ``repro.quant.kernels``
+(fused-dequant qgemv), ``models/attention.py`` (quantized KV),
+``serve/kvcache.py`` (int8 page pools), ``dist/compression.py`` (gradient
+compression).  Kept import-light (jax + core.troop only): models and the
+serving layer import it at module scope.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.troop import sublane
+
+# storage is always int8; int4 packs two values per byte
+STORAGE_DTYPE = jnp.int8
+
+
+def granule() -> int:
+    """Layout granule (rows) of the int8 storage dtype — scale groups must
+    tile in multiples of this so scale blocks align with mechanism-D tiles."""
+    return sublane(STORAGE_DTYPE)
+
+
+def _qmax(bits: int) -> int:
+    assert bits in (8, 4), f"bits must be 8 or 4, got {bits}"
+    return 127 if bits == 8 else 7
+
+
+# --------------------------------------------------------------------------
+# int4 nibble packing
+# --------------------------------------------------------------------------
+def pack_int4(q, axis: int = -1):
+    """Pack int8-held int4 values (range [-7, 7]) two-per-byte along
+    ``axis`` (even index -> low nibble, odd -> high).  Extent must be even."""
+    ax = axis if axis < 0 else axis - q.ndim
+    qm = jnp.moveaxis(q, ax, -1)
+    K = qm.shape[-1]
+    assert K % 2 == 0, f"int4 packing needs an even extent, got {K}"
+    pairs = qm.reshape(qm.shape[:-1] + (K // 2, 2))
+    lo = pairs[..., 0] & jnp.int8(0x0F)
+    hi = jnp.left_shift(pairs[..., 1], 4)          # wraps mod 256: the nibble
+    return jnp.moveaxis((lo | hi).astype(jnp.int8), -1, ax)
+
+
+def unpack_int4(packed, axis: int = -1):
+    """Inverse of ``pack_int4``: (..., K//2) int8 -> (..., K) int8 values."""
+    ax = axis if axis < 0 else axis - packed.ndim
+    pm = jnp.moveaxis(packed, ax, -1)
+    lo = jnp.right_shift(jnp.left_shift(pm, 4), 4)  # arithmetic: sign-extend
+    hi = jnp.right_shift(pm, 4)
+    out = jnp.stack([lo, hi], axis=-1).reshape(pm.shape[:-1]
+                                               + (2 * pm.shape[-1],))
+    return jnp.moveaxis(out.astype(jnp.int8), -1, ax)
+
+
+# --------------------------------------------------------------------------
+# QuantizedTensor pytree
+# --------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class QuantizedTensor:
+    """int8/int4 values + per-group absmax scales.
+
+    ``values``/``scales`` are the pytree children (they trace, scan-slice
+    and shard like any array); ``bits``/``group_size``/``axis`` are static.
+    ``axis`` is stored NEGATIVE so slicing leading dims (``lax.scan`` over
+    stacked layer groups) keeps it valid.  ``axis=None`` means one
+    per-tensor scalar scale (the gradient-compression layout).
+    """
+    values: Any                      # int8 storage; int4: packed along axis
+    scales: Any                      # (..., extent // group_size) or scalar
+    bits: int = 8
+    group_size: int = 0              # effective group (0 for per-tensor)
+    axis: Optional[int] = -1         # grouped axis (negative), None = tensor
+
+    def tree_flatten(self):
+        return ((self.values, self.scales),
+                (self.bits, self.group_size, self.axis))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+    # ------------------------------------------------------------- views
+    @property
+    def shape(self):
+        """Logical (unpacked) shape."""
+        s = list(self.values.shape)
+        if self.bits == 4 and self.axis is not None:
+            s[self.axis] = s[self.axis] * 2
+        return tuple(s)
+
+    @property
+    def nbytes(self) -> int:
+        n = int(math.prod(self.values.shape))
+        m = int(math.prod(getattr(self.scales, "shape", ())))
+        return n + m * jnp.dtype(self.scales.dtype).itemsize
+
+    def dequantize(self, dtype=jnp.float32):
+        return dequantize(self, dtype)
+
+
+def absmax_scales(x, *, bits: int = 8, group_size: Optional[int] = None,
+                  axis: Optional[int] = -1, eps: float = 1e-8):
+    """Absmax calibration: per-group max(|x|)/qmax (floored at ``eps``).
+
+    ``axis=None`` -> one scalar scale; otherwise groups of ``group_size``
+    along ``axis`` (``None``/non-dividing group sizes collapse to one group
+    spanning the whole axis).  Returns (scales, effective_group_size).
+    """
+    xf = jnp.abs(x.astype(jnp.float32))
+    q = _qmax(bits)
+    if axis is None:
+        return jnp.maximum(jnp.max(xf) / q, eps), 0
+    ax = axis if axis < 0 else axis - x.ndim
+    K = x.shape[ax]
+    g = group_size or K
+    if K % g:
+        g = K                              # fallback: one group per row
+    xm = jnp.moveaxis(xf, ax, -1)
+    amax = jnp.max(xm.reshape(xm.shape[:-1] + (K // g, g)), axis=-1)
+    scales = jnp.maximum(amax / q, eps)
+    return jnp.moveaxis(scales, -1, ax), g
+
+
+def quantize(x, *, bits: int = 8, group_size: Optional[int] = None,
+             axis: Optional[int] = -1, eps: float = 1e-8,
+             scale_dtype=jnp.float32) -> QuantizedTensor:
+    """Absmax-quantize ``x`` to a ``QuantizedTensor``.
+
+    int8 clips to [-127, 127]; int4 to [-7, 7] and packs two values per
+    byte along ``axis`` (extent must be even for int4).
+    """
+    qmax = _qmax(bits)
+    scales, g = absmax_scales(x, bits=bits, group_size=group_size,
+                              axis=axis, eps=eps)
+    xf = x.astype(jnp.float32)
+    if axis is None:
+        q = jnp.clip(jnp.round(xf / scales), -qmax, qmax).astype(STORAGE_DTYPE)
+        return QuantizedTensor(q, scales.astype(scale_dtype), bits, 0, None)
+    ax = axis if axis < 0 else axis - x.ndim
+    K = x.shape[ax]
+    xm = jnp.moveaxis(xf, ax, -1)
+    sm = jnp.moveaxis(scales, ax, -1)
+    q = xm.reshape(xm.shape[:-1] + (K // g, g)) / sm[..., None]
+    q = jnp.clip(jnp.round(q), -qmax, qmax).astype(STORAGE_DTYPE)
+    q = jnp.moveaxis(q.reshape(xm.shape), -1, ax)
+    if bits == 4:
+        q = pack_int4(q, axis=ax)
+    return QuantizedTensor(q, jnp.moveaxis(sm, -1, ax).astype(scale_dtype),
+                           bits, g, ax)
+
+
+def dequantize(qt: QuantizedTensor, dtype=jnp.float32):
+    """Inverse of ``quantize`` (up to rounding): values * per-group scale."""
+    v = qt.values
+    if qt.axis is None:
+        return (v.astype(jnp.float32)
+                * qt.scales.astype(jnp.float32)).astype(dtype)
+    ax = qt.axis
+    if qt.bits == 4:
+        v = unpack_int4(v, axis=ax)
+    vm = jnp.moveaxis(v, ax, -1).astype(jnp.float32)
+    sm = jnp.moveaxis(qt.scales, ax, -1).astype(jnp.float32)
+    K = vm.shape[-1]
+    g = K // sm.shape[-1]
+    out = (vm.reshape(vm.shape[:-1] + (sm.shape[-1], g))
+           * sm[..., None]).reshape(vm.shape)
+    return jnp.moveaxis(out, -1, ax).astype(dtype)
+
+
+def dequantize_values(values, scales, *, axis: int = -1, bits: int = 8,
+                      dtype=jnp.float32):
+    """Raw (values, scales) dequant — the oracle form used by kernel refs
+    and cache paths that carry the two arrays separately."""
+    g = 0
+    if axis is not None:
+        ext = values.shape[axis] * (2 if bits == 4 else 1)
+        g = ext // scales.shape[axis] if scales.ndim == values.ndim else ext
+    return dequantize(QuantizedTensor(values, scales, bits, g, axis), dtype)
+
+
+# --------------------------------------------------------------------------
+# The repo's two historical int8 layouts, as thin views over quantize()
+# --------------------------------------------------------------------------
+def quantize_kv(x, scale_dtype=jnp.bfloat16):
+    """KV layout: (..., hd) -> int8 values + per-row scale (..., 1).
+
+    One absmax group spanning the head dim: the scale rides next to its
+    token in the cache / page pool (§Perf A4 layout; ``models/attention``
+    and the int8 page pools both use exactly this form).
+    """
+    qt = quantize(x, bits=8, group_size=None, axis=-1, eps=1e-8,
+                  scale_dtype=scale_dtype)
+    return qt.values, qt.scales
+
+
+def dequantize_kv(q, scale, dtype):
+    return q.astype(dtype) * scale.astype(dtype)
+
+
+def quantize_int8(x):
+    """Gradient-compression layout: (int8 values, fp32 scalar scale)
+    (``dist/compression`` semantics: scale = max(|x|, 1e-12) / 127)."""
+    qt = quantize(x, bits=8, axis=None, eps=1e-12 / 127.0)
+    return qt.values, qt.scales
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale

@@ -47,9 +47,19 @@ class PagedKVCache(NamedTuple):
     the layer group is stacked for ``lax.scan``.  The block table is *not*
     part of the leaf: it is per-step input (``batch["block_tables"]``), while
     the pools are per-step state — one table addresses every layer's pool.
+
+    ``kv_dtype="int8"`` pools carry *scale pages* alongside: per-(token,
+    head) absmax scales, (P, page, KV, 1), addressed by the SAME block
+    table — the allocator/free list never knows they exist.
     """
     k_pool: jax.Array
     v_pool: jax.Array
+    k_scale_pool: Optional[jax.Array] = None   # (.., P, page, KV, 1) if int8
+    v_scale_pool: Optional[jax.Array] = None
+
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale_pool is not None
 
     @property
     def page_size(self) -> int:
@@ -66,12 +76,13 @@ class PageSpec:
     page_size: int            # tokens per page (a troop layout granule)
     num_pages: int            # physical pages per layer pool (incl. null)
     blocks_per_slot: int      # logical blocks per slot (= ceil(S / page))
+    kv_dtype: str = "bfloat16"  # page-pool storage ("int8" adds scale pages)
 
-    def validate(self, dtype="bfloat16"):
-        g = sublane(dtype)
+    def validate(self):
+        g = sublane(self.kv_dtype)
         assert self.page_size % g == 0, \
             f"page_size {self.page_size} not a multiple of the " \
-            f"{g}-row layout granule for {dtype} (mechanism D)"
+            f"{g}-row layout granule for {self.kv_dtype} (mechanism D)"
         assert self.num_pages > NULL_PAGE + 1
         return self
 
@@ -81,7 +92,8 @@ class PageSpec:
                    dtype="bfloat16") -> "PageSpec":
         blocks = -(-cache_len // page_size)
         pages = num_pages if num_pages is not None else slots * blocks + 1
-        return PageSpec(page_size, pages, blocks).validate(dtype)
+        return PageSpec(page_size, pages, blocks,
+                        jnp.dtype(dtype).name).validate()
 
 
 class BlockAllocator:
@@ -273,18 +285,35 @@ class PagedBackend:
     with dense); smaller values overcommit HBM — admission then *defers*
     when the pool is exhausted instead of OOMing, exactly like a production
     engine under memory pressure.
+
+    ``kv_dtype="int8"`` stores pages quantized (per-(token, head) absmax
+    scales in sibling scale pages — same block table, same allocator; the
+    free list never changes).  Left ``None`` it follows the model's
+    ``RuntimeConfig.kv_cache_dtype`` so a quantized engine is one flag;
+    note the int8 layout granule is coarser (pages must be multiples of 32
+    rows, not 16 — ``PageSpec.validate``).
     """
 
     name = "paged"
 
     def __init__(self, page_size: int = 16,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None,
+                 kv_dtype: Optional[str] = None):
         self.page_size = page_size
         self.num_pages = num_pages
+        self.kv_dtype = kv_dtype
         self.spec: Optional[PageSpec] = None
 
+    def _resolve_kv_dtype(self, model) -> str:
+        if self.kv_dtype is not None:
+            return self.kv_dtype
+        rt = getattr(model, "rt", None)
+        if rt is not None and getattr(rt, "kv_cache_dtype", "") == "int8":
+            return "int8"
+        return jnp.dtype(model.cfg.dtype).name
+
     def init_caches(self, model, slots: int, cache_len: int):
-        dtype = jnp.dtype(model.cfg.dtype)
+        dtype = self._resolve_kv_dtype(model)
         self.slots = slots
         self.cache_len = cache_len
         self.spec = PageSpec.for_engine(slots, cache_len, self.page_size,
@@ -329,14 +358,33 @@ class PagedBackend:
                 # src is the dense prefill KVCache for this sublayer;
                 # its batch axis is 0 (unstacked) or 1 (stacked layers)
                 b_axis = 0 if dst.k_pool.ndim == 4 else 1
-                k_rows = jax.lax.index_in_dim(
-                    src.k, row, axis=b_axis, keepdims=False)
-                v_rows = jax.lax.index_in_dim(
-                    src.v, row, axis=b_axis, keepdims=False)
+
+                def rows(a):
+                    return jax.lax.index_in_dim(a, row, axis=b_axis,
+                                                keepdims=False)
+
                 use = pages[:n_prefill]
+                if not dst.quantized:
+                    return PagedKVCache(
+                        _pool_scatter(dst.k_pool, rows(src.k), use),
+                        _pool_scatter(dst.v_pool, rows(src.v), use))
+                # int8 pools: scatter quantized rows + their scale rows.
+                # An int8 *prefill* cache (rt.kv_cache_dtype == "int8")
+                # already carries per-token scales — reuse them verbatim so
+                # paged and dense int8 engines are numerically identical;
+                # a bf16 prefill cache is quantized here, at admit.
+                if getattr(src, "quantized", False):
+                    k8, ks = rows(src.k), rows(src.k_scale)
+                    v8, vs = rows(src.v), rows(src.v_scale)
+                else:
+                    from repro.quant.tensor import quantize_kv
+                    k8, ks = quantize_kv(rows(src.k))
+                    v8, vs = quantize_kv(rows(src.v))
                 return PagedKVCache(
-                    _pool_scatter(dst.k_pool, k_rows, use),
-                    _pool_scatter(dst.v_pool, v_rows, use))
+                    _pool_scatter(dst.k_pool, k8, use),
+                    _pool_scatter(dst.v_pool, v8, use),
+                    _pool_scatter(dst.k_scale_pool, ks, use),
+                    _pool_scatter(dst.v_scale_pool, vs, use))
             return dst
 
         # paged leaves first (is_leaf stops recursion there), then the
@@ -367,6 +415,7 @@ class PagedBackend:
             "backend": self.name,
             "page_size": sp.page_size if sp else self.page_size,
             "num_pages": sp.num_pages if sp else self.num_pages,
+            "kv_dtype": sp.kv_dtype if sp else self.kv_dtype,
             "pages_free": self.allocator.num_free if sp else None,
             "pages_in_use": (sp.num_pages - 1 - self.allocator.num_free)
             if sp else None,

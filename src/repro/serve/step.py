@@ -35,6 +35,7 @@ def tuned_kernel_configs(model_cfg, batch_size: int, max_seq: int,
     overcommitting).
     """
     import repro.kernels  # noqa: F401  (populates the tune registry)
+    from repro.quant.tensor import granule
     from repro.serve.kvcache import PageSpec
     from repro.tune import get_tuned
 
@@ -45,18 +46,41 @@ def tuned_kernel_configs(model_cfg, batch_size: int, max_seq: int,
     d, V = model_cfg.d_model, model_cfg.vocab_size
     spec = PageSpec.for_engine(B, S, page_size, num_pages, jnp.dtype(dtype))
     P, nblk = spec.num_pages, spec.blocks_per_slot
+    # int8 pages obey the coarser int8 layout granule (32 rows); the scale
+    # group of the quantized readout GEMV likewise (mechanism D, DESIGN §5)
+    p8 = -(-page_size // granule()) * granule()
+    spec8 = PageSpec.for_engine(B, S, p8, num_pages, "int8")
+    P8, nblk8 = spec8.num_pages, spec8.blocks_per_slot
+    g = 128 if d % 128 == 0 else d
     return {
         "decode_attention": get_tuned(
             "decode_attention",
             sds((B, H, hd), dtype), sds((B, S, KV, hd), dtype),
             sds((B, S, KV, hd), dtype), sds((B,), jnp.int32)),
+        "decode_attention_int8": get_tuned(
+            "decode_attention_int8",
+            sds((B, H, hd), dtype),
+            sds((B, S, KV, hd), jnp.int8), sds((B, S, KV, 1), jnp.bfloat16),
+            sds((B, S, KV, hd), jnp.int8), sds((B, S, KV, 1), jnp.bfloat16),
+            sds((B,), jnp.int32)),
         "paged_decode_attention": get_tuned(
             "paged_decode_attention",
             sds((B, H, hd), dtype),
             sds((P, page_size, KV, hd), dtype),
             sds((P, page_size, KV, hd), dtype),
             sds((B, nblk), jnp.int32), sds((B,), jnp.int32)),
+        "paged_decode_attention_int8": get_tuned(
+            "paged_decode_attention_int8",
+            sds((B, H, hd), dtype),
+            sds((P8, p8, KV, hd), jnp.int8),
+            sds((P8, p8, KV, 1), jnp.bfloat16),
+            sds((P8, p8, KV, hd), jnp.int8),
+            sds((P8, p8, KV, 1), jnp.bfloat16),
+            sds((B, nblk8), jnp.int32), sds((B,), jnp.int32)),
         "gemv": get_tuned("gemv", sds((V, d), dtype), sds((d,), dtype)),
+        "qgemv": get_tuned(
+            "qgemv", sds((V, d), jnp.int8), sds((V, d // g), jnp.float32),
+            sds((d,), dtype)),
         "rmsnorm": get_tuned("rmsnorm", sds((B, d), dtype),
                              sds((d,), jnp.float32)),
     }

@@ -79,6 +79,15 @@ def cache_key(name: str, args: Sequence[Any], backend: Optional[str] = None,
     return f"{name}|{arg_signature(args)}|{backend}{var}"
 
 
+def operand_bytes(operands) -> float:
+    """Total bytes of a streamed-operand list (arrays / ShapeDtypeStructs).
+
+    The audit invariant behind every ``bytes=`` cost model: modeled traffic
+    must equal the sum of the operands the kernel actually streams —
+    including scale tensors for quantized layouts (tested registry-wide)."""
+    return float(sum(numel(o) * itemsize(o) for o in operands))
+
+
 @dataclass(frozen=True)
 class KernelSpec:
     name: str
@@ -90,6 +99,9 @@ class KernelSpec:
     example: Optional[Callable] = None  # (small=True) -> (args, kwargs)
     default: TroopConfig = TroopConfig()
     key_kwargs: Tuple[str, ...] = ()  # kwargs that select a kernel variant
+    streamed: Optional[Callable] = None  # (*args) -> streamed-operand list
+    #   (each with .shape/.dtype; sum of nbytes must equal bytes(*args) —
+    #   scalar/SMEM prefetch args are excluded by convention)
 
     def reference(self) -> Optional[Callable]:
         if self.ref is None:
@@ -129,7 +141,8 @@ def troop_kernel(name: str, *, flops: Callable, bytes: Callable,
                  ref: Optional[str] = None,
                  example: Optional[Callable] = None,
                  default: Optional[TroopConfig] = None,
-                 key_kwargs: Tuple[str, ...] = ()):
+                 key_kwargs: Tuple[str, ...] = (),
+                 streamed: Optional[Callable] = None):
     """Register a kernel and return its registry-dispatching wrapper."""
     def deco(fn: Callable) -> Callable:
         spec = KernelSpec(
@@ -137,7 +150,7 @@ def troop_kernel(name: str, *, flops: Callable, bytes: Callable,
             space=dict(space) if space is not None else dict(DEFAULT_SPACE),
             ref=ref, example=example,
             default=default if default is not None else TroopConfig(),
-            key_kwargs=tuple(key_kwargs))
+            key_kwargs=tuple(key_kwargs), streamed=streamed)
         REGISTRY[name] = spec
 
         def dispatch(*args, **kwargs):

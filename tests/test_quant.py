@@ -1,0 +1,365 @@
+"""repro.quant: QuantizedTensor roundtrips, int4 packing, the policy pass
+over model params, fused-dequant kernels vs their oracles, int8 page pools
+(paged vs dense vs bf16 engine parity + allocator accounting), and the
+dedup of the historical int8 helpers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels as K
+from repro.configs import get_config, reduced
+from repro.core.troop import BASELINE, TROOP
+from repro.kernels import ref as R
+from repro.models import RuntimeConfig, build_model
+from repro.models import modules as M
+from repro.quant import (QuantizedTensor, dequantize, pack_int4,
+                         quantize, quantize_params, quantized_stats,
+                         unpack_int4)
+from repro.serve.kvcache import PagedBackend
+from repro.serve.scheduler import Request, ServingEngine
+from repro.serve.step import make_prefill_step, make_serve_step
+
+
+# --------------------------------------------------------------------------
+# tensor layer
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("bits,rtol", [(8, 1e-2), (4, 2e-1)])
+@pytest.mark.parametrize("shape,axis", [((64, 256), -1), ((256, 64), -2),
+                                        ((3, 64, 256), -1)])
+def test_quantize_dequantize_roundtrip(bits, rtol, shape, axis):
+    x = jax.random.normal(jax.random.PRNGKey(0), shape, jnp.float32)
+    qt = quantize(x, bits=bits, group_size=128, axis=axis)
+    assert qt.values.dtype == jnp.int8
+    assert qt.shape == shape
+    y = dequantize(qt, jnp.float32)
+    assert float(jnp.max(jnp.abs(y - x))) <= rtol * float(jnp.max(jnp.abs(x)))
+
+
+def test_quantize_per_tensor_scalar_scale():
+    x = jax.random.normal(jax.random.PRNGKey(1), (333,), jnp.float32)
+    qt = quantize(x, bits=8, axis=None)
+    assert qt.scales.shape == ()
+    y = dequantize(qt)
+    assert float(jnp.max(jnp.abs(y - x))) <= 1.5e-2 * float(jnp.max(jnp.abs(x)))
+
+
+def test_int4_pack_unpack_exact():
+    q = jnp.asarray(np.random.default_rng(0).integers(-7, 8, (16, 64)),
+                    jnp.int8)
+    for axis in (-1, 0):
+        assert np.array_equal(np.asarray(unpack_int4(pack_int4(q, axis),
+                                                     axis)), np.asarray(q))
+
+
+def test_quantized_tensor_is_a_pytree_and_scan_slices():
+    """Stacked (L, in, out) weights slice through tree ops exactly like a
+    scanned layer group: the negative grouped axis survives."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (3, 128, 64), jnp.float32)
+    qt = quantize(w, bits=8, group_size=128, axis=-2)
+    leaves, treedef = jax.tree_util.tree_flatten(qt)
+    assert len(leaves) == 2
+    assert jax.tree_util.tree_unflatten(treedef, leaves) == qt
+    sliced = jax.tree.map(lambda v: v[1], qt)
+    np.testing.assert_allclose(np.asarray(dequantize(sliced)),
+                               np.asarray(dequantize(qt))[1], rtol=1e-6)
+
+
+def test_group_size_must_align_with_granule():
+    params = {"wq": {"w": jnp.ones((64, 64), jnp.float32)}}
+    with pytest.raises(AssertionError, match="granule"):
+        quantize_params(params, group_size=48)
+
+
+def test_scale_blocks_align_with_kernel_tiles():
+    """Mechanism-D alignment: the scale group divides every block_k the
+    qgemv space can pick, so no scale block straddles a tile edge."""
+    from repro.tune import REGISTRY
+    for bk in REGISTRY["qgemv"].space["block_k"]:
+        assert bk % 128 == 0
+
+
+# --------------------------------------------------------------------------
+# quantize_params policy
+# --------------------------------------------------------------------------
+def _leaf_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        keys = tuple(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path)
+        out[keys] = leaf
+    return out
+
+
+def test_quantize_params_policy_moe_arch():
+    """MLP/attention projections quantize; embeddings, norms, router and
+    the raw-einsum MoE expert stacks stay untouched."""
+    cfg = reduced(get_config("qwen2-moe-a2.7b"))
+    model = build_model(cfg, RuntimeConfig(remat="none", moe_groups=1))
+    params = M.unbox(model.init(jax.random.PRNGKey(0)))
+    qp = quantize_params(params, bits=8)
+    for keys, leaf in _leaf_paths(qp).items():
+        q = isinstance(leaf, QuantizedTensor) or (
+            hasattr(leaf, "dtype") and leaf.dtype == jnp.int8)
+        if "embed" in keys or "router" in keys or "norm1" in keys \
+                or "final_norm" in keys:
+            assert not q, keys
+        if keys[-2:] == ("wq", "w"):
+            assert q, keys
+    stats = quantized_stats(qp)
+    assert stats["quantized_leaves"] > 0
+    # MoE expert stacks (sibling of the router) stay raw
+    raw = _leaf_paths(params)
+    for keys, leaf in raw.items():
+        if "router" in keys:
+            prefix = keys[:keys.index("router")]
+            for k2, l2 in _leaf_paths(qp).items():
+                if k2[:len(prefix)] == prefix and "wi_up" in k2 \
+                        and "shared" not in k2:
+                    assert not isinstance(l2, QuantizedTensor), k2
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "deepseek-v2-lite-16b"])
+@pytest.mark.parametrize("bits,rtol", [(8, 0.05)])
+def test_quantized_forward_tracks_fp(arch, bits, rtol):
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg, RuntimeConfig(remat="none", moe_groups=1))
+    params = M.unbox(model.init(jax.random.PRNGKey(0)))
+    qp = quantize_params(params, bits=bits)
+    toks = jnp.arange(2 * 8).reshape(2, 8) % 7 + 1
+    lf, _ = model.train_logits(params, {"tokens": toks})
+    lq, _ = model.train_logits(qp, {"tokens": toks})
+    rel = float(jnp.max(jnp.abs(lq - lf)) / jnp.max(jnp.abs(lf)))
+    assert rel < rtol, rel
+
+
+# --------------------------------------------------------------------------
+# fused-dequant kernels
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("N,K_", [(256, 1024), (128, 512)])
+@pytest.mark.parametrize("bits", [8, 4])
+def test_qgemv(N, K_, bits):
+    w = jax.random.normal(jax.random.PRNGKey(0), (N, K_), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (K_,), jnp.bfloat16)
+    qt = quantize(w, bits=bits, group_size=128, axis=-1)
+    want = np.asarray(R.qgemv(qt.values, qt.scales, x))
+    for cfg in (BASELINE, TROOP):
+        got = np.asarray(K.qgemv(qt.values, qt.scales, x, cfg))
+        # exact vs the dequantized oracle (isolates kernel error)
+        np.testing.assert_allclose(got, want, rtol=3e-3, atol=3e-3)
+    # within quantization noise of the fp32 oracle
+    full = np.asarray(R.gemv(w, x.astype(jnp.float32)))
+    tol = 2e-2 if bits == 8 else 2e-1
+    assert np.max(np.abs(want - full)) <= tol * np.max(np.abs(full))
+
+
+@pytest.mark.parametrize("B", [1, 4])
+def test_batched_qgemv(B):
+    N, K_ = 128, 512
+    w = jax.random.normal(jax.random.PRNGKey(0), (N, K_), jnp.float32)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (B, K_), jnp.bfloat16)
+    qt = quantize(w, bits=8, group_size=128, axis=-1)
+    want = np.asarray(R.batched_qgemv(qt.values, qt.scales, xs))
+    for cfg in (BASELINE, TROOP):
+        got = np.asarray(K.batched_qgemv(qt.values, qt.scales, xs, cfg))
+        np.testing.assert_allclose(got, want, rtol=3e-3, atol=3e-3)
+
+
+def test_qgemv_bytes_under_point6_of_bf16():
+    """The acceptance bound: modeled qgemv bytes <= 0.6x bf16 gemv bytes
+    at the same logical shape (int8 + scale traffic vs bf16)."""
+    from repro.tune import REGISTRY
+    sds = jax.ShapeDtypeStruct
+    N, K_ = 2048, 4096
+    bf = REGISTRY["gemv"].bytes(sds((N, K_), jnp.bfloat16),
+                                sds((K_,), jnp.bfloat16))
+    q8 = REGISTRY["qgemv"].bytes(sds((N, K_), jnp.int8),
+                                 sds((N, K_ // 128), jnp.float32),
+                                 sds((K_,), jnp.bfloat16))
+    q4 = REGISTRY["qgemv"].bytes(sds((N, K_ // 2), jnp.int8),
+                                 sds((N, K_ // 128), jnp.float32),
+                                 sds((K_,), jnp.bfloat16))
+    assert q8 <= 0.6 * bf
+    assert q4 <= 0.35 * bf
+
+
+@pytest.mark.parametrize("B,H,KV,hd,page,nblk", [
+    (2, 8, 8, 64, 32, 8), (2, 8, 2, 64, 32, 3), (1, 16, 4, 128, 32, 4),
+])
+def test_paged_decode_attention_int8(B, H, KV, hd, page, nblk):
+    """int8 pools + scale pages through the block-table gather == the
+    dequantized oracle (incl. odd-nblk one-stream fallback)."""
+    from repro.quant import quantize_kv
+    P = 1 + B * nblk
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.bfloat16)
+    k_pool = jax.random.normal(ks[1], (P, page, KV, hd), jnp.float32)
+    v_pool = jax.random.normal(ks[2], (P, page, KV, hd), jnp.float32)
+    k8, ksc = quantize_kv(k_pool)
+    v8, vsc = quantize_kv(v_pool)
+    perm = np.random.default_rng(0).permutation(P - 1) + 1
+    bt = jnp.asarray(perm[:B * nblk].reshape(B, nblk), jnp.int32)
+    S = nblk * page
+    length = jnp.asarray([(S // 2 + 17 * b) % S + 1 for b in range(B)],
+                         jnp.int32)
+    want = np.asarray(
+        R.paged_decode_attention_int8(q, k8, ksc, v8, vsc, bt, length),
+        np.float32)
+    for cfg in (BASELINE, TROOP):
+        got = np.asarray(
+            K.paged_decode_attention_int8(q, k8, ksc, v8, vsc, bt, length,
+                                          cfg), np.float32)
+        np.testing.assert_allclose(got, want, rtol=3e-2, atol=3e-2)
+
+
+# --------------------------------------------------------------------------
+# int8 paged engine: parity + allocator accounting (two archs)
+# --------------------------------------------------------------------------
+def _engine(model, params, backend, **kw):
+    kw.setdefault("slots", 3)
+    kw.setdefault("cache_len", 64)
+    kw.setdefault("min_bucket", 4)
+    return ServingEngine(
+        model, prefill_step=make_prefill_step(model),
+        serve_step=make_serve_step(model), params=params, backend=backend,
+        **kw)
+
+
+def _serve(model, params, backend):
+    eng = _engine(model, params, backend)
+    reqs = [Request(rid=i, prompt=np.arange(1, 5 + 2 * i) % 63 + 1,
+                    max_new_tokens=6) for i in range(4)]
+    for r in reqs:
+        eng.submit(r)
+    finished = eng.run_until_drained()
+    assert len(finished) == len(reqs)
+    return {r.rid: r.out for r in reqs}, eng
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "glm4-9b"])
+def test_paged_int8_matches_dense_int8_and_tracks_bf16(arch):
+    """Token-identical greedy outputs: paged-int8 == dense-int8 (same
+    quantization, different layout); and the int8 decode logits stay
+    within quantization tolerance of the bf16 engine's."""
+    cfg = reduced(get_config(arch),
+                  num_layers=2, d_model=64, d_ff=128, vocab_size=128,
+                  num_heads=2, num_kv_heads=2, head_dim=32)
+    rt8 = RuntimeConfig(remat="none", kv_cache_dtype="int8")
+    model8 = build_model(cfg, rt8)
+    model_bf = build_model(cfg, RuntimeConfig(remat="none"))
+    params = M.unbox(model_bf.init(jax.random.PRNGKey(0)))
+
+    out_d8, _ = _serve(model8, params, "dense")
+    out_p8, eng8 = _serve(model8, params,
+                          PagedBackend(page_size=32, kv_dtype="int8"))
+    assert out_p8 == out_d8
+
+    # int8 vs bf16: compare one decode step's logits (greedy tokens can
+    # legitimately flip near ties under quantization noise)
+    eng_bf = _engine(model_bf, params, "paged")
+    eng8b = _engine(model8, params, PagedBackend(page_size=32,
+                                                 kv_dtype="int8"))
+    prompt = np.asarray([3, 14, 15, 9], np.int32)
+    for eng, model in ((eng_bf, model_bf), (eng8b, model8)):
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=2))
+        eng.step()
+    batch = {"tokens": jnp.asarray(eng_bf.last_tok[:, None]),
+             "pos": jnp.asarray(eng_bf.pos)}
+    l_bf, _ = model_bf.decode_step(
+        params, dict(batch, **eng_bf.backend.batch_extras()), eng_bf.caches)
+    l_q8, _ = model8.decode_step(
+        params, dict(batch, **eng8b.backend.batch_extras()), eng8b.caches)
+    np.testing.assert_allclose(
+        np.asarray(l_q8[0], np.float32), np.asarray(l_bf[0], np.float32),
+        rtol=0.15, atol=0.15)
+
+
+def test_paged_int8_allocator_accounting_no_leaked_pages():
+    """Scale pages ride the value pages' table entries: the allocator is
+    unchanged, and a drained engine returns every page."""
+    cfg = reduced(get_config("qwen1.5-0.5b"),
+                  num_layers=2, d_model=64, d_ff=128, vocab_size=128,
+                  num_heads=2, num_kv_heads=2, head_dim=32)
+    model = build_model(cfg, RuntimeConfig(remat="none",
+                                           kv_cache_dtype="int8"))
+    params = M.unbox(model.init(jax.random.PRNGKey(0)))
+    backend = PagedBackend(page_size=32, kv_dtype="int8")
+    _, eng = _serve(model, params, backend)
+    assert backend.allocator.num_free == backend.spec.num_pages - 1
+    assert backend.spec.kv_dtype == "int8"
+    leaf = eng.caches[0][0]["mixer"]
+    assert leaf.quantized and leaf.k_pool.dtype == jnp.int8
+    assert leaf.k_scale_pool.shape == leaf.k_pool.shape[:-1] + (1,)
+    # int8 pages obey the coarser 32-row granule (mechanism D)
+    with pytest.raises(AssertionError, match="granule"):
+        PagedBackend(page_size=16, kv_dtype="int8").init_caches(
+            model, 2, 64)
+
+
+def test_paged_int8_kernel_decode_matches_jnp_path():
+    """paged_kernel_decode=True routes a quantized paged cache through the
+    fused-dequant Pallas kernel; logits match the jnp gather path."""
+    cfg = reduced(get_config("qwen1.5-0.5b"),
+                  num_layers=2, d_model=64, d_ff=128, vocab_size=128,
+                  num_heads=2, num_kv_heads=2, head_dim=32)
+    rt = RuntimeConfig(remat="none", kv_cache_dtype="int8")
+    model = build_model(cfg, rt)
+    kmodel = build_model(cfg, RuntimeConfig(
+        remat="none", kv_cache_dtype="int8", paged_kernel_decode=True))
+    params = M.unbox(model.init(jax.random.PRNGKey(0)))
+    eng = _engine(model, params, PagedBackend(page_size=32, kv_dtype="int8"),
+                  slots=2)
+    eng.submit(Request(rid=0, prompt=np.asarray([3, 14, 15, 9], np.int32),
+                       max_new_tokens=2))
+    eng.step()
+    batch = {"tokens": jnp.asarray(eng.last_tok[:, None]),
+             "pos": jnp.asarray(eng.pos)}
+    batch.update(eng.backend.batch_extras())
+    l_jnp, _ = model.decode_step(params, batch, eng.caches)
+    l_ker, _ = kmodel.decode_step(params, batch, eng.caches)
+    np.testing.assert_allclose(
+        np.asarray(l_ker[0], np.float32), np.asarray(l_jnp[0], np.float32),
+        rtol=3e-2, atol=3e-2)
+
+
+def test_quantized_weights_serve_end_to_end():
+    """--quantize-weights in engine form: quantized params decode greedily
+    and the byte accounting shows the shrink."""
+    cfg = reduced(get_config("qwen1.5-0.5b"),
+                  num_layers=2, d_model=64, d_ff=128, vocab_size=128,
+                  num_heads=2, num_kv_heads=2, head_dim=32)
+    model = build_model(cfg, RuntimeConfig(remat="none",
+                                           quantize_weights="int8"))
+    params = M.unbox(model.init(jax.random.PRNGKey(0)))
+    qp = quantize_params(params, bits=8)
+    stats = quantized_stats(qp)
+    assert stats["quantized_leaves"] >= 8
+    out, _ = _serve(model, qp, "paged")
+    assert all(len(v) == 6 for v in out.values())
+
+
+# --------------------------------------------------------------------------
+# dedup of the historical helpers
+# --------------------------------------------------------------------------
+def test_attention_quantize_kv_matches_historical_formula():
+    from repro.models.attention import dequantize_kv, quantize_kv
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 16, 4, 64), jnp.float32)
+    q, s = quantize_kv(x)
+    assert q.dtype == jnp.int8 and s.dtype == jnp.bfloat16
+    assert s.shape == (2, 16, 4, 1)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    want_s = jnp.maximum(amax / 127.0, 1e-8).astype(jnp.bfloat16)
+    np.testing.assert_array_equal(np.asarray(s, np.float32),
+                                  np.asarray(want_s, np.float32))
+    y = dequantize_kv(q, s, jnp.float32)
+    assert float(jnp.max(jnp.abs(y - x))) < 2e-2 * float(jnp.max(jnp.abs(x)))
+
+
+def test_dist_compression_wrappers_roundtrip():
+    from repro.dist.compression import dequantize_int8, quantize_int8
+    g = jax.random.normal(jax.random.PRNGKey(0), (257,), jnp.float32)
+    q, s = quantize_int8(g)
+    assert q.dtype == jnp.int8 and s.shape == ()
+    deq = dequantize_int8(q, s)
+    assert float(jnp.max(jnp.abs(deq - g))) <= float(s) * 0.5 + 1e-6

@@ -16,7 +16,10 @@ from repro.kernels import ref as R
 
 ALL_KERNELS = ("gemv", "dotp", "axpy", "rmsnorm", "decode_attention",
                "paged_decode_attention", "flash_attention", "fused_adamw",
-               "mamba_scan", "rwkv6")
+               "mamba_scan", "rwkv6",
+               # repro.quant fused-dequant kernels (DESIGN.md §5)
+               "qgemv", "batched_qgemv", "decode_attention_int8",
+               "paged_decode_attention_int8")
 
 
 @pytest.fixture
@@ -50,6 +53,34 @@ def test_registry_cost_models_accept_shape_structs():
         assert spec.flops(*structs) > 0, name
         assert spec.bytes(*structs) > 0, name
         assert spec.key(*structs) == spec.key(*args), name
+
+
+def test_registry_bytes_models_match_streamed_operands():
+    """Registry-wide audit: every kernel's modeled HBM traffic equals the
+    sum of nbytes of its declared streamed operands (quantized kernels must
+    count scale-tensor traffic — the §Perf A4 bytes audit)."""
+    from repro.tune.registry import operand_bytes
+    for name in tune.names():
+        spec = tune.REGISTRY[name]
+        assert spec.streamed is not None, \
+            f"{name}: declare streamed= so the bytes model is auditable"
+        args, _ = spec.example(small=True)
+        want = operand_bytes(spec.streamed(*args))
+        assert spec.bytes(*args) == pytest.approx(want), \
+            f"{name}: bytes model {spec.bytes(*args)} != streamed {want}"
+
+
+def test_quantized_bytes_models_count_scale_traffic():
+    """The int8 cost models charge for the scale tensors, not just the
+    int8 values — and still come out well under the bf16 sibling."""
+    spec8 = tune.REGISTRY["decode_attention_int8"]
+    (q, k8, ks, v8, vs, ln), _ = spec8.example(small=True)
+    b8 = spec8.bytes(q, k8, ks, v8, vs, ln)
+    values_only = (2 * k8.size + q.size * 2 * 2)
+    assert b8 == values_only + 2 * ks.size * 2     # + k/v scale streams
+    bf = tune.REGISTRY["decode_attention"]
+    (qb, kb, vb, lnb), _ = bf.example(small=True)
+    assert b8 < 0.6 * bf.bytes(qb, kb, vb, lnb)
 
 
 def test_registry_dispatch_matches_reference(tmp_cache):
@@ -191,7 +222,9 @@ def test_tuned_serve_configs(tmp_cache):
     from repro.configs.qwen15_05b import CONFIG as CFG
     from repro.serve.step import tuned_kernel_configs
     cfgs = tuned_kernel_configs(CFG, batch_size=2, max_seq=128)
-    assert set(cfgs) == {"decode_attention", "paged_decode_attention",
-                         "gemv", "rmsnorm"}
+    assert set(cfgs) == {"decode_attention", "decode_attention_int8",
+                         "paged_decode_attention",
+                         "paged_decode_attention_int8",
+                         "gemv", "qgemv", "rmsnorm"}
     for v in cfgs.values():
         assert isinstance(v, TroopConfig)
