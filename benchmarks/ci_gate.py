@@ -1,0 +1,239 @@
+"""Perf-regression CI gate: fresh BENCH_*.json vs committed baselines.
+
+The ROADMAP cares about the BENCH trajectory, but a linear CI job only
+checks that benchmarks *run* — a regression in compile counts, quantization
+error, bytes models or engine completeness lands silently.  This gate
+compares freshly produced ``BENCH_tune/serve/quant.json`` against
+``benchmarks/baselines/*.json`` under per-metric tolerance bands and fails
+the job on regression, printing a markdown delta table (also appended to
+``$GITHUB_STEP_SUMMARY`` when set).
+
+Metric classes:
+
+  * ``exact``     — must equal the baseline bit for bit: compile/trace
+                    counts (the recompile-free invariants), request
+                    completeness, modeled byte counts.  These are
+                    hardware-independent and deterministic.
+  * ``rel_band``  — |cur - base| <= tol * max(|base|, eps): deterministic
+                    ratios (bytes ratios, chunk utilization, prefix hit
+                    rate, the analytic predicted-fraction).
+  * ``max_rel``   — cur <= base * (1 + tol): one-sided ceilings where
+                    *lower is fine* (quantization error).
+  * ``info``      — reported, never gated: wall-clock metrics (steps/s,
+                    tok/s, TTFT, measured_us) vary across CI hardware; the
+                    nightly bench tracks their trajectory as artifacts.
+
+Usage:
+    python benchmarks/ci_gate.py                    # gate (CI)
+    python benchmarks/ci_gate.py --update           # regenerate baselines
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+BASELINE_DIR = os.path.join(HERE, "baselines")
+
+EPS = 1e-12
+
+# (file, path, kind, tol) — path segments; [*] fans out over a list, with
+# row labels derived from kernel/mode/backend/dtype fields.
+GATES = [
+    # --- serve: scheduler invariants ------------------------------------
+    ("BENCH_serve.json", "engines[*].prefill_traces", "exact", 0),
+    ("BENCH_serve.json", "engines[*].all_finished", "exact", 0),
+    ("BENCH_serve.json", "engines[*].requests_finished", "exact", 0),
+    ("BENCH_serve.json", "engines[*].tokens_generated", "exact", 0),
+    ("BENCH_serve.json", "engines[*].chunk_utilization", "rel_band", 0.05),
+    ("BENCH_serve.json", "engines[*].prefix_hit_rate", "rel_band", 0.05),
+    ("BENCH_serve.json", "engines[*].tokens_per_s", "info", 0),
+    ("BENCH_serve.json", "engines[*].ttft_s_mean", "info", 0),
+    ("BENCH_serve.json", "decode_kernels[*].roofline_us", "rel_band", 0.05),
+    ("BENCH_serve.json", "decode_kernels[*].measured_us", "info", 0),
+    # --- tune: the analytic model is deterministic ----------------------
+    ("BENCH_tune.json", "kernels[*].predicted_fraction", "rel_band", 0.05),
+    ("BENCH_tune.json", "kernels[*].fraction_of_roofline", "info", 0),
+    # --- quant: bytes models + error ceilings ---------------------------
+    ("BENCH_quant.json", "qgemv[*].modeled_bytes", "exact", 0),
+    ("BENCH_quant.json", "qgemv[*].bytes_ratio_vs_bf16", "rel_band", 0.01),
+    ("BENCH_quant.json", "qgemv[*].max_rel_err_vs_fp32", "max_rel", 0.5),
+    ("BENCH_quant.json", "paged_decode[*].modeled_bytes", "exact", 0),
+    ("BENCH_quant.json", "paged_decode[*].bytes_ratio_vs_bf16",
+     "rel_band", 0.01),
+    ("BENCH_quant.json", "engines[*].prefill_traces", "exact", 0),
+    ("BENCH_quant.json", "engines[*].requests_finished", "exact", 0),
+    ("BENCH_quant.json", "engines[*].tokens_per_s", "info", 0),
+]
+
+
+def _label(el, idx):
+    if not isinstance(el, dict):
+        return str(idx)
+    parts = [str(el[k]) for k in ("kernel", "mode", "arch") if k in el][:1]
+    parts += [str(el[k]) for k in ("backend", "dtype", "kv_dtype")
+              if k in el and str(el[k]) not in parts]
+    return "/".join(parts) if parts else str(idx)
+
+
+def resolve(doc, path):
+    """Expand a dotted path (with [*] list fan-out) -> [(label, value)]."""
+    items = [("", doc)]
+    for seg in path.split("."):
+        out = []
+        for label, node in items:
+            if seg.endswith("[*]"):
+                for i, el in enumerate(node.get(seg[:-3], [])
+                                       if isinstance(node, dict) else []):
+                    lab = _label(el, i)
+                    out.append((f"{label}.{lab}".lstrip("."), el))
+            elif isinstance(node, dict) and seg in node:
+                out.append((label, node[seg]))
+        seen, uniq = {}, []
+        for lab, v in out:
+            n = seen.get(lab, 0)
+            seen[lab] = n + 1
+            uniq.append((f"{lab}#{n}" if n else lab, v))
+        items = uniq
+    return items
+
+
+def _fmt(v):
+    if isinstance(v, bool):
+        return str(v)
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def compare(kind, tol, base, cur):
+    """-> (ok, delta_str)."""
+    if kind == "info":
+        ok = True
+    elif kind == "exact":
+        ok = base == cur
+    elif isinstance(base, (int, float)) and isinstance(cur, (int, float)) \
+            and not isinstance(base, bool):
+        if kind == "rel_band":
+            ok = abs(cur - base) <= tol * max(abs(base), EPS) + EPS
+        elif kind == "max_rel":
+            ok = cur <= base * (1 + tol) + EPS
+        else:
+            raise ValueError(kind)
+    else:
+        ok = base == cur
+    if isinstance(base, (int, float)) and not isinstance(base, bool) \
+            and isinstance(cur, (int, float)) and base:
+        delta = f"{(cur - base) / abs(base) * 100:+.1f}%"
+    else:
+        delta = "=" if base == cur else "!="
+    return ok, delta
+
+
+def gate(files, baseline_dir, fresh_dir="."):
+    rows, failures = [], []
+    for fname in files:
+        fresh_path = os.path.join(fresh_dir, fname)
+        base_path = os.path.join(baseline_dir, fname)
+        if not os.path.exists(fresh_path):
+            failures.append(f"{fname}: fresh file missing (benchmark did "
+                            f"not run?)")
+            continue
+        if not os.path.exists(base_path):
+            failures.append(f"{fname}: no committed baseline — run "
+                            f"`python benchmarks/ci_gate.py --update` and "
+                            f"commit benchmarks/baselines/")
+            continue
+        fresh = json.load(open(fresh_path))
+        base = json.load(open(base_path))
+        for gfile, path, kind, tol in GATES:
+            if gfile != fname:
+                continue
+            b_items = dict(resolve(base, path))
+            c_items = dict(resolve(fresh, path))
+            for lab, bval in b_items.items():
+                metric = f"{path.split('[*]')[-1].lstrip('.')}"
+                name = f"{lab}.{metric}" if lab else metric
+                if lab not in c_items:
+                    rows.append((fname, name, _fmt(bval), "—", "missing",
+                                 "FAIL" if kind != "info" else "info"))
+                    if kind != "info":
+                        failures.append(f"{fname}:{name} missing from "
+                                        f"fresh run")
+                    continue
+                cval = c_items[lab]
+                ok, delta = compare(kind, tol, bval, cval)
+                status = "info" if kind == "info" else \
+                    ("OK" if ok else "FAIL")
+                rows.append((fname, name, _fmt(bval), _fmt(cval), delta,
+                             status))
+                if not ok:
+                    failures.append(
+                        f"{fname}:{name} {kind}(tol={tol}) baseline="
+                        f"{_fmt(bval)} current={_fmt(cval)} ({delta})")
+            for lab in c_items:
+                if lab not in b_items and kind != "info":
+                    metric = path.split("[*]")[-1].lstrip(".")
+                    rows.append((fname, f"{lab}.{metric}", "—",
+                                 _fmt(c_items[lab]), "new", "info"))
+    return rows, failures
+
+
+def markdown(rows, failures):
+    out = ["## BENCH regression gate", "",
+           "| file | metric | baseline | current | Δ | status |",
+           "|---|---|---|---|---|---|"]
+    for fname, name, b, c, d, status in rows:
+        mark = {"OK": "✅", "FAIL": "❌", "info": "·"}[status]
+        out.append(f"| {fname} | `{name}` | {b} | {c} | {d} | {mark} "
+                   f"{status} |")
+    out.append("")
+    out.append(f"**{'REGRESSION' if failures else 'clean'}** — "
+               f"{len([r for r in rows if r[5] == 'FAIL'])} failing / "
+               f"{len(rows)} compared")
+    return "\n".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--files", nargs="*",
+                    default=["BENCH_tune.json", "BENCH_serve.json",
+                             "BENCH_quant.json"])
+    ap.add_argument("--baseline-dir", default=BASELINE_DIR)
+    ap.add_argument("--fresh-dir", default=".")
+    ap.add_argument("--update", action="store_true",
+                    help="copy the fresh BENCH files over the baselines "
+                         "(commit the result)")
+    args = ap.parse_args(argv)
+
+    if args.update:
+        os.makedirs(args.baseline_dir, exist_ok=True)
+        for fname in args.files:
+            src = os.path.join(args.fresh_dir, fname)
+            if not os.path.exists(src):
+                print(f"skip {fname}: not present", file=sys.stderr)
+                continue
+            shutil.copy(src, os.path.join(args.baseline_dir, fname))
+            print(f"baseline updated: {fname}")
+        return 0
+
+    rows, failures = gate(args.files, args.baseline_dir, args.fresh_dir)
+    md = markdown(rows, failures)
+    print(md)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(md + "\n")
+    if failures:
+        print("\nregressions:", file=sys.stderr)
+        for f_ in failures:
+            print(f"  - {f_}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

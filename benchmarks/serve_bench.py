@@ -1,10 +1,15 @@
 """Serving-engine benchmark -> table + BENCH_serve.json.
 
-Runs the continuous-batching engine end to end under both cache backends
-(dense, paged) on a reduced arch and reports decode steps/s, tokens/s, and
-prefill-compile counts; then times the decode-attention kernels (dense and
-paged layouts) at the serving shapes and scores each as a measured
-fraction-of-roofline (t_roofline / t_measured, tune subsystem denominators).
+Runs the continuous-batching engine end to end in four modes — dense,
+paged, chunked prefill, chunked + prefix cache (the last on a shared
+system-prompt trace) — on a reduced arch and reports decode steps/s,
+tokens/s, per-request TTFT / decode rate, prefill-compile counts and
+prefix-hit rates; then times the decode/prefill attention kernels (dense
+and paged layouts) at the serving shapes and scores each as a measured
+fraction-of-roofline (t_roofline / t_measured, tune subsystem
+denominators).  ``--soak N`` adds an N-request drain through the
+chunked+prefix engine (the nightly workload); ``benchmarks/ci_gate.py``
+gates the JSON against committed baselines.
 
     PYTHONPATH=src python benchmarks/serve_bench.py --fast
 
@@ -26,36 +31,59 @@ if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
 
 
-def bench_engine(arch: str, backend: str, *, slots, cache_len, requests,
-                 max_new, page_size):
+MODES = ("dense", "paged", "chunked", "chunked+prefix")
+
+
+def make_trace(cfg, rng, requests, max_new, *, shared_prefix=0):
+    """Mixed-length prompt trace; ``shared_prefix`` > 0 prepends a common
+    system prompt of that many tokens (the prefix-cache workload)."""
+    import numpy as np
+    from repro.serve.scheduler import Request
+    head = rng.integers(1, min(cfg.vocab_size, 1000), shared_prefix) \
+        if shared_prefix else None
+    reqs = []
+    for i in range(requests):
+        prompt = rng.integers(1, min(cfg.vocab_size, 1000),
+                              int(rng.integers(4, 20)))
+        if head is not None:
+            prompt = np.concatenate([head, prompt])
+        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=max_new))
+    return reqs
+
+
+def bench_engine(arch: str, mode: str, *, slots, cache_len, requests,
+                 max_new, page_size, chunk_size=16):
     import jax
     import numpy as np
     from repro.configs import get_config, reduced
     from repro.models import RuntimeConfig, build_model
     from repro.models import modules as M
     from repro.serve.kvcache import PagedBackend
-    from repro.serve.scheduler import Request, ServingEngine
+    from repro.serve.scheduler import ServingEngine
     from repro.serve.step import make_prefill_step, make_serve_step
 
     cfg = reduced(get_config(arch))
     model = build_model(cfg, RuntimeConfig(remat="none"))
     params = M.unbox(model.init(jax.random.PRNGKey(0)))
-    be = PagedBackend(page_size=page_size) if backend == "paged" else "dense"
+    be = "dense" if mode == "dense" else PagedBackend(page_size=page_size)
+    chunked = mode.startswith("chunked")
+    prefix = mode == "chunked+prefix"
     eng = ServingEngine(
         model, slots=slots, cache_len=cache_len,
         prefill_step=make_prefill_step(model),
-        serve_step=make_serve_step(model), params=params, backend=be)
+        serve_step=make_serve_step(model), params=params, backend=be,
+        chunked_prefill=chunked, chunk_size=chunk_size,
+        prefix_cache=prefix)
     rng = np.random.default_rng(0)
-    for i in range(requests):
-        eng.submit(Request(
-            rid=i, prompt=rng.integers(1, min(cfg.vocab_size, 1000),
-                                       int(rng.integers(4, 20))),
-            max_new_tokens=max_new))
+    reqs = make_trace(cfg, rng, requests, max_new,
+                      shared_prefix=24 if prefix else 0)
+    for r in reqs:
+        eng.submit(r)
     t0 = time.perf_counter()
     finished = eng.run_until_drained()
     wall = time.perf_counter() - t0
     m = eng.metrics()
-    m.update({"arch": cfg.name, "wall_s": wall,
+    m.update({"arch": cfg.name, "mode": mode, "wall_s": wall,
               "requests_submitted": requests,
               "all_finished": len(finished) == requests})
     return m
@@ -85,9 +113,14 @@ def bench_decode_kernels(*, slots, cache_len, page_size, iters):
     perm = np.random.default_rng(0).permutation(P - 1) + 1
     bt = jnp.asarray(perm[:B * nblk].reshape(B, nblk), jnp.int32)
 
+    C = 16
+    qc = jax.random.normal(ks[0], (B, C, H, hd), jnp.bfloat16)
+    q_off = jnp.zeros((B,), jnp.int32)
+    clen = jnp.full((B,), C, jnp.int32)
     cases = {
         "decode_attention": (q, k, v, length),
         "paged_decode_attention": (q, k_pool, v_pool, bt, length),
+        "prefill_attention_paged": (qc, k_pool, v_pool, bt, q_off, clen),
     }
     rows = []
     for name, args in cases.items():
@@ -116,6 +149,9 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--max-new", type=int, default=None)
+    ap.add_argument("--soak", type=int, default=0, metavar="N",
+                    help="also run an N-request mixed-length drain through "
+                         "the chunked+prefix engine (the nightly soak)")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args(argv)
 
@@ -125,15 +161,27 @@ def main(argv=None):
     iters = 1 if args.fast else 3
 
     engines = []
-    for backend in ("dense", "paged"):
-        m = bench_engine(args.arch, backend, slots=args.slots,
+    for mode in MODES:
+        m = bench_engine(args.arch, mode, slots=args.slots,
                          cache_len=args.cache_len, requests=requests,
                          max_new=max_new, page_size=args.page_size)
         engines.append(m)
-        print(f"{backend:<7} {m['decode_steps']:>4} steps  "
+        extra = (f"  prefix_hit {m['prefix_hit_rate']:.2f}"
+                 if "prefix_hit_rate" in m else "")
+        print(f"{mode:<15} {m['decode_steps']:>4} steps  "
               f"{m['decode_steps_per_s']:>8.2f} steps/s  "
               f"{m['tokens_per_s']:>8.2f} tok/s  "
-              f"{m['prefill_traces']} prefill compiles")
+              f"ttft {m['ttft_s_mean']*1e3:>7.1f} ms  "
+              f"{m['prefill_traces']} prefill compiles{extra}")
+
+    soak = None
+    if args.soak:
+        soak = bench_engine(args.arch, "chunked+prefix", slots=args.slots,
+                            cache_len=args.cache_len, requests=args.soak,
+                            max_new=max_new, page_size=args.page_size)
+        print(f"soak({args.soak:>3})      {soak['decode_steps']:>4} steps  "
+              f"{soak['tokens_per_s']:>8.2f} tok/s  "
+              f"drained={soak['all_finished']}")
 
     kernels = bench_decode_kernels(slots=args.slots, cache_len=args.cache_len,
                                    page_size=args.page_size, iters=iters)
@@ -148,6 +196,8 @@ def main(argv=None):
         "engines": engines,
         "decode_kernels": kernels,
     }
+    if soak is not None:
+        payload["soak"] = soak
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=1, default=str)
     print(f"wrote {args.out}")

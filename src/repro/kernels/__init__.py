@@ -13,7 +13,8 @@ from repro.kernels.ops import (axpy, batched_gemv, batched_qgemv,
                                decode_attention_stats, dotp, flash_attention,
                                fused_adamw, gemv, lse_combine, mamba_scan,
                                paged_decode_attention,
-                               paged_decode_attention_int8, qgemv, rmsnorm,
+                               paged_decode_attention_int8,
+                               prefill_attention_paged, qgemv, rmsnorm,
                                wkv6, wkv6_with_state)
 from repro.tune.cache import get_tuned
 from repro.tune.registry import REGISTRY
@@ -21,7 +22,8 @@ from repro.tune.registry import REGISTRY
 __all__ = ["gemv", "dotp", "axpy", "rmsnorm", "fused_adamw",
            "decode_attention", "decode_attention_stats",
            "decode_attention_int8", "paged_decode_attention",
-           "paged_decode_attention_int8", "qgemv", "batched_qgemv",
+           "paged_decode_attention_int8", "prefill_attention_paged",
+           "qgemv", "batched_qgemv",
            "flash_attention",
            "wkv6", "wkv6_with_state", "mamba_scan", "batched_gemv",
            "lse_combine", "BASELINE", "TROOP", "TroopConfig",

@@ -22,6 +22,7 @@ from repro.kernels.flash_attention import flash_attention
 from repro.kernels.fused_adamw import fused_adamw
 from repro.kernels.gemv import gemv
 from repro.kernels.mamba_scan import mamba_scan
+from repro.kernels.prefill_attention import prefill_attention_paged
 from repro.kernels.rmsnorm import rmsnorm
 from repro.kernels.rwkv6 import wkv6
 from repro.quant.kernels import batched_qgemv, qgemv
@@ -29,6 +30,7 @@ from repro.quant.kernels import batched_qgemv, qgemv
 __all__ = ["gemv", "dotp", "axpy", "rmsnorm", "fused_adamw",
            "decode_attention", "decode_attention_stats", "decode_attention_int8",
            "paged_decode_attention", "paged_decode_attention_int8",
+           "prefill_attention_paged",
            "flash_attention", "qgemv", "batched_qgemv",
            "wkv6", "wkv6_with_state", "mamba_scan", "batched_gemv",
            "lse_combine", "BASELINE", "TROOP", "TroopConfig"]

@@ -84,6 +84,31 @@ def paged_decode_attention_int8(q, k_pool, k_scales, v_pool, v_scales,
                             v.reshape(B, nblk * page, KV, hd), length)
 
 
+def prefill_attention_paged(q, k_pool, v_pool, block_tables, q_offset,
+                            length):
+    """Chunked-prefill paged-attention oracle: gather the block table to
+    the dense logical view, then causal softmax attention with the slab's
+    absolute query offset (positions >= length masked)."""
+    B, C, H, hd = q.shape
+    nblk = block_tables.shape[1]
+    page, KV = k_pool.shape[1], k_pool.shape[2]
+    S = nblk * page
+    G = H // KV
+    k = k_pool[block_tables].reshape(B, S, KV, hd).astype(jnp.float32)
+    v = v_pool[block_tables].reshape(B, S, KV, hd).astype(jnp.float32)
+    qg = q.reshape(B, C, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("btkgh,bskh->bkgts", qg, k) * (hd ** -0.5)
+    qpos = q_offset[:, None] + jnp.arange(C)[None, :]          # (B, C)
+    spos = jnp.arange(S)[None, :]                              # (B, S)
+    mask = (spos[:, None, :] > qpos[:, :, None]) \
+        | (spos[:, None, :] >= length[:, None, None])          # (B, C, S)
+    s = jnp.where(mask[:, None, None], -jnp.inf, s)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)        # fully masked pad rows
+    o = jnp.einsum("bkgts,bskh->btkgh", p, v)
+    return o.reshape(B, C, H, hd)
+
+
 def qgemv(wq, scales, x):
     """Fused-dequant GEMV oracle: grouped dequant then fp32 GEMV."""
     from repro.quant.tensor import dequantize_values

@@ -29,6 +29,17 @@ def main():
     ap.add_argument("--kernel-decode", action="store_true",
                     help="attend via the tuned Pallas paged kernel (no "
                          "gathered dense view; slow in CPU interpret mode)")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="prefill as fixed-size token slabs interleaved "
+                         "with decode (one compiled prefill shape, no "
+                         "pow2 buckets; requires --backend paged, "
+                         "attention-only archs)")
+    ap.add_argument("--chunk-size", type=int, default=32,
+                    help="tokens per prefill slab (--chunked-prefill)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share prompt-prefix KV pages across requests "
+                         "(radix index + refcounts + copy-on-write; "
+                         "requires --chunked-prefill)")
     ap.add_argument("--page-size", type=int, default=None,
                     help="tokens per page (default: the layout granule — "
                          "16 for bf16 pools, 32 for --kv-cache-dtype int8)")
@@ -54,6 +65,12 @@ def main():
     if args.kernel_decode and args.backend != "paged":
         raise SystemExit("--kernel-decode requires --backend paged "
                          "(the kernel reads the page pool + block table)")
+    if args.chunked_prefill and args.backend != "paged":
+        raise SystemExit("--chunked-prefill requires --backend paged "
+                         "(slabs write through block tables)")
+    if args.prefix_cache and not args.chunked_prefill:
+        raise SystemExit("--prefix-cache requires --chunked-prefill (a "
+                         "prefix hit resumes prefill mid-prompt)")
     kv_int8 = args.kv_cache_dtype == "int8"
     if args.page_size is None:
         from repro.quant.tensor import granule
@@ -90,19 +107,26 @@ def main():
         if args.backend == "paged" else "dense"
     configs = tuned_kernel_configs(cfg, args.slots, args.cache_len,
                                    page_size=args.page_size,
-                                   num_pages=args.num_pages)
+                                   num_pages=args.num_pages,
+                                   chunk_size=args.chunk_size)
     engine = ServingEngine(
         model, slots=args.slots, cache_len=args.cache_len,
         prefill_step=make_prefill_step(model),
         serve_step=make_serve_step(model, temperature=args.temperature,
                                    troop_configs=configs),
-        params=params, prefill_extras=extras, backend=backend)
+        params=params, prefill_extras=extras, backend=backend,
+        chunked_prefill=args.chunked_prefill, chunk_size=args.chunk_size,
+        prefix_cache=args.prefix_cache)
     rng = np.random.default_rng(0)
+    system_prompt = rng.integers(1, min(cfg.vocab_size, 1000), 24) \
+        if args.prefix_cache else None
     for i in range(args.requests):
-        engine.submit(Request(
-            rid=i, prompt=rng.integers(1, min(cfg.vocab_size, 1000),
-                                       int(rng.integers(4, 16))),
-            max_new_tokens=args.max_new))
+        prompt = rng.integers(1, min(cfg.vocab_size, 1000),
+                              int(rng.integers(4, 16)))
+        if system_prompt is not None:       # shared header: exercise reuse
+            prompt = np.concatenate([system_prompt, prompt])
+        engine.submit(Request(rid=i, prompt=prompt,
+                              max_new_tokens=args.max_new))
     finished = engine.run_until_drained()
     m = engine.metrics()
     print(f"served {len(finished)}/{args.requests} requests in "

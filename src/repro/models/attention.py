@@ -13,7 +13,8 @@ from jax.ad_checkpoint import checkpoint_name as _checkpoint_name
 
 from repro.core import partitioning as PT
 from repro.models import modules as M
-from repro.serve.kvcache import PagedKVCache, PageSpec  # noqa: F401 (re-export)
+from repro.serve.kvcache import (ChunkStage, NULL_PAGE,  # noqa: F401
+                                 PagedKVCache, PageSpec)
 
 
 class KVCache(NamedTuple):
@@ -231,6 +232,30 @@ def update_paged_cache(pool, new, pos, block_tables):
     return pool.at[pid, pos % page].set(row, mode="drop")
 
 
+def update_paged_cache_chunk(pool, new, offset, valid, block_tables):
+    """Chunked-prefill cache write: scatter a slab of token rows through the
+    block table.
+
+    pool (P, page, KV, hd); new (B, C, KV, hd); offset (B,) absolute
+    position of row 0; valid (B,) rows of the slab that are real tokens;
+    block_tables (B, nblk).  Row r of slot b lands at page
+    ``block_tables[b, (offset+r) // page]`` row ``(offset+r) % page``; pad
+    rows (r >= valid) are redirected to the never-read NULL page, so a
+    partially filled final chunk cannot clobber live pages — in particular
+    never a *shared* prefix page, which by the COW invariant is only ever
+    mapped at positions < offset.
+    """
+    page = pool.shape[1]
+    B, C = new.shape[:2]
+    pos = offset[:, None] + jnp.arange(C)[None, :]             # (B, C)
+    blk = jnp.clip(pos // page, 0, block_tables.shape[1] - 1)
+    pid = jnp.take_along_axis(block_tables, blk, axis=1)       # (B, C)
+    pid = jnp.where(jnp.arange(C)[None, :] < valid[:, None], pid, NULL_PAGE)
+    rows = new.astype(pool.dtype).reshape((B * C,) + new.shape[2:])
+    return pool.at[pid.reshape(-1), (pos % page).reshape(-1)].set(
+        rows, mode="drop")
+
+
 def gather_paged_kv(cache: PagedKVCache, block_tables,
                     dtype=jnp.bfloat16):
     """Dense logical view of a paged cache: (B, nblk*page, KV, hd).
@@ -297,6 +322,84 @@ def apply_attention_decode_paged(p, cfg, x, cache: PagedKVCache, pos,
         out = attend(q, k, v, causal=False, length=pos + 1, decode=True)
     out = M.apply_dense(p["wo"], out.reshape(B, 1, -1), dtype)
     return out, new_cache
+
+
+def apply_attention_chunk_paged(p, cfg, x, cache: PagedKVCache, offset,
+                                valid, stage_base, dtype, block_tables,
+                                stage: Optional[ChunkStage] = None,
+                                use_kernel=False):
+    """Chunked-prefill attention against a paged cache.
+
+    ``x`` (B, C, d) is one fixed-size slab of prompt tokens starting at
+    absolute position ``offset`` (B,), of which the first ``valid`` (B,)
+    rows are real; the slab's KV is written through the block table, then
+    the slab attends causally over positions [0, offset + valid) — shared
+    prefix pages included, so a prefix-cache hit starts mid-prompt with
+    ``offset`` > 0 and never recomputes the shared rows.
+
+    ``stage`` (int8 pools only) keeps this request's own prefill rows in
+    bf16 so later chunks do not re-read their predecessors through the
+    quantized pages — the chunked engine stays token-identical to the
+    bucketed one (see ``kvcache.ChunkStage``).  Rows below ``stage_base``
+    (a shared prefix) predate this request and are read from the pages.
+
+    Returns (out (B, C, d), new_cache, new_stage_or_None).
+    """
+    assert block_tables is not None, \
+        "chunked prefill needs batch['block_tables']"
+    B, C = x.shape[:2]
+    positions = offset[:, None] + jnp.arange(C)[None, :]
+    q, k_new, v_new = _project_qkv(p, cfg, x, x, positions, positions, dtype)
+    if cache.quantized:
+        k8, ks = quantize_kv(k_new)
+        v8, vs = quantize_kv(v_new)
+        new_cache = PagedKVCache(
+            update_paged_cache_chunk(cache.k_pool, k8, offset, valid,
+                                     block_tables),
+            update_paged_cache_chunk(cache.v_pool, v8, offset, valid,
+                                     block_tables),
+            update_paged_cache_chunk(cache.k_scale_pool, ks, offset, valid,
+                                     block_tables),
+            update_paged_cache_chunk(cache.v_scale_pool, vs, offset, valid,
+                                     block_tables))
+    else:
+        new_cache = PagedKVCache(
+            update_paged_cache_chunk(cache.k_pool, k_new, offset, valid,
+                                     block_tables),
+            update_paged_cache_chunk(cache.v_pool, v_new, offset, valid,
+                                     block_tables))
+    length = offset + valid
+    new_stage = None
+    if use_kernel and not cache.quantized:
+        from repro.kernels import ops as KO   # lazy: keeps models jnp-only
+        out = KO.prefill_attention_paged(
+            q, new_cache.k_pool, new_cache.v_pool, block_tables, offset,
+            length)
+    else:
+        k, v = gather_paged_kv(new_cache, block_tables, dtype)
+        if stage is not None:
+            # overlay this request's own bf16 rows (positions in
+            # [stage_base, offset + valid)) on the dequantized view
+            new_stage = ChunkStage(
+                jax.lax.dynamic_update_slice(
+                    stage.k, k_new.astype(stage.k.dtype),
+                    (0, offset[0], 0, 0)),
+                jax.lax.dynamic_update_slice(
+                    stage.v, v_new.astype(stage.v.dtype),
+                    (0, offset[0], 0, 0)))
+            S = k.shape[1]
+            spos = jnp.arange(S)[None, :]
+            use = ((spos >= stage_base[:, None])
+                   & (spos < length[:, None]))[:, :, None, None]
+            k = jnp.where(use, new_stage.k[:, :S].astype(k.dtype), k)
+            v = jnp.where(use, new_stage.v[:, :S].astype(v.dtype), v)
+        out = attend(q, k, v, causal=True,
+                     q_offset=offset[:, None, None, None, None],
+                     length=length)
+    out = M.apply_dense(p["wo"], out.reshape(B, C, -1), dtype)
+    if stage is not None and new_stage is None:   # kernel path keeps stage
+        new_stage = stage
+    return out, new_cache, new_stage
 
 
 def apply_attention_decode(p, cfg, x, cache, pos, dtype, block_tables=None,

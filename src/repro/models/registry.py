@@ -38,12 +38,19 @@ class Model:
     def decode_step(self, params, batch, caches):
         return T.decode_step(params, self.cfg, self.rt, batch, caches)
 
-    def init_caches(self, B, S, dtype=None, page_spec=None):
+    def chunk_step(self, params, batch, caches):
+        """One chunked-prefill slab (see transformer.chunk_prefill_step)."""
+        return T.chunk_prefill_step(params, self.cfg, self.rt, batch, caches)
+
+    def init_caches(self, B, S, dtype=None, page_spec=None,
+                    chunk_stage: int = 0):
         """Decode caches; ``page_spec`` (serve.kvcache.PageSpec) switches
-        plain attention KV leaves to the shared paged layout."""
+        plain attention KV leaves to the shared paged layout;
+        ``chunk_stage`` > 0 (a chunk size) adds the one-slot bf16 staging
+        buffer used by chunked prefill over int8 pools."""
         dtype = dtype or jnp.dtype(self.cfg.dtype)
         return T.init_caches(self.cfg, self.rt, B, S, dtype,
-                             page_spec=page_spec)
+                             page_spec=page_spec, chunk_stage=chunk_stage)
 
 
 def build_model(cfg, rt: RuntimeConfig = RuntimeConfig()) -> Model:

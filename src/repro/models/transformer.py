@@ -153,12 +153,40 @@ def _zero_state(cfg, mixer, B, dtype):
 
 def _apply_sublayer(p, cfg, rt, x, *, mixer, ffn, positions, state, dtype,
                     decode=False, pos=None, return_cache=False, enc_kv=None,
-                    pages=None):
-    """Returns (x, new_state_or_cache, aux)."""
+                    pages=None, chunk=None):
+    """Returns (x, new_state_or_cache, aux).
+
+    ``chunk`` ({offset, valid, stage_base} arrays) selects chunked-prefill
+    mode: a slab of tokens is written through the paged cache's block table
+    and attends with a query offset — attention-only archs (a recurrent
+    mixer scans through state and cannot resume mid-prompt from pages).
+    """
     aux = jnp.zeros((), jnp.float32)
     out_state = {}
     x = PT.constrain(x, ("batch", None, None))
     h = M.apply_norm(p["norm1"], x, cfg.norm, cfg.norm_eps)
+    if chunk is not None:
+        if mixer != "attn" or cfg.attention == "mla" or "xattn" in p:
+            raise ValueError(
+                "chunked prefill supports causal-attention archs only "
+                f"(got mixer={mixer!r}, attention={cfg.attention!r})")
+        o, c, stg = A.apply_attention_chunk_paged(
+            p["mixer"], cfg, h, state["mixer"], chunk["offset"],
+            chunk["valid"], chunk["stage_base"], dtype, block_tables=pages,
+            stage=state.get("stage"), use_kernel=rt.paged_kernel_decode)
+        out_state["mixer"] = c
+        if stg is not None:
+            out_state["stage"] = stg
+        x = x + o
+        h = M.apply_norm(p["norm2"], x, cfg.norm, cfg.norm_eps)
+        if ffn == "mlp":
+            o = M.apply_mlp(p["ffn"], h, cfg.act, dtype)
+        elif ffn == "moe":
+            o, aux = MOE.apply_moe(p["ffn"], cfg, h, dtype=dtype,
+                                   num_groups=rt.moe_groups)
+        else:
+            raise ValueError(f"chunked prefill: unsupported ffn {ffn!r}")
+        return x + o, out_state, aux
     if mixer == "attn":
         if decode:
             if cfg.attention == "mla":
@@ -224,18 +252,23 @@ def _apply_sublayer(p, cfg, rt, x, *, mixer, ffn, positions, state, dtype,
         o, st = RW.apply_channel_mix(p["ffn"], cfg, h, st, dtype)
         out_state["mixer"] = st
     x = x + o
+    # the chunk-stage buffer (chunked prefill over int8 pools) rides the
+    # cache tree through decode steps untouched
+    if "stage" in state and "stage" not in out_state:
+        out_state["stage"] = state["stage"]
     return x, out_state, aux
 
 
 def _apply_repeat(ps, cfg, rt, x, *, pattern, positions, states, dtype,
                   decode=False, pos=None, return_cache=False, enc_kv=None,
-                  pages=None):
+                  pages=None, chunk=None):
     new_states, aux = [], jnp.zeros((), jnp.float32)
     for p, (mixer, ffn), st in zip(ps, pattern, states):
         x, ns, a = _apply_sublayer(
             p, cfg, rt, x, mixer=mixer, ffn=ffn, positions=positions,
             state=st, dtype=dtype, decode=decode, pos=pos,
-            return_cache=return_cache, enc_kv=enc_kv, pages=pages)
+            return_cache=return_cache, enc_kv=enc_kv, pages=pages,
+            chunk=chunk)
         new_states.append(ns)
         aux = aux + a
     return x, new_states, aux
@@ -243,7 +276,7 @@ def _apply_repeat(ps, cfg, rt, x, *, pattern, positions, states, dtype,
 
 def _run_groups(params_groups, groups, cfg, rt, x, *, positions, states,
                 dtype, decode=False, pos=None, return_cache=False,
-                enc_kv=None, pages=None):
+                enc_kv=None, pages=None, chunk=None):
     """states: list (per group) of stacked per-repeat state lists."""
     out_states = []
     aux_total = jnp.zeros((), jnp.float32)
@@ -256,7 +289,7 @@ def _run_groups(params_groups, groups, cfg, rt, x, *, positions, states,
                                  positions=positions, states=st_rep,
                                  dtype=dtype, decode=decode, pos=pos,
                                  return_cache=return_cache, enc_kv=enc_kv,
-                                 pages=pages)
+                                 pages=pages, chunk=chunk)
 
         if rt.remat == "dots":
             body = jax.checkpoint(
@@ -370,7 +403,7 @@ def prefill(params, cfg, rt, batch):
     return readout(params, cfg, x, dtype), caches
 
 
-def init_caches(cfg, rt, B, S, dtype, page_spec=None):
+def init_caches(cfg, rt, B, S, dtype, page_spec=None, chunk_stage: int = 0):
     """Pre-allocated decode caches for every group/sublayer.
 
     With ``page_spec`` (a ``serve.kvcache.PageSpec``) plain attention KV
@@ -379,6 +412,11 @@ def init_caches(cfg, rt, B, S, dtype, page_spec=None):
     ``kv_dtype="int8"`` (DESIGN.md §5); MLA, dense-int8
     (``cache_dtype="int8"`` without an int8 page spec) and cross-attention
     caches keep the dense per-slot layout (documented fallback, §4).
+
+    ``chunk_stage`` (a chunk size, > 0 under the chunked-prefill engine)
+    adds a one-slot bf16 ``ChunkStage`` buffer next to *quantized* paged
+    leaves so chunked prefill never re-reads its own rows through int8
+    pages (DESIGN.md §6); bf16 pools need no stage.
     """
     groups = plan_groups(cfg)
     paged_int8 = page_spec is not None and \
@@ -396,6 +434,15 @@ def init_caches(cfg, rt, B, S, dtype, page_spec=None):
                 else:
                     c = A.init_cache(cfg, B, S, dtype, quantized=quant)
                 entry = {"mixer": c}
+                if chunk_stage > 0 and paged_int8 and cfg.attention != "mla":
+                    # cover the gathered view plus a full pad chunk so the
+                    # staging write never clamps at the sequence end
+                    ps = page_spec.page_size
+                    S_stage = max(-(-S // ps) * ps, S + chunk_stage)
+                    KV, hd = cfg.num_kv_heads, cfg.head_dim
+                    entry["stage"] = A.ChunkStage(
+                        jnp.zeros((1, S_stage, KV, hd), jnp.bfloat16),
+                        jnp.zeros((1, S_stage, KV, hd), jnp.bfloat16))
                 if cfg.encoder_decoder:
                     entry["xkv"] = A.init_cache(
                         cfg, B, cfg.cross_attention_len, dtype)
@@ -408,6 +455,36 @@ def init_caches(cfg, rt, B, S, dtype, page_spec=None):
                     v, (g.repeats,) + v.shape).astype(v.dtype), per_rep)
         out.append(per_rep)
     return out
+
+
+def chunk_prefill_step(params, cfg, rt, batch, caches):
+    """One chunked-prefill slab against the shared paged caches.
+
+    batch: tokens (B, C) right-padded; offset (B,) absolute position of
+    token 0; valid (B,) real rows; stage_base (B,) first position owned by
+    this request (== the shared-prefix length); block_tables (B, nblk).
+    Returns (last-valid-row logits (B, V), new caches) — the logits row
+    only matters on a prompt's final chunk, where its argmax is the
+    request's first generated token (same greedy readout as the bucketed
+    ``prefill_step``).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    groups = plan_groups(cfg)
+    offset, valid = batch["offset"], batch["valid"]
+    x = embed_inputs(params, cfg, batch, dtype, offset=offset)
+    C = x.shape[1]
+    positions = offset[:, None] + jnp.arange(C)[None, :]
+    chunk = {"offset": offset, "valid": valid,
+             "stage_base": batch.get("stage_base", jnp.zeros_like(offset))}
+    x, new_caches, _ = _run_groups(
+        params["groups"], groups, cfg, rt, x, positions=positions,
+        states=caches, dtype=dtype, chunk=chunk,
+        pages=batch.get("block_tables"))
+    # gather each row's last valid position BEFORE the O(V) readout (the
+    # same trick as the bucketed prefill: never unembed discarded rows)
+    last = jnp.take_along_axis(x, (valid - 1)[:, None, None], axis=1)
+    logits = readout(params, cfg, last, dtype)          # (B, 1, V)
+    return logits[:, 0], new_caches
 
 
 def decode_step(params, cfg, rt, batch, caches):

@@ -1,12 +1,15 @@
-from repro.serve.kvcache import (BlockAllocator, CacheBackend, DenseBackend,
-                                 PagedBackend, PagedKVCache, PageSpec,
-                                 bucket_length, make_backend)
+from repro.serve.kvcache import (BlockAllocator, CacheBackend, ChunkStage,
+                                 DenseBackend, PagedBackend, PagedKVCache,
+                                 PageSpec, PrefixIndex, bucket_length,
+                                 copy_page, make_backend)
 from repro.serve.scheduler import Request, ServingEngine, splice_cache
-from repro.serve.step import (make_prefill_step, make_serve_step,
-                              sample_keys, tuned_kernel_configs)
+from repro.serve.step import (make_chunk_step, make_prefill_step,
+                              make_serve_step, sample_keys,
+                              tuned_kernel_configs)
 
 __all__ = ["Request", "ServingEngine", "splice_cache",
-           "BlockAllocator", "CacheBackend", "DenseBackend", "PagedBackend",
-           "PagedKVCache", "PageSpec", "bucket_length", "make_backend",
-           "make_prefill_step", "make_serve_step", "sample_keys",
-           "tuned_kernel_configs"]
+           "BlockAllocator", "CacheBackend", "ChunkStage", "DenseBackend",
+           "PagedBackend", "PagedKVCache", "PageSpec", "PrefixIndex",
+           "bucket_length", "copy_page", "make_backend",
+           "make_chunk_step", "make_prefill_step", "make_serve_step",
+           "sample_keys", "tuned_kernel_configs"]

@@ -18,6 +18,15 @@ Two backends implement one protocol:
     scatters prefill KV into freshly allocated pages and frees them when the
     request finishes (no splicing, no padding traffic).
 
+Pages are *refcounted*: the chunked-prefill engine shares common prompt
+prefixes (system prompts, few-shot headers) across slots through a radix
+``PrefixIndex`` over page-granular token runs — a matched prefix maps to
+existing physical pages (incref, zero recompute, zero extra HBM), and a
+prompt diverging *mid-page* copies the divergence page once (copy-on-write)
+before overwriting its tail.  Shared pages are read-only by invariant: the
+engine only ever writes rows at positions >= its prefill offset, which by
+construction land in freshly allocated (or COW-copied) pages.
+
 The engine (``serve.scheduler``) talks only to the protocol; the model
 (``models.attention``) recognizes ``PagedKVCache`` leaves and routes decode
 reads/writes through the block table it receives in the step batch.
@@ -70,6 +79,22 @@ class PagedKVCache(NamedTuple):
         return self.k_pool.shape[-4]
 
 
+class ChunkStage(NamedTuple):
+    """bf16 staging rows for the one in-flight chunked-prefill slot.
+
+    Only allocated when the page pools are quantized: chunk c of a prompt
+    attends over the KV of chunks < c, and reading those rows back through
+    int8 pages would make chunked prefill numerically diverge from the
+    bucketed engine (which runs the whole prompt in bf16 and quantizes only
+    at storage).  The stage keeps the *current request's own* prefill rows
+    at full precision — `(1, S, KV, hd)`, one slot's worth — while the int8
+    pages written alongside stay the decode-time source of truth.  bf16
+    pools skip the stage entirely (pages already hold exact bf16 rows).
+    """
+    k: jax.Array       # (1, S, KV, hd) bf16
+    v: jax.Array
+
+
 @dataclass(frozen=True)
 class PageSpec:
     """Static paging geometry for one engine."""
@@ -97,25 +122,188 @@ class PageSpec:
 
 
 class BlockAllocator:
-    """Host-side free list over physical pages [1, num_pages)."""
+    """Host-side refcounted free list over physical pages [1, num_pages).
+
+    ``alloc`` hands out pages at refcount 1; ``incref`` adds holders
+    (another slot sharing the page, or the prefix index keeping it warm);
+    ``free`` decrefs and returns a page to the free list only when its last
+    holder lets go.  The original alloc/free discipline (every page held by
+    exactly one slot) is the refcount-1 special case.
+    """
 
     def __init__(self, num_pages: int):
         self.num_pages = num_pages
         self._free: List[int] = list(range(num_pages - 1, NULL_PAGE, -1))
+        self._refs: Dict[int, int] = {}
 
     @property
     def num_free(self) -> int:
         return len(self._free)
 
+    def ref(self, page: int) -> int:
+        return self._refs.get(page, 0)
+
     def alloc(self, n: int) -> Optional[List[int]]:
         if n > len(self._free):
             return None
-        return [self._free.pop() for _ in range(n)]
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._refs[p] = 1
+        return pages
+
+    def incref(self, pages: List[int]):
+        for p in pages:
+            assert self._refs.get(p, 0) > 0, f"incref of unheld page {p}"
+            self._refs[p] += 1
 
     def free(self, pages: List[int]):
         for p in pages:
             assert p != NULL_PAGE
-            self._free.append(p)
+            n = self._refs.get(p, 0)
+            assert n > 0, f"double free of page {p}"
+            if n == 1:
+                del self._refs[p]
+                self._free.append(p)
+            else:
+                self._refs[p] = n - 1
+
+
+class _PrefixNode:
+    """One cached page: ``tokens`` (page_size-tuple) -> physical ``page``."""
+
+    __slots__ = ("tokens", "page", "children", "last_used")
+
+    def __init__(self, tokens, page):
+        self.tokens = tokens
+        self.page = page
+        self.children: Dict[tuple, "_PrefixNode"] = {}
+        self.last_used = 0
+
+
+class PrefixIndex:
+    """Radix tree over page-granular token prefixes -> physical pages.
+
+    Each node is one full page of prompt tokens; a path from the root spells
+    a prompt prefix and yields the refcounted pages holding its KV.  The
+    index itself holds one reference on every cached page (taken at
+    ``insert``, dropped at eviction), so pages survive their originating
+    request and are evicted LRU-leaf-first only under pool pressure.
+
+    ``match`` returns the longest run of fully matched pages plus, when the
+    next page agrees on a strict prefix of its tokens, a *partial* match
+    ``(page, depth)`` — the copy-on-write divergence page.
+    """
+
+    def __init__(self, page_size: int, allocator: BlockAllocator):
+        self.page_size = page_size
+        self.allocator = allocator
+        self.root = _PrefixNode((), NULL_PAGE)
+        self._clock = 0
+        self._nodes = 0
+        self.hits = 0
+        self.lookups = 0
+        self.evictions = 0
+
+    @property
+    def num_pages(self) -> int:
+        return self._nodes
+
+    def _pages(self, prompt) -> List[tuple]:
+        ps = self.page_size
+        toks = [int(t) for t in prompt]
+        return [tuple(toks[i:i + ps]) for i in range(0, len(toks) - ps + 1,
+                                                     ps)]
+
+    def match(self, prompt):
+        """Longest cached prefix of ``prompt``: (pages, partial).
+
+        ``pages``: physical pages of fully matched leading pages (NOT yet
+        incref'd — the caller takes its references).  ``partial``: `(page,
+        depth)` when the first unmatched page shares its leading ``depth``
+        tokens with a cached page (0 < depth < page_size) — the COW
+        candidate — else ``None``.  The match is capped so at least the
+        prompt's final token is always left to compute (prefill must
+        produce next-token logits).
+        """
+        self.lookups += 1
+        self._clock += 1
+        ps = self.page_size
+        limit = len(prompt) - 1            # tokens allowed to come from cache
+        node, pages, depth = self.root, [], 0
+        for key in self._pages(prompt):
+            if depth + ps > limit:
+                break
+            child = node.children.get(key)
+            if child is None:
+                break
+            child.last_used = self._clock
+            pages.append(child.page)
+            node, depth = child, depth + ps
+        partial = None
+        rest = [int(t) for t in prompt[depth:limit]]
+        if rest:
+            best = 0
+            for key, child in node.children.items():
+                j = 0
+                while j < len(rest) and j < ps and key[j] == rest[j]:
+                    j += 1
+                if j > best:
+                    best, partial = j, (child.page, j)
+                    child.last_used = self._clock
+        if pages or partial:
+            self.hits += 1
+        return pages, partial
+
+    def insert(self, prompt, pages: List[int]):
+        """Register ``prompt``'s leading full pages (physical ids ``pages``,
+        one per full page) — the index increfs each page it newly adopts;
+        pages whose token run is already cached are left alone."""
+        self._clock += 1
+        node = self.root
+        for key, page in zip(self._pages(prompt), pages):
+            child = node.children.get(key)
+            if child is None:
+                child = _PrefixNode(key, page)
+                node.children[key] = child
+                self.allocator.incref([page])
+                self._nodes += 1
+            child.last_used = self._clock
+            node = child
+
+    def evict(self, need: int) -> int:
+        """Drop LRU leaf pages (held only by the index, refcount 1) until
+        ``need`` pages have been freed or nothing more is evictable.
+
+        Each pass collects every evictable leaf in one tree walk and frees
+        them oldest-first (O(nodes log nodes) per pass, not one full walk
+        per page); freeing a leaf may expose its parent, so passes repeat
+        until sated or a pass frees nothing."""
+        freed = 0
+        while freed < need:
+            victims = []                  # (last_used, parent, key, node)
+            stack = [self.root]
+            while stack:
+                node = stack.pop()
+                for key, child in node.children.items():
+                    if not child.children \
+                            and self.allocator.ref(child.page) == 1:
+                        victims.append((child.last_used, node, key, child))
+                    stack.append(child)
+            if not victims:
+                break
+            victims.sort(key=lambda v: v[0])
+            for _, parent, key, child in victims[:need - freed]:
+                del parent.children[key]
+                self.allocator.free([child.page])
+                self._nodes -= 1
+                self.evictions += 1
+                freed += 1
+        return freed
+
+    def clear(self):
+        """Drop every index-held reference (leaves first, repeatedly)."""
+        while self._nodes and self.evict(self._nodes):
+            pass
 
 
 # --------------------------------------------------------------------------
@@ -154,16 +342,19 @@ def splice_row(dst, src, row: int, slot: int, slots: int,
     return jax.lax.dynamic_update_slice(dst, src, tuple(start))
 
 
-def slot_axes(model, slots: int, cache_len: int, page_spec=None):
+def slot_axes(model, slots: int, cache_len: int, page_spec=None,
+              chunk_stage: int = 0):
     """Per-leaf slot axis of the cache tree, derived structurally: diff the
     ``eval_shape`` of ``init_caches`` at two slot counts — the axis whose
     extent changes is the slot axis (-1: slot-independent, e.g. a shared
     page pool).  No allocation, no shape heuristics — a state leaf whose
     head/seq extent happens to equal ``slots`` cannot be misidentified."""
     a = jax.eval_shape(
-        lambda: model.init_caches(slots, cache_len, page_spec=page_spec))
+        lambda: model.init_caches(slots, cache_len, page_spec=page_spec,
+                                  chunk_stage=chunk_stage))
     b = jax.eval_shape(
-        lambda: model.init_caches(slots + 1, cache_len, page_spec=page_spec))
+        lambda: model.init_caches(slots + 1, cache_len, page_spec=page_spec,
+                                  chunk_stage=chunk_stage))
 
     def axis(x, y):
         for d, (p, q) in enumerate(zip(x.shape, y.shape)):
@@ -202,6 +393,28 @@ def _pool_scatter(pool, rows, pages: List[int]):
     if stacked:
         return pool.at[:, idx].set(buf)
     return pool.at[idx].set(buf)
+
+
+def copy_page(caches, src, dst):
+    """Copy physical page ``src`` -> ``dst`` in every paged leaf (the COW
+    copy at a mid-page prefix divergence).  ``src``/``dst`` are int32
+    scalars so the jitted copy compiles once; scale pages of int8 pools ride
+    along — a COW'd page keeps value and scale rows coherent by
+    construction (they share the index)."""
+    def one(leaf):
+        if not _is_paged(leaf):
+            return leaf
+
+        def cp(pool):
+            if pool is None:
+                return None
+            if pool.ndim == 5:                  # stacked layer group
+                return pool.at[:, dst].set(pool[:, src])
+            return pool.at[dst].set(pool[src])
+
+        return PagedKVCache(cp(leaf.k_pool), cp(leaf.v_pool),
+                            cp(leaf.k_scale_pool), cp(leaf.v_scale_pool))
+    return jax.tree.map(one, caches, is_leaf=_is_paged)
 
 
 # --------------------------------------------------------------------------
@@ -298,11 +511,22 @@ class PagedBackend:
 
     def __init__(self, page_size: int = 16,
                  num_pages: Optional[int] = None,
-                 kv_dtype: Optional[str] = None):
+                 kv_dtype: Optional[str] = None,
+                 prefix_cache: bool = False,
+                 chunk_stage: int = 0):
+        """``chunk_stage``: the chunked engine's chunk SIZE in tokens (0 =
+        no staging buffer) — it sizes the bf16 stage over int8 pools; the
+        engine sets it from its own ``chunk_size``."""
         self.page_size = page_size
         self.num_pages = num_pages
         self.kv_dtype = kv_dtype
+        self.prefix_cache = prefix_cache
+        self.chunk_stage = chunk_stage
         self.spec: Optional[PageSpec] = None
+        self.prefix_index: Optional[PrefixIndex] = None
+        self._pending_cow: Dict[int, Any] = {}
+        self._shared_tokens = 0
+        self.cow_copies = 0
 
     def _resolve_kv_dtype(self, model) -> str:
         if self.kv_dtype is not None:
@@ -322,8 +546,13 @@ class PagedBackend:
         self.block_tables = np.full(
             (slots, self.spec.blocks_per_slot), NULL_PAGE, np.int32)
         self._slot_pages: Dict[int, List[int]] = {}
-        self._axes = slot_axes(model, slots, cache_len, page_spec=self.spec)
-        return model.init_caches(slots, cache_len, page_spec=self.spec)
+        if self.prefix_cache:
+            self.prefix_index = PrefixIndex(self.spec.page_size,
+                                            self.allocator)
+        self._axes = slot_axes(model, slots, cache_len, page_spec=self.spec,
+                               chunk_stage=self.chunk_stage)
+        return model.init_caches(slots, cache_len, page_spec=self.spec,
+                                 chunk_stage=self.chunk_stage)
 
     def _pages_needed(self, tokens: int) -> int:
         return -(-min(tokens, self.cache_len) // self.spec.page_size)
@@ -338,14 +567,84 @@ class PagedBackend:
                 f"{self.spec.num_pages - 1}: it can never be admitted — "
                 f"raise num_pages or lower prompt_len + max_new_tokens")
 
+    def _alloc_evicting(self, n: int) -> Optional[List[int]]:
+        """Allocate ``n`` pages, evicting cold prefix-index pages to make
+        room (shared pages held by live slots are never evicted — eviction
+        only touches pages whose sole holder is the index)."""
+        pages = self.allocator.alloc(n)
+        if pages is None and self.prefix_index is not None:
+            self.prefix_index.evict(n - self.allocator.num_free)
+            pages = self.allocator.alloc(n)
+        return pages
+
     def reserve(self, slot: int, tokens: int) -> bool:
-        pages = self.allocator.alloc(self._pages_needed(tokens))
+        pages = self._alloc_evicting(self._pages_needed(tokens))
         if pages is None:
             return False
         self._slot_pages[slot] = pages
         self.block_tables[slot] = NULL_PAGE
         self.block_tables[slot, :len(pages)] = pages
         return True
+
+    def reserve_with_prefix(self, slot: int, tokens: int,
+                            prompt) -> Optional[int]:
+        """Reserve ``slot`` reusing cached prefix pages of ``prompt``.
+
+        Returns the number of prompt tokens whose KV comes from the cache
+        (the chunked engine starts prefilling at that offset), or ``None``
+        when the pool is exhausted (admission defers).  A mid-page partial
+        match registers a pending copy-on-write: the engine must apply it
+        (``take_cow`` / ``cow_done``) before writing the slot's pages.
+        """
+        if self.prefix_index is None:
+            return 0 if self.reserve(slot, tokens) else None
+        page = self.spec.page_size
+        shared, partial = self.prefix_index.match(prompt)
+        # take the slot's references before any eviction can run: a page
+        # referenced here is unevictable for the lifetime of the slot
+        self.allocator.incref(shared)
+        cow_src, cow_depth = partial if partial else (None, 0)
+        if cow_src is not None:
+            self.allocator.incref([cow_src])
+        fresh_n = self._pages_needed(tokens) - len(shared)
+        fresh = self._alloc_evicting(fresh_n)
+        if fresh is None:                       # pool pressure: undo, defer
+            self.allocator.free(shared)
+            if cow_src is not None:
+                self.allocator.free([cow_src])
+            return None
+        if cow_src is not None:
+            # divergence mid-page: the first fresh page becomes a private
+            # copy of the matched page; rows [0, depth) are reused, the
+            # tail is overwritten by this request's own prefill
+            self._pending_cow[slot] = (cow_src, fresh[0])
+        pages = shared + fresh
+        self._slot_pages[slot] = pages
+        self.block_tables[slot] = NULL_PAGE
+        self.block_tables[slot, :len(pages)] = pages
+        offset = len(shared) * page + cow_depth
+        self._shared_tokens += offset
+        return offset
+
+    def take_cow(self, slot: int):
+        """Pending (src_page, dst_page) copy for ``slot``, or ``None``."""
+        return self._pending_cow.get(slot)
+
+    def cow_done(self, slot: int):
+        """The engine copied the divergence page: drop the source ref."""
+        src, _ = self._pending_cow.pop(slot)
+        self.allocator.free([src])
+        self.cow_copies += 1
+
+    def register_prefix(self, slot: int, prompt):
+        """Index ``slot``'s fully written prompt pages for future reuse
+        (called by the engine once the prompt's KV is entirely on-pool)."""
+        if self.prefix_index is None:
+            return
+        page = self.spec.page_size
+        full = len(prompt) // page
+        if full:
+            self.prefix_index.insert(prompt, self._slot_pages[slot][:full])
 
     def admit(self, caches, prefill_caches, *, row: int, slot: int,
               prompt_len: int):
@@ -401,6 +700,9 @@ class PagedBackend:
                             is_leaf=_is_paged)
 
     def release(self, slot: int):
+        if slot in self._pending_cow:           # released before the copy
+            src, _ = self._pending_cow.pop(slot)
+            self.allocator.free([src])
         pages = self._slot_pages.pop(slot, None)
         if pages:
             self.allocator.free(pages)
@@ -409,9 +711,22 @@ class PagedBackend:
     def batch_extras(self) -> Dict[str, Any]:
         return {"block_tables": jnp.asarray(self.block_tables)}
 
+    def kv_page_bytes(self) -> Dict[str, int]:
+        """Logical vs resident KV traffic accounting: ``logical`` counts
+        every block-table entry (what per-slot decode streams), ``resident``
+        counts each *physical* page once — shared prefix pages land in HBM
+        a single time no matter how many slots map them, and the bytes
+        model of the serve layer must not double-count them."""
+        sp = self.spec
+        if sp is None:
+            return {"kv_pages_logical": 0, "kv_pages_resident": 0}
+        live = self.block_tables[self.block_tables != NULL_PAGE]
+        return {"kv_pages_logical": int(live.size),
+                "kv_pages_resident": int(np.unique(live).size)}
+
     def stats(self) -> Dict[str, Any]:
         sp = self.spec
-        return {
+        out = {
             "backend": self.name,
             "page_size": sp.page_size if sp else self.page_size,
             "num_pages": sp.num_pages if sp else self.num_pages,
@@ -420,6 +735,17 @@ class PagedBackend:
             "pages_in_use": (sp.num_pages - 1 - self.allocator.num_free)
             if sp else None,
         }
+        out.update(self.kv_page_bytes())
+        if self.prefix_index is not None:
+            out.update({
+                "prefix_lookups": self.prefix_index.lookups,
+                "prefix_hits": self.prefix_index.hits,
+                "prefix_pages_cached": self.prefix_index.num_pages,
+                "prefix_evictions": self.prefix_index.evictions,
+                "prefix_shared_tokens": self._shared_tokens,
+                "cow_copies": self.cow_copies,
+            })
+        return out
 
 
 def make_backend(backend) -> CacheBackend:

@@ -1,16 +1,32 @@
-"""Continuous-batching serving engine (paged KV, bucketed batched prefill).
+"""Continuous-batching serving engine (paged KV; chunked or bucketed prefill).
 
 The decode step — the paper's workload — runs every cycle over all active
-slots.  Admission is *recompile-free*: queued prompts are padded to
-power-of-2 length buckets and prefilled together in one fixed-size batch, so
-XLA compiles at most one prefill executable per bucket, ever (the seed
-engine compiled once per distinct prompt length at B=1).  Cache placement
-goes through a ``CacheBackend`` (``serve.kvcache``): the paged backend
-allocates block-table pages per request and frees them on finish — no
-host-side ``jnp.pad`` + ``dynamic_update_slice`` splicing over the whole
-tree, and no padding bytes in the decode stream.  Pure host-side control
-around two jitted functions (prefill_step, serve_step), as production
-engines do.
+slots.  Two recompile-free admission paths:
+
+  * **bucketed** (the PR 2 path, default): queued prompts are padded to
+    power-of-2 length buckets and prefilled together in one fixed-size
+    batch — one XLA prefill executable per bucket, ever.  A long prompt
+    still occupies the engine for its whole prefill, head-of-line-blocking
+    running decodes.
+  * **chunked** (``chunked_prefill=True``, paged backend only): prompts are
+    fed through the model as fixed-size token slabs *interleaved with
+    decode steps* — ONE compiled prefill shape total (no buckets), new
+    requests admitted every cycle, and a 4k-token prompt costs each running
+    decode at most one chunk of latency per cycle instead of a full-prompt
+    stall.  With ``prefix_cache=True`` the paged pool additionally shares
+    prompt prefixes across requests (radix index + refcounted pages +
+    copy-on-write at a mid-page divergence — ``serve.kvcache``), and a
+    prefix hit starts the chunk walk at the first un-cached token.
+
+Scheduling policy (the fairness / starvation guard): admission, chunk
+order and capacity-pressure deferral are all strictly FIFO — a request
+that cannot reserve pages blocks the queue rather than being overtaken,
+so under sustained load every request admits in bounded time; each cycle
+runs at most ``chunks_per_step`` prefill slabs *and then* one decode step
+over every decoding slot, so neither phase can starve the other.
+
+Cache placement goes through a ``CacheBackend`` (``serve.kvcache``); pure
+host-side control around jitted step functions, as production engines do.
 """
 from __future__ import annotations
 
@@ -23,8 +39,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serve.kvcache import (CacheBackend, bucket_length, make_backend,
-                                 splice_row)
+from repro.serve.kvcache import (CacheBackend, PagedBackend, bucket_length,
+                                 copy_page, make_backend, splice_row)
 
 
 @dataclasses.dataclass
@@ -38,10 +54,26 @@ class Request:
     submit_step: int = -1
     admit_step: int = -1
     finish_step: int = -1
+    # wall-clock latency markers (perf_counter seconds)
+    submit_t: float = 0.0
+    first_token_t: float = 0.0
+    finish_t: float = 0.0
 
     @property
     def prompt_len(self) -> int:
         return len(self.prompt)
+
+    @property
+    def ttft_s(self) -> float:
+        """Time to first token: submit -> first generated token."""
+        return self.first_token_t - self.submit_t
+
+    @property
+    def decode_tok_s(self) -> float:
+        """Steady-state decode rate: tokens after the first, per second."""
+        dt = self.finish_t - self.first_token_t
+        return (len(self.out) - 1) / dt if dt > 0 and len(self.out) > 1 \
+            else 0.0
 
 
 def splice_cache(batch_cache, one_cache, slot: int, slots: int):
@@ -57,14 +89,22 @@ class ServingEngine:
     """Slot-based continuous batching over a pluggable cache backend.
 
     ``backend``: 'dense' (default, the original layout), 'paged', or a
-    ``CacheBackend`` instance.  ``prefill_batch`` admissions share one
-    bucketed prefill call; ``min_bucket`` is the smallest prompt bucket.
+    ``CacheBackend`` instance.  Bucketed mode: ``prefill_batch`` admissions
+    share one bucketed prefill call; ``min_bucket`` is the smallest prompt
+    bucket.  Chunked mode (``chunked_prefill=True``): prompts prefill as
+    ``chunk_size``-token slabs interleaved with decode (attention-only
+    archs over the paged backend); ``prefix_cache=True`` additionally
+    reuses shared prompt-prefix pages (``chunk_step`` overrides the
+    default ``serve.step.make_chunk_step(model)``).
     """
 
     def __init__(self, model, *, slots: int, cache_len: int,
                  prefill_step, serve_step, params, stop_token: int = -1,
                  prefill_extras=None, backend=None,
-                 prefill_batch: Optional[int] = None, min_bucket: int = 8):
+                 prefill_batch: Optional[int] = None, min_bucket: int = 8,
+                 chunked_prefill: bool = False, chunk_size: int = 32,
+                 chunks_per_step: int = 1, prefix_cache: bool = False,
+                 chunk_step=None):
         """``prefill_extras(req) -> dict``: extra prefill batch entries
         (modality frontend stubs for enc-dec / VLM archs)."""
         self.model = model
@@ -75,6 +115,9 @@ class ServingEngine:
         self.backend: CacheBackend = make_backend(backend)
         self.prefill_batch = prefill_batch or min(slots, 4)
         self.min_bucket = min(min_bucket, cache_len)
+        self.chunked = chunked_prefill
+        self.chunk_size = min(chunk_size, cache_len)
+        self.chunks_per_step = max(1, chunks_per_step)
         # frontend tokens prepended to the decoder sequence (VLM archs)
         self._front = model.cfg.frontend_tokens \
             if getattr(model.cfg, "frontend", None) == "vision" else 0
@@ -86,6 +129,30 @@ class ServingEngine:
         self._exact_prefill = any(
             m != "attn" for (m, f) in model.cfg.layer_kinds())
 
+        if self.chunked:
+            if not isinstance(self.backend, PagedBackend):
+                raise ValueError("chunked_prefill requires the paged "
+                                 "backend (slabs write through block "
+                                 "tables)")
+            if (self._exact_prefill or self._front
+                    or model.cfg.encoder_decoder
+                    or model.cfg.attention == "mla"):
+                raise ValueError(
+                    "chunked_prefill supports causal-attention decoder "
+                    "archs only (recurrent mixers cannot resume a scan "
+                    "mid-prompt from pages; MLA/enc-dec keep dense "
+                    "caches) — use the bucketed engine for "
+                    f"{model.cfg.name!r}")
+            self.backend.prefix_cache = prefix_cache
+            if self.backend._resolve_kv_dtype(model) == "int8":
+                # int8 pools: stage this request's own rows in bf16 so a
+                # later chunk never re-reads its predecessors quantized
+                self.backend.chunk_stage = self.chunk_size
+        elif prefix_cache:
+            raise ValueError("prefix_cache requires chunked_prefill (a "
+                             "prefix hit resumes prefill mid-prompt, which "
+                             "only the chunk walk supports)")
+
         self._prefill_traces = 0
 
         def counted_prefill(params, batch):
@@ -94,6 +161,17 @@ class ServingEngine:
 
         self.prefill_step = jax.jit(counted_prefill)
         self.serve_step = jax.jit(serve_step, donate_argnums=(2,))
+        if self.chunked:
+            if chunk_step is None:
+                from repro.serve.step import make_chunk_step
+                chunk_step = make_chunk_step(model)
+
+            def counted_chunk(params, batch, caches):
+                self._prefill_traces += 1  # runs at trace time only
+                return chunk_step(params, batch, caches)
+
+            self.chunk_step = jax.jit(counted_chunk, donate_argnums=(2,))
+            self._copy_page = jax.jit(copy_page, donate_argnums=(0,))
         self.caches = self.backend.init_caches(model, slots, cache_len)
         self.active: Dict[int, Optional[Request]] = {
             i: None for i in range(slots)}
@@ -104,7 +182,13 @@ class ServingEngine:
         self._nonce = np.zeros((slots,), np.int32)
         self.queue: deque = deque()
         self.stop_token = stop_token
-        self.steps = 0
+        self.steps = 0                     # engine cycles (admit/chunk/decode)
+        self.decode_steps = 0              # cycles that ran serve_step
+        # chunked-prefill bookkeeping
+        self._prefilling: deque = deque()            # slots mid-prefill
+        self._decoding: set = set()                  # slots generating
+        self._chunk_off: Dict[int, int] = {}         # next token to prefill
+        self._stage_base: Dict[int, int] = {}        # first non-shared pos
         # ------------------------------------------------------- metrics
         self.tokens_generated = 0
         self.requests_admitted = 0
@@ -112,10 +196,17 @@ class ServingEngine:
         self.prefill_calls = 0
         self.prefill_s = 0.0
         self.decode_s = 0.0
+        self.chunk_calls = 0
+        self.chunk_tokens = 0                        # valid slab rows
+        self.prefill_tokens = 0                      # admitted prompt tokens
+        self.shared_tokens = 0                       # served from the prefix
+        self._ttfts: List[float] = []
+        self._decode_rates: List[float] = []
 
     @property
     def prefill_traces(self) -> int:
-        """Prefill executables compiled so far (== distinct buckets used)."""
+        """Prefill executables compiled so far (bucketed: == distinct
+        buckets used; chunked: exactly one, ever)."""
         return self._prefill_traces
 
     # -------------------------------------------------------------- admit
@@ -129,13 +220,16 @@ class ServingEngine:
                 f"cache_len is {self.cache_len}")
         self.backend.check_admissible(rows + req.max_new_tokens)
         req.submit_step = self.steps
+        req.submit_t = time.perf_counter()
         self.queue.append(req)
 
     def _free_slots(self) -> List[int]:
         return [s for s, r in self.active.items() if r is None]
 
-    def _admit_group(self, group, slots_for):
-        """One bucketed batched prefill for ``group`` (list of Requests)."""
+    def _admit_group(self, group, slots_for) -> List[Request]:
+        """One bucketed batched prefill for ``group`` (list of Requests);
+        returns requests whose prefill-emitted first token already finished
+        them (stop token, or max_new_tokens == 1)."""
         if self._exact_prefill:
             bucket = group[0].prompt_len       # group is same-length
         else:
@@ -163,6 +257,7 @@ class ServingEngine:
         next_tok = np.asarray(next_tok)
         self.prefill_calls += 1
 
+        finished: List[Request] = []
         for i, req in enumerate(group):
             slot = slots_for[i]
             plen = self._front + req.prompt_len
@@ -172,21 +267,32 @@ class ServingEngine:
             self.active[slot] = req
             req.admit_step = self.steps
             self.requests_admitted += 1
+            self.prefill_tokens += req.prompt_len
             self._nonce[slot] = self.requests_admitted
             self.pos[slot] = plen
             tok = int(next_tok[i])
             req.out.append(tok)
+            req.first_token_t = time.perf_counter()
             self.tokens_generated += 1
             self.last_tok[slot] = tok
+            # the first token obeys the same finish rules as decode tokens
+            # (both prefill paths must emit identical streams)
+            if len(req.out) >= req.max_new_tokens or tok == self.stop_token:
+                finished.append(self._finish(slot, req))
+            else:
+                self._decoding.add(slot)
         self.prefill_s += time.perf_counter() - t0
+        return finished
 
-    def _admit(self):
+    def _admit(self) -> List[Request]:
         """Admit as many queued requests as slots + cache capacity allow
-        (possibly several bucketed prefill calls)."""
+        (possibly several bucketed prefill calls); returns requests their
+        first token already finished."""
+        finished: List[Request] = []
         while self.queue:
             free = self._free_slots()
             if not free:
-                return
+                break
             group, slots_for = [], []
             while (self.queue and free
                    and len(group) < self.prefill_batch):
@@ -203,32 +309,167 @@ class ServingEngine:
                 group.append(req)
                 slots_for.append(slot)
             if not group:
+                break
+            finished.extend(self._admit_group(group, slots_for))
+        return finished
+
+    # ------------------------------------------------- chunked admission
+    def _admit_chunked(self):
+        """Assign slots + pages to queued requests, strictly FIFO: a
+        request the pool cannot hold right now *blocks* admission (no
+        overtaking — the starvation guard) until releases free pages."""
+        while self.queue:
+            free = self._free_slots()
+            if not free:
                 return
-            self._admit_group(group, slots_for)
+            req = self.queue[0]
+            slot = free[0]
+            need = req.prompt_len + req.max_new_tokens
+            if self.backend.prefix_cache:
+                offset = self.backend.reserve_with_prefix(
+                    slot, need, req.prompt)
+                if offset is None:
+                    return                 # pool exhausted: defer (FIFO)
+                cow = self.backend.take_cow(slot)
+                if cow is not None:
+                    src, dst = cow
+                    self.caches = self._copy_page(
+                        self.caches, jnp.int32(src), jnp.int32(dst))
+                    self.backend.cow_done(slot)
+            else:
+                if not self.backend.reserve(slot, need):
+                    return
+                offset = 0
+            self.queue.popleft()
+            self.active[slot] = req
+            req.admit_step = self.steps
+            self.requests_admitted += 1
+            self.prefill_tokens += req.prompt_len
+            self.shared_tokens += offset
+            self._nonce[slot] = self.requests_admitted
+            self.pos[slot] = 0
+            self._chunk_off[slot] = offset
+            self._stage_base[slot] = offset
+            self._prefilling.append(slot)
+
+    def _chunk_one(self) -> List[Request]:
+        """Run one prefill slab for the oldest mid-prefill request; on the
+        prompt's final slab, emit its first token (greedy argmax of the
+        last valid row — the bucketed engine's readout)."""
+        slot = self._prefilling[0]
+        req = self.active[slot]
+        C = self.chunk_size
+        off = self._chunk_off[slot]
+        end = min(off + C, req.prompt_len)
+        valid = end - off
+        tokens = np.zeros((1, C), np.int32)
+        tokens[0, :valid] = req.prompt[off:end]
+        batch = {
+            "tokens": jnp.asarray(tokens),
+            "offset": jnp.asarray([off], jnp.int32),
+            "valid": jnp.asarray([valid], jnp.int32),
+            "stage_base": jnp.asarray([self._stage_base[slot]], jnp.int32),
+            "block_tables": jnp.asarray(
+                self.backend.block_tables[slot:slot + 1]),
+        }
+        t0 = time.perf_counter()
+        next_tok, self.caches = self.chunk_step(
+            self.params, batch, self.caches)
+        self.prefill_s += time.perf_counter() - t0
+        self.chunk_calls += 1
+        self.chunk_tokens += valid
+        self._chunk_off[slot] = end
+        if end < req.prompt_len:
+            return []
+        # prompt fully on-pool: index its pages for prefix reuse, start
+        # decoding from its first generated token
+        self._prefilling.popleft()
+        if self.backend.prefix_cache:
+            self.backend.register_prefix(slot, req.prompt)
+        self.prefill_calls += 1
+        tok = int(np.asarray(next_tok)[0])
+        req.out.append(tok)
+        req.first_token_t = time.perf_counter()
+        self.tokens_generated += 1
+        self.last_tok[slot] = tok
+        self.pos[slot] = req.prompt_len
+        if len(req.out) >= req.max_new_tokens or tok == self.stop_token:
+            return [self._finish(slot, req)]
+        self._decoding.add(slot)
+        return []
+
+    def _finish(self, slot: int, req: Request) -> Request:
+        req.done = True
+        req.finish_step = self.steps
+        req.finish_t = time.perf_counter()
+        self.active[slot] = None
+        self._decoding.discard(slot)
+        self.backend.release(slot)
+        self.requests_finished += 1
+        self._ttfts.append(req.ttft_s)
+        self._decode_rates.append(req.decode_tok_s)
+        return req
 
     # -------------------------------------------------------------- decode
+    def _decode_block_tables(self):
+        """Block tables for the decode batch.  Chunked mode masks slots
+        that are not decoding (idle or mid-prefill) to the NULL page: the
+        decode step computes garbage rows for them regardless, and this
+        keeps their scatter writes off live pages — in particular off a
+        mid-prefill slot's freshly written slabs."""
+        bt = self.backend.block_tables
+        if not self.chunked:
+            return jnp.asarray(bt)
+        mask = np.zeros((self.slots, 1), bt.dtype)
+        for s in self._decoding:
+            mask[s] = 1
+        return jnp.asarray(bt * mask)
+
     def step(self) -> Optional[List[Request]]:
-        """One engine cycle: admit, then decode every active slot.
+        """One engine cycle: admit, (chunked: run prefill slabs,) then
+        decode every generating slot.
 
         Returns the requests that finished this cycle, or ``None`` when the
         engine is idle (nothing active after admission).
         """
-        self._admit()
-        if not any(r is not None for r in self.active.values()):
+        finished: List[Request] = []
+        if self.chunked:
+            self._admit_chunked()
+            for _ in range(self.chunks_per_step):
+                if not self._prefilling:
+                    break
+                finished.extend(self._chunk_one())
+            # a finish above may unblock a deferred reservation: admit
+            # again so freed pages go back to work within the same cycle
+            if finished:
+                self._admit_chunked()
+            decode_now = bool(self._decoding)
+        else:
+            finished.extend(self._admit())
+            decode_now = bool(self._decoding)
+        if not decode_now:
+            if (self.chunked and self._prefilling) or finished:
+                self.steps += 1
+                return finished
             return None
         batch = {"tokens": jnp.asarray(self.last_tok[:, None]),
                  "pos": jnp.asarray(self.pos),
                  "sample_nonce": jnp.asarray(self._nonce)}
-        batch.update(self.backend.batch_extras())
+        extras = self.backend.batch_extras()
+        if "block_tables" in extras:
+            extras["block_tables"] = self._decode_block_tables()
+        batch.update(extras)
         t0 = time.perf_counter()
         next_tok, self.caches = self.serve_step(
             self.params, batch, self.caches)
         toks = np.asarray(next_tok)[:, 0]
         self.decode_s += time.perf_counter() - t0
-        finished: List[Request] = []
+        self.decode_steps += 1
         for slot, req in self.active.items():
             if req is None:
                 continue
+            if self.chunked and slot not in self._decoding:
+                continue                       # mid-prefill: no token yet
             tok = int(toks[slot])
             req.out.append(tok)
             self.tokens_generated += 1
@@ -236,12 +477,7 @@ class ServingEngine:
             self.pos[slot] += 1
             if len(req.out) >= req.max_new_tokens or tok == self.stop_token \
                     or self.pos[slot] >= self.cache_len - 1:
-                req.done = True
-                req.finish_step = self.steps
-                self.active[slot] = None
-                self.backend.release(slot)
-                self.requests_finished += 1
-                finished.append(req)
+                finished.append(self._finish(slot, req))
         self.steps += 1
         return finished
 
@@ -263,9 +499,14 @@ class ServingEngine:
 
     # ------------------------------------------------------------- metrics
     def metrics(self) -> Dict[str, Any]:
-        """Engine throughput/latency counters + backend occupancy."""
+        """Engine throughput/latency counters + backend occupancy.
+
+        Per-request latency aggregates (``ttft_*``, ``decode_tok_s_mean``)
+        cover requests finished so far — the inputs ``benchmarks/ci_gate``
+        and ``serve_bench`` gate on, not just aggregate steps/s."""
         m = {
-            "decode_steps": self.steps,
+            "engine_cycles": self.steps,
+            "decode_steps": self.decode_steps,
             "tokens_generated": self.tokens_generated,
             "requests_admitted": self.requests_admitted,
             "requests_finished": self.requests_finished,
@@ -273,11 +514,28 @@ class ServingEngine:
             "prefill_traces": self.prefill_traces,
             "prefill_s": self.prefill_s,
             "decode_s": self.decode_s,
-            "decode_steps_per_s": (self.steps / self.decode_s
+            "decode_steps_per_s": (self.decode_steps / self.decode_s
                                    if self.decode_s else 0.0),
             "tokens_per_s": (self.tokens_generated
                              / (self.decode_s + self.prefill_s)
                              if self.decode_s + self.prefill_s else 0.0),
+            "ttft_s_mean": (float(np.mean(self._ttfts))
+                            if self._ttfts else 0.0),
+            "ttft_s_p95": (float(np.percentile(self._ttfts, 95))
+                           if self._ttfts else 0.0),
+            "decode_tok_s_mean": (float(np.mean(self._decode_rates))
+                                  if self._decode_rates else 0.0),
         }
+        if self.chunked:
+            m.update({
+                "chunked_prefill": True,
+                "chunk_size": self.chunk_size,
+                "chunk_calls": self.chunk_calls,
+                "chunk_utilization": (
+                    self.chunk_tokens / (self.chunk_calls * self.chunk_size)
+                    if self.chunk_calls else 0.0),
+                "prefix_hit_rate": (self.shared_tokens / self.prefill_tokens
+                                    if self.prefill_tokens else 0.0),
+            })
         m.update(self.backend.stats())
         return m

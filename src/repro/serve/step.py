@@ -23,7 +23,7 @@ import jax.numpy as jnp
 
 def tuned_kernel_configs(model_cfg, batch_size: int, max_seq: int,
                          dtype=jnp.bfloat16, page_size: int = 16,
-                         num_pages=None):
+                         num_pages=None, chunk_size: int = 32):
     """TroopConfigs for the decode-path kernels at the serving shapes.
 
     Pure shape-level lookup (ShapeDtypeStruct placeholders — nothing is
@@ -77,6 +77,13 @@ def tuned_kernel_configs(model_cfg, batch_size: int, max_seq: int,
             sds((P8, p8, KV, hd), jnp.int8),
             sds((P8, p8, KV, 1), jnp.bfloat16),
             sds((B, nblk8), jnp.int32), sds((B,), jnp.int32)),
+        "prefill_attention_paged": get_tuned(
+            "prefill_attention_paged",
+            sds((1, chunk_size, H, hd), dtype),
+            sds((P, page_size, KV, hd), dtype),
+            sds((P, page_size, KV, hd), dtype),
+            sds((1, nblk), jnp.int32), sds((1,), jnp.int32),
+            sds((1,), jnp.int32)),
         "gemv": get_tuned("gemv", sds((V, d), dtype), sds((d,), dtype)),
         "qgemv": get_tuned(
             "qgemv", sds((V, d), jnp.int8), sds((V, d // g), jnp.float32),
@@ -84,6 +91,20 @@ def tuned_kernel_configs(model_cfg, batch_size: int, max_seq: int,
         "rmsnorm": get_tuned("rmsnorm", sds((B, d), dtype),
                              sds((d,), jnp.float32)),
     }
+
+
+def make_chunk_step(model):
+    """Chunked prefill: one fixed-size token slab against the shared paged
+    caches.  batch = {tokens (1, C) right-padded, offset (1,), valid (1,),
+    stage_base (1,), block_tables (1, nblk)} -> (next_tok (1,), caches).
+    The returned token is the greedy argmax of the last valid row's logits
+    — only meaningful on a prompt's final slab (identical readout to the
+    bucketed ``make_prefill_step``, so the two engines emit the same first
+    token)."""
+    def chunk_step(params, batch, caches):
+        logits, caches = model.chunk_step(params, batch, caches)  # (B, V)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+    return chunk_step
 
 
 def make_prefill_step(model):

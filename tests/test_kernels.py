@@ -123,6 +123,37 @@ def test_paged_decode_attention(B, H, KV, hd, page, nblk, dt):
     np.testing.assert_allclose(dense, want, **tol(dt))
 
 
+@pytest.mark.parametrize("B,C,H,KV,hd,page,nblk", [
+    (2, 16, 8, 8, 64, 16, 8), (2, 32, 8, 2, 64, 32, 4),
+    (1, 16, 16, 4, 128, 16, 3),
+])
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_prefill_attention_paged(B, C, H, KV, hd, page, nblk, dt):
+    """Chunked-prefill slab over scattered pages == causal oracle with a
+    query offset (incl. odd-nblk one-stream fallback and pad rows)."""
+    P = 1 + B * nblk
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, C, H, hd), dt)
+    k_pool = jax.random.normal(ks[1], (P, page, KV, hd), dt)
+    v_pool = jax.random.normal(ks[2], (P, page, KV, hd), dt)
+    perm = np.random.default_rng(0).permutation(P - 1) + 1
+    bt = jnp.asarray(perm[:B * nblk].reshape(B, nblk), jnp.int32)
+    # slab b enters mid-sequence (prefix-cache hit) with a ragged tail
+    q_offset = jnp.asarray([5 * b for b in range(B)], jnp.int32)
+    valid = jnp.asarray([C - 3 * b for b in range(B)], jnp.int32)
+    length = q_offset + valid
+    want = np.asarray(
+        R.prefill_attention_paged(q, k_pool, v_pool, bt, q_offset, length),
+        np.float32)
+    for cfg in (BASELINE, TROOP):
+        got = np.asarray(
+            K.prefill_attention_paged(q, k_pool, v_pool, bt, q_offset,
+                                      length, cfg), np.float32)
+        for b in range(B):                 # pad rows are garbage by contract
+            v = int(valid[b])
+            np.testing.assert_allclose(got[b, :v], want[b, :v], **tol(dt))
+
+
 @pytest.mark.parametrize("B,T,H,KV,hd,S", [
     (2, 256, 8, 8, 64, 256), (1, 512, 8, 2, 64, 512),
 ])

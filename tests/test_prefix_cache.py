@@ -1,0 +1,363 @@
+"""Chunked prefill + shared-prefix KV reuse: token identity vs the bucketed
+engine, radix-index/refcount/COW mechanics, allocator leak freedom, int8
+scale-page sharing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import RuntimeConfig, build_model
+from repro.models import modules as M
+from repro.serve.kvcache import (NULL_PAGE, BlockAllocator, PagedBackend,
+                                 PrefixIndex)
+from repro.serve.scheduler import Request, ServingEngine
+from repro.serve.step import make_prefill_step, make_serve_step
+
+
+def setup(**rt_kw):
+    cfg = reduced(get_config("qwen1.5-0.5b"),
+                  num_layers=2, d_model=64, d_ff=128, vocab_size=128,
+                  num_heads=2, num_kv_heads=2, head_dim=32)
+    model = build_model(cfg, RuntimeConfig(remat="none", **rt_kw))
+    params = M.unbox(model.init(jax.random.PRNGKey(0)))
+    return cfg, model, params
+
+
+def make_engine(model, params, *, backend="paged", chunked=False,
+                prefix=False, page_size=None, **kw):
+    kw.setdefault("slots", 3)
+    kw.setdefault("cache_len", 64)
+    kw.setdefault("chunk_size", 8)
+    if page_size is not None:
+        assert backend == "paged"
+        backend = PagedBackend(page_size=page_size)
+    return ServingEngine(
+        model, prefill_step=make_prefill_step(model),
+        serve_step=make_serve_step(model), params=params,
+        backend=backend, chunked_prefill=chunked, prefix_cache=prefix, **kw)
+
+
+def serve(eng, prompts, max_new=5, rid0=0):
+    reqs = [Request(rid=rid0 + i, prompt=np.asarray(p, np.int32),
+                    max_new_tokens=max_new) for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    finished = eng.run_until_drained()
+    assert len(finished) == len(reqs) and all(r.done for r in reqs)
+    return {r.rid: r.out for r in reqs}
+
+
+MIXED = [np.arange(1, 4 + 3 * i) % 63 + 1 for i in range(6)]
+
+
+# --------------------------------------------------------------- tentpole
+def test_chunked_matches_bucketed_mixed_lengths():
+    """Chunked-prefill engine is token-identical to the PR 2 bucketed
+    engine on a mixed-length trace, with exactly ONE prefill compile."""
+    cfg, model, params = setup()
+    outs = {}
+    for chunked in (False, True):
+        eng = make_engine(model, params, chunked=chunked, min_bucket=4)
+        outs[chunked] = serve(eng, MIXED, max_new=6)
+        if chunked:
+            assert eng.prefill_traces == 1          # one slab shape, ever
+            m = eng.metrics()
+            assert m["chunk_calls"] >= len(MIXED)
+            assert 0 < m["chunk_utilization"] <= 1
+    assert outs[True] == outs[False]
+
+
+def test_chunked_matches_bucketed_int8_kv():
+    """Same identity under int8 KV pages: the bf16 chunk stage keeps later
+    slabs from re-reading their own prompt through quantized pages."""
+    cfg, model, params = setup(kv_cache_dtype="int8")
+    outs = {}
+    for chunked in (False, True):
+        be = PagedBackend(page_size=32, kv_dtype="int8")
+        eng = make_engine(model, params, backend=be, chunked=chunked,
+                          min_bucket=4)
+        outs[chunked] = serve(eng, MIXED, max_new=6)
+    assert outs[True] == outs[False]
+
+
+def test_chunked_matches_dense_oracle():
+    """Greedy chunked output == full-forward greedy loop (dense oracle)."""
+    cfg, model, params = setup()
+    prompt = np.asarray([3, 14, 15, 9, 2, 6, 5, 35, 8, 9, 7, 9], np.int32)
+    toks = list(prompt)
+    for _ in range(4):
+        logits, _ = model.train_logits(
+            params, {"tokens": jnp.asarray([toks], jnp.int32)})
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    want = toks[len(prompt):]
+    eng = make_engine(model, params, chunked=True, chunk_size=5)
+    outs = serve(eng, [prompt, np.asarray([7, 7, 7], np.int32)], max_new=4)
+    assert outs[0] == want
+
+
+def test_long_prompt_does_not_block_running_decode():
+    """The tentpole property: a running decode keeps emitting a token
+    every cycle while a long prompt prefills slab by slab (the bucketed
+    engine would stall it for the whole prompt)."""
+    cfg, model, params = setup()
+    eng = make_engine(model, params, chunked=True, chunk_size=4,
+                      cache_len=64, slots=3)
+    short = Request(rid=1, prompt=np.asarray([5, 6, 7], np.int32),
+                    max_new_tokens=8)
+    eng.submit(short)
+    eng.step()                            # admitted, prefilled, decoding
+    produced = len(short.out)
+    assert produced >= 1
+    long_req = Request(rid=0, prompt=np.arange(1, 41) % 63 + 1,
+                       max_new_tokens=4)
+    eng.submit(long_req)                  # 40 tokens -> 10 slabs
+    for _ in range(3):
+        eng.step()
+        assert len(short.out) > produced  # decode advanced this cycle...
+        produced = len(short.out)
+        assert len(long_req.out) == 0     # ...while long is mid-prefill
+    eng.run_until_drained()
+    assert long_req.done and short.done
+
+
+# ------------------------------------------------------------ prefix cache
+def test_shared_prefix_token_identical_and_pages_shared():
+    """Two requests sharing an N-page prefix: token-identical to unshared
+    runs, and the prefix physically maps to the SAME pages."""
+    cfg, model, params = setup()
+    sysp = np.arange(1, 33) % 63 + 1                  # 32 = 2 pages @ 16
+    prompts = [np.concatenate([sysp, [70 + i, 71, 72]]) for i in range(3)]
+    eng = make_engine(model, params, chunked=True, prefix=True, slots=2)
+    got = serve(eng, prompts)
+    m = eng.metrics()
+    assert m["prefix_hit_rate"] > 0
+    assert m["prefix_hits"] >= 1
+    eng2 = make_engine(model, params, chunked=True, prefix=False, slots=2)
+    want = serve(eng2, prompts)
+    assert got == want
+
+    # physical sharing: admit two sharers simultaneously and compare tables
+    eng3 = make_engine(model, params, chunked=True, prefix=True, slots=2)
+    serve(eng3, prompts[:1])                          # seed the index
+    r1 = Request(rid=10, prompt=np.asarray(prompts[1], np.int32),
+                 max_new_tokens=8)
+    r2 = Request(rid=11, prompt=np.asarray(prompts[2], np.int32),
+                 max_new_tokens=8)
+    eng3.submit(r1)
+    eng3.submit(r2)
+    eng3.step()
+    bt = eng3.backend.block_tables
+    live = [bt[s] for s, r in eng3.active.items() if r is not None]
+    assert len(live) == 2
+    assert list(live[0][:2]) == list(live[1][:2])     # same physical pages
+    assert all(p != NULL_PAGE for p in live[0][:2])
+    stats = eng3.backend.kv_page_bytes()
+    assert stats["kv_pages_resident"] < stats["kv_pages_logical"]
+    eng3.run_until_drained()
+
+
+def test_cow_divergence_mid_page():
+    """Prompts diverging mid-page copy the divergence page once (COW) and
+    stay token-identical to an engine without the prefix cache."""
+    cfg, model, params = setup()
+    base = np.arange(1, 49) % 63 + 1                  # 48 tokens = 3 pages
+    a = np.concatenate([base, [37, 2, 3]])
+    b = base.copy()
+    b[40] = 61                                        # diverge inside page 3
+    b = np.concatenate([b, [4, 5, 6]])
+    # pool roomy enough to keep a's pages cached while b admits
+    eng = make_engine(model, params, chunked=True, prefix=True, slots=1,
+                      backend=PagedBackend(page_size=16, num_pages=9,
+                                           prefix_cache=True))
+    got = serve(eng, [a, b])
+    m = eng.metrics()
+    assert m["cow_copies"] == 1                       # page 3 copied once
+    assert m["prefix_shared_tokens"] == 40            # 2 full pages + 8 COW
+    eng2 = make_engine(model, params, chunked=True, prefix=False, slots=1)
+    assert got == serve(eng2, [a, b])
+
+
+def test_allocator_leak_free_with_refcounts():
+    """After drain + index clear, every page is back on the free list."""
+    cfg, model, params = setup()
+    sysp = np.arange(1, 33) % 63 + 1
+    prompts = [np.concatenate([sysp, [70 + i, 71]]) for i in range(4)]
+    eng = make_engine(model, params, chunked=True, prefix=True)
+    serve(eng, prompts)
+    be = eng.backend
+    total = be.spec.num_pages - 1
+    held = be.prefix_index.num_pages
+    assert held > 0                                   # index keeps pages warm
+    assert be.allocator.num_free == total - held      # slots released theirs
+    for p, n in be.allocator._refs.items():
+        assert n == 1, f"page {p} still has {n} refs after drain"
+    be.prefix_index.clear()
+    assert be.prefix_index.num_pages == 0
+    assert be.allocator.num_free == total             # nothing leaked
+
+
+def test_prefix_eviction_under_pool_pressure():
+    """A pool too small for the index + a new request evicts cold prefix
+    pages instead of deadlocking admission."""
+    cfg, model, params = setup()
+    eng = make_engine(model, params, chunked=True, prefix=True,
+                      slots=1, cache_len=32,
+                      backend=PagedBackend(page_size=16, num_pages=3,
+                                           prefix_cache=True))
+    serve(eng, [np.arange(1, 25) % 63 + 1])           # 1 full page, cached
+    assert eng.backend.prefix_index.num_pages >= 1
+    serve(eng, [np.arange(30, 54) % 63 + 1], rid0=5)  # disjoint: must evict
+    assert eng.backend.prefix_index.evictions >= 1
+
+
+def test_int8_scale_pages_shared_alongside_values():
+    """int8 pools: a prefix hit shares value AND scale pages (one block
+    table addresses both), and the engine still serves correctly."""
+    cfg, model, params = setup(kv_cache_dtype="int8")
+    be = PagedBackend(page_size=32, kv_dtype="int8")
+    eng = make_engine(model, params, backend=be, chunked=True, prefix=True,
+                      cache_len=96, chunk_size=16, slots=2)
+    sysp = np.arange(1, 34) % 63 + 1                  # 33 toks: 1 full page
+    prompts = [np.concatenate([sysp, [70 + i, 71, 72]]) for i in range(3)]
+    got = serve(eng, prompts, max_new=4)
+    m = eng.metrics()
+    assert m["prefix_hit_rate"] > 0
+    assert all(len(o) == 4 for o in got.values())
+    # the shared page's scale rows are the same physical rows: the pool
+    # leaf carries scale pages addressed by the identical table entry
+    leaf = jax.tree.leaves(
+        eng.caches, is_leaf=lambda x: getattr(x, "quantized", False))[0]
+    assert leaf.quantized and leaf.k_scale_pool.shape[:2] \
+        == leaf.k_pool.shape[:2]
+
+
+# ----------------------------------------------------------- mechanics
+def test_block_allocator_refcounts():
+    a = BlockAllocator(6)                             # pages 1..5 usable
+    got = a.alloc(2)
+    a.incref([got[0]])
+    a.free(got)                                       # got[0] survives
+    assert a.num_free == 4 and a.ref(got[0]) == 1
+    a.free([got[0]])
+    assert a.num_free == 5 and a.ref(got[0]) == 0
+    with pytest.raises(AssertionError):
+        a.free([got[0]])                              # double free
+
+
+def test_prefix_index_match_insert_partial():
+    a = BlockAllocator(10)
+    idx = PrefixIndex(4, a)
+    pages = a.alloc(3)
+    prompt = list(range(12)) + [99]                   # 3 full pages + 1
+    idx.insert(prompt, pages)
+    assert idx.num_pages == 3 and all(a.ref(p) == 2 for p in pages)
+    full, partial = idx.match(list(range(12)) + [50, 51])
+    assert full == pages and partial is None
+    # divergence mid-page 2: tokens 0..5 match, 6 diverges
+    full, partial = idx.match([0, 1, 2, 3, 4, 5, 77, 78, 79])
+    assert full == pages[:1] and partial == (pages[1], 2)
+    # the final token is never served from cache: an exact-prefix prompt
+    # still leaves >= 1 token to compute
+    full, partial = idx.match(list(range(12)))
+    assert full == pages[:2] and partial == (pages[2], 3)
+
+
+def test_prefix_index_eviction_is_lru_leaf_first():
+    a = BlockAllocator(10)
+    idx = PrefixIndex(2, a)
+    p1 = a.alloc(2)
+    p2 = a.alloc(1)
+    idx.insert([0, 1, 2, 3, 9], p1)                  # chain of 2
+    idx.insert([0, 1, 7, 8, 9], [p1[0], p2[0]])      # shares the root page
+    a.free(p1)
+    a.free(p2)                                       # index holds all refs
+    idx.match([0, 1, 7, 8, 5])                       # touch the p2 branch
+    assert idx.evict(1) == 1                         # LRU leaf: p1's tail
+    assert a.ref(p1[1]) == 0 and a.ref(p2[0]) == 1
+    assert idx.evict(5) == 2                         # rest drains leaf-first
+    assert a.num_free == 9
+
+
+def test_chunked_rejects_unsupported_archs():
+    cfg = reduced(get_config("rwkv6-3b"))
+    model = build_model(cfg, RuntimeConfig(remat="none"))
+    params = M.unbox(model.init(jax.random.PRNGKey(0)))
+    with pytest.raises(ValueError, match="causal-attention"):
+        make_engine(model, params, chunked=True)
+    cfg2, model2, params2 = setup()
+    with pytest.raises(ValueError, match="paged"):
+        make_engine(model2, params2, backend="dense", chunked=True)
+    with pytest.raises(ValueError, match="chunked_prefill"):
+        make_engine(model2, params2, chunked=False, prefix=True)
+
+
+def test_first_token_finish_rules_match_across_engines():
+    """stop_token hit (or max_new_tokens == 1) on the prefill-emitted
+    first token finishes the request identically in the bucketed and
+    chunked engines — neither may emit a token past the stop."""
+    cfg, model, params = setup()
+    prompt = np.asarray([3, 14, 15, 9, 2, 6], np.int32)
+    logits, _ = model.train_logits(
+        params, {"tokens": jnp.asarray([prompt], jnp.int32)})
+    first = int(jnp.argmax(logits[0, -1]))
+    for chunked in (False, True):
+        # first greedy token IS the stop token
+        eng = make_engine(model, params, chunked=chunked, stop_token=first)
+        outs = serve(eng, [prompt], max_new=6)
+        assert outs[0] == [first], (chunked, outs)
+        # max_new_tokens=1: exactly one token, from prefill alone
+        eng = make_engine(model, params, chunked=chunked)
+        outs = serve(eng, [prompt], max_new=1)
+        assert outs[0] == [first], (chunked, outs)
+
+
+def test_chunk_kernel_path_matches_jnp():
+    """RuntimeConfig(paged_kernel_decode=True) routes chunk attention
+    through the Pallas ``prefill_attention_paged`` kernel; slab logits
+    match the jnp gather path mid-prefill (query offset > 0)."""
+    cfg, model, params = setup()
+    from repro.models import build_model as bm
+    kmodel = bm(cfg, RuntimeConfig(remat="none", paged_kernel_decode=True))
+    eng = make_engine(model, params, chunked=True, chunk_size=8, slots=2)
+    eng.submit(Request(rid=0, prompt=np.arange(1, 20) % 63 + 1,
+                       max_new_tokens=2))
+    eng.step()                               # slab 1 done, mid-prefill
+    slot = eng._prefilling[0]
+    req = eng.active[slot]
+    off = eng._chunk_off[slot]
+    assert off > 0
+    C = eng.chunk_size
+    valid = min(off + C, req.prompt_len) - off
+    tokens = np.zeros((1, C), np.int32)
+    tokens[0, :valid] = req.prompt[off:off + valid]
+    batch = {"tokens": jnp.asarray(tokens),
+             "offset": jnp.asarray([off], jnp.int32),
+             "valid": jnp.asarray([valid], jnp.int32),
+             "stage_base": jnp.asarray([0], jnp.int32),
+             "block_tables": jnp.asarray(
+                 eng.backend.block_tables[slot:slot + 1])}
+    lj, _ = model.chunk_step(params, batch, eng.caches)
+    lk, _ = kmodel.chunk_step(params, batch, eng.caches)
+    np.testing.assert_allclose(np.asarray(lk, np.float32),
+                               np.asarray(lj, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_per_request_latency_metrics():
+    """run_until_drained exposes per-request TTFT + decode tok/s (the
+    ci_gate / serve_bench inputs), not just aggregate steps/s."""
+    cfg, model, params = setup()
+    eng = make_engine(model, params, chunked=True)
+    reqs = [Request(rid=i, prompt=np.asarray([5, 6, 7 + i], np.int32),
+                    max_new_tokens=5) for i in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    finished = eng.run_until_drained()
+    assert len(finished) == 2
+    for r in finished:
+        assert r.ttft_s > 0 and r.finish_t >= r.first_token_t
+        assert r.decode_tok_s > 0
+    m = eng.metrics()
+    assert m["ttft_s_mean"] > 0 and m["ttft_s_p95"] >= m["ttft_s_mean"] * 0.5
+    assert m["decode_tok_s_mean"] > 0

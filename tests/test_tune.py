@@ -225,6 +225,7 @@ def test_tuned_serve_configs(tmp_cache):
     assert set(cfgs) == {"decode_attention", "decode_attention_int8",
                          "paged_decode_attention",
                          "paged_decode_attention_int8",
+                         "prefill_attention_paged",
                          "gemv", "qgemv", "rmsnorm"}
     for v in cfgs.values():
         assert isinstance(v, TroopConfig)
