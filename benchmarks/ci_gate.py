@@ -67,6 +67,28 @@ GATES = [
     ("BENCH_quant.json", "engines[*].prefill_traces", "exact", 0),
     ("BENCH_quant.json", "engines[*].requests_finished", "exact", 0),
     ("BENCH_quant.json", "engines[*].tokens_per_s", "info", 0),
+    # --- load: step-clock SLO bands + modeled energy --------------------
+    # *_steps latencies count engine cycles under the replayer's virtual
+    # clock — deterministic for a seeded trace, so they get bands; *_s
+    # metrics are wall clock and stay info-only.
+    ("BENCH_load.json", "rows[*].all_finished", "exact", 0),
+    ("BENCH_load.json", "rows[*].requests_finished", "exact", 0),
+    ("BENCH_load.json", "rows[*].tokens_generated", "exact", 0),
+    ("BENCH_load.json", "rows[*].deferrals", "exact", 0),
+    ("BENCH_load.json", "rows[*].queue_depth_max", "exact", 0),
+    ("BENCH_load.json", "rows[*].ttft_steps_p50", "rel_band", 0.05),
+    ("BENCH_load.json", "rows[*].ttft_steps_p95", "rel_band", 0.05),
+    ("BENCH_load.json", "rows[*].ttft_steps_p99", "rel_band", 0.05),
+    ("BENCH_load.json", "rows[*].wait_steps_p95", "rel_band", 0.05),
+    ("BENCH_load.json", "rows[*].tpot_steps_p95", "rel_band", 0.05),
+    ("BENCH_load.json", "rows[*].prefix_hit_rate", "rel_band", 0.05),
+    ("BENCH_load.json", "rows[*].ttft_s_p95", "info", 0),
+    ("BENCH_load.json", "rows[*].tokens_per_s", "info", 0),
+    ("BENCH_load.json", "energy[*].modeled_bytes_per_step", "exact", 0),
+    ("BENCH_load.json", "energy[*].bytes_per_token", "exact", 0),
+    ("BENCH_load.json", "energy[*].joules_per_token", "rel_band", 0.01),
+    ("BENCH_load.json", "energy[*].tokens_per_s_per_w", "rel_band", 0.01),
+    ("BENCH_load.json", "energy[*].fraction_of_roofline", "rel_band", 0.01),
 ]
 
 
@@ -201,7 +223,7 @@ def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--files", nargs="*",
                     default=["BENCH_tune.json", "BENCH_serve.json",
-                             "BENCH_quant.json"])
+                             "BENCH_quant.json", "BENCH_load.json"])
     ap.add_argument("--baseline-dir", default=BASELINE_DIR)
     ap.add_argument("--fresh-dir", default=".")
     ap.add_argument("--update", action="store_true",

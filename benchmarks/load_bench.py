@@ -1,0 +1,167 @@
+"""Trace-driven load harness -> table + BENCH_load.json.
+
+Replays a seeded workload trace (``repro.obs.workload``) through the
+serving engine in three modes — bucketed paged, chunked prefill, chunked +
+prefix cache — under the deterministic step clock (``repro.obs.replay``)
+and reports per-request latency percentiles in *engine cycles*
+(``ttft_steps_p50/p95/p99``, ``tpot_steps_*``, ``wait_steps_p95``),
+queue-depth / pool-occupancy timelines and defer/eviction counts.  The
+step-clock percentiles are bit-identical run over run for a given
+``(dist, seed)`` — ``benchmarks/ci_gate.py`` puts SLO bands on them, while
+wall-clock (``*_s``) metrics stay info-only.
+
+A second section joins the tune registry's byte models, the Spatz cycle
+model and the Table-II energy constants (``repro.obs.energy``) into
+modeled energy rows per engine config — bytes/token, joules/token,
+tokens/s/W, fraction-of-roofline — for bf16 and int8 KV+weights.
+
+    PYTHONPATH=src python benchmarks/load_bench.py --fast
+    PYTHONPATH=src python benchmarks/load_bench.py --requests 64 \
+        --trace-out BENCH_load_trace.json      # open in ui.perfetto.dev
+
+Interpret-mode wall times on CPU are NOT TPU performance (DESIGN.md §3);
+the step-clock latencies and modeled energy are hardware-independent.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(
+    __file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+MODES = ("paged", "chunked", "chunked+prefix")
+
+
+def build_engine(arch: str, mode: str, *, slots, cache_len, page_size,
+                 chunk_size, tracer=None):
+    import jax
+    from repro.configs import get_config, reduced
+    from repro.models import RuntimeConfig, build_model
+    from repro.models import modules as M
+    from repro.serve.kvcache import PagedBackend
+    from repro.serve.scheduler import ServingEngine
+    from repro.serve.step import make_prefill_step, make_serve_step
+
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg, RuntimeConfig(remat="none"))
+    params = M.unbox(model.init(jax.random.PRNGKey(0)))
+    eng = ServingEngine(
+        model, slots=slots, cache_len=cache_len,
+        prefill_step=make_prefill_step(model),
+        serve_step=make_serve_step(model), params=params,
+        backend=PagedBackend(page_size=page_size),
+        chunked_prefill=mode.startswith("chunked"), chunk_size=chunk_size,
+        prefix_cache=(mode == "chunked+prefix"), tracer=tracer)
+    return cfg, eng
+
+
+def replay_mode(arch: str, mode: str, trace, *, slots, cache_len,
+                page_size, chunk_size, prefix_len, tracer=None):
+    from repro.obs import Replayer
+
+    cfg, eng = build_engine(arch, mode, slots=slots, cache_len=cache_len,
+                            page_size=page_size, chunk_size=chunk_size,
+                            tracer=tracer)
+    rep = Replayer(eng, prefix_len=prefix_len).run(
+        trace, vocab_size=cfg.vocab_size)
+    row = {"arch": cfg.name, "mode": mode, "dist": trace.meta.get("dist"),
+           "seed": trace.meta.get("seed"), **rep.row()}
+    return row, rep
+
+
+def energy_rows(arch: str, *, slots, cache_len, page_size):
+    from repro.configs import get_config, reduced
+    from repro.obs import engine_energy_row
+
+    cfg = reduced(get_config(arch))
+    rows = []
+    for kv_dtype, weights in (("bfloat16", "bfloat16"), ("int8", "int8")):
+        rows.append(engine_energy_row(
+            cfg, slots=slots, cache_len=cache_len, page_size=page_size,
+            kv_dtype=kv_dtype, weights=weights))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--dist", default="heavy_tail")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fast", action="store_true",
+                    help="16-request smoke (CI); default is a 64-request "
+                         "soak")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=64)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--chunk-size", type=int, default=16)
+    ap.add_argument("--prefix-len", type=int, default=24)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the chunked+prefix run's Chrome trace "
+                         "(open in ui.perfetto.dev)")
+    ap.add_argument("--workload-out", default=None, metavar="PATH",
+                    help="also persist the workload trace as JSON-lines")
+    ap.add_argument("--out", default="BENCH_load.json")
+    args = ap.parse_args(argv)
+
+    import jax
+    from repro import obs
+
+    requests = args.requests or (16 if args.fast else 64)
+    trace = obs.generate(args.dist, requests=requests, seed=args.seed,
+                         prompt_len=(4, min(48, args.cache_len - 18)),
+                         max_new=(2, 16))
+    if args.workload_out:
+        trace.to_jsonl(args.workload_out)
+        print(f"wrote {args.workload_out}")
+
+    rows = []
+    for mode in MODES:
+        tracer = obs.Tracer() if mode == "chunked+prefix" else None
+        row, _ = replay_mode(
+            args.arch, mode, trace, slots=args.slots,
+            cache_len=args.cache_len, page_size=args.page_size,
+            chunk_size=args.chunk_size, prefix_len=args.prefix_len,
+            tracer=tracer)
+        rows.append(row)
+        print(f"{mode:<15} ttft_steps p50/p95/p99 "
+              f"{row['ttft_steps_p50']:.1f}/{row['ttft_steps_p95']:.1f}/"
+              f"{row['ttft_steps_p99']:.1f}  "
+              f"tpot_steps p95 {row['tpot_steps_p95']:.2f}  "
+              f"queue max {row['queue_depth_max']}  "
+              f"defers {row['deferrals']}  "
+              f"drained={row['all_finished']}")
+        if tracer is not None and args.trace_out:
+            tracer.to_chrome(args.trace_out)
+            print(f"wrote {args.trace_out} ({len(tracer.events())} events, "
+                  f"{tracer.dropped} dropped)")
+
+    energy = energy_rows(args.arch, slots=args.slots,
+                         cache_len=args.cache_len,
+                         page_size=args.page_size)
+    for e in energy:
+        print(f"energy {e['kv_dtype']:<9} {e['bytes_per_token']:>8} B/tok  "
+              f"{e['joules_per_token']*1e6:>8.3f} uJ/tok  "
+              f"{e['tokens_per_s_per_w']:>10.0f} tok/s/W  "
+              f"roofline frac {e['fraction_of_roofline']:.3f}")
+
+    payload = {
+        "backend": jax.default_backend(),
+        "interpret_mode": True,
+        "workload": trace.meta,
+        "rows": rows,
+        "energy": energy,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    print(f"wrote {args.out}")
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -89,6 +89,35 @@ def bench_engine(arch: str, mode: str, *, slots, cache_len, requests,
     return m
 
 
+def bench_soak(arch: str, *, requests, slots, cache_len, page_size,
+               chunk_size=16):
+    """N-request heavy-tail soak through the chunked+prefix engine under
+    the deterministic step clock (``repro.obs``): percentile latency rows
+    (engine cycles, gateable; wall seconds, info) plus queue-depth /
+    occupancy timelines."""
+    from repro import obs
+    _here = os.path.dirname(os.path.abspath(__file__))
+    if _here not in sys.path:
+        sys.path.insert(0, _here)
+    from load_bench import build_engine
+
+    cfg, eng = build_engine(arch, "chunked+prefix", slots=slots,
+                            cache_len=cache_len, page_size=page_size,
+                            chunk_size=chunk_size)
+    trace = obs.generate("heavy_tail", requests=requests, seed=0,
+                         prompt_len=(4, min(48, cache_len - 18)),
+                         max_new=(2, 16))
+    rep = obs.Replayer(eng, timeline_every=4).run(
+        trace, vocab_size=cfg.vocab_size)
+    row = {"arch": cfg.name, "mode": "soak/chunked+prefix",
+           "dist": "heavy_tail", **rep.row()}
+    tl = rep.timeline
+    row["timeline"] = {k: [float(x) for x in tl[k]]
+                       for k in ("t", "queue_depth", "decoding",
+                                 "pages_in_use") if k in tl}
+    return row
+
+
 def bench_decode_kernels(*, slots, cache_len, page_size, iters):
     """Dense vs paged decode-attention at the serving shapes."""
     import jax
@@ -176,11 +205,13 @@ def main(argv=None):
 
     soak = None
     if args.soak:
-        soak = bench_engine(args.arch, "chunked+prefix", slots=args.slots,
-                            cache_len=args.cache_len, requests=args.soak,
-                            max_new=max_new, page_size=args.page_size)
-        print(f"soak({args.soak:>3})      {soak['decode_steps']:>4} steps  "
-              f"{soak['tokens_per_s']:>8.2f} tok/s  "
+        soak = bench_soak(args.arch, requests=args.soak, slots=args.slots,
+                          cache_len=args.cache_len,
+                          page_size=args.page_size)
+        print(f"soak({args.soak:>3})      "
+              f"ttft_steps p50/p95/p99 {soak['ttft_steps_p50']:.1f}/"
+              f"{soak['ttft_steps_p95']:.1f}/{soak['ttft_steps_p99']:.1f}  "
+              f"queue max {soak['queue_depth_max']}  "
               f"drained={soak['all_finished']}")
 
     kernels = bench_decode_kernels(slots=args.slots, cache_len=args.cache_len,

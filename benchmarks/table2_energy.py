@@ -8,12 +8,10 @@ with constants fit once to the paper's Spatz_BASELINE dp-fdotp entry
 from __future__ import annotations
 
 from repro.core import perfmodel as PM
+# the energy constants live in repro.obs.energy — one set of numbers for
+# this table AND the serving-level energy attribution (load_bench)
+from repro.obs.energy import E_BEAT, E_FMA, P_STATIC  # noqa: F401
 from benchmarks.paper_data import TABLE2
-
-# per-cycle/per-event energies (pJ), 12nm-scale; fit on dp-fdotp baseline
-P_STATIC = 36.0          # cluster overhead per cycle
-E_BEAT = 70.0            # TCDM access + interconnect per 256-bit beat
-E_FMA = 56.0             # 4x 64-bit FMA per beat
 
 
 def efficiency(kernel: str, cfg) -> float:

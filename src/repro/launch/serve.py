@@ -60,6 +60,11 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record a lifecycle trace (repro.obs.Tracer) and "
+                         "write it as a Chrome trace-event file — open in "
+                         "ui.perfetto.dev (a .jsonl suffix writes "
+                         "JSON-lines instead)")
     args = ap.parse_args()
 
     if args.kernel_decode and args.backend != "paged":
@@ -109,6 +114,10 @@ def main():
                                    page_size=args.page_size,
                                    num_pages=args.num_pages,
                                    chunk_size=args.chunk_size)
+    tracer = None
+    if args.trace_out:
+        from repro.obs import Tracer
+        tracer = Tracer()
     engine = ServingEngine(
         model, slots=args.slots, cache_len=args.cache_len,
         prefill_step=make_prefill_step(model),
@@ -116,7 +125,7 @@ def main():
                                    troop_configs=configs),
         params=params, prefill_extras=extras, backend=backend,
         chunked_prefill=args.chunked_prefill, chunk_size=args.chunk_size,
-        prefix_cache=args.prefix_cache)
+        prefix_cache=args.prefix_cache, tracer=tracer)
     rng = np.random.default_rng(0)
     system_prompt = rng.integers(1, min(cfg.vocab_size, 1000), 24) \
         if args.prefix_cache else None
@@ -134,6 +143,13 @@ def main():
           f"({m['prefill_traces']} prefill compiles, "
           f"backend={engine.backend.name})")
     print(json.dumps(m, indent=1, default=str))
+    if tracer is not None:
+        if args.trace_out.endswith(".jsonl"):
+            tracer.to_jsonl(args.trace_out)
+        else:
+            tracer.to_chrome(args.trace_out)
+        print(f"wrote {args.trace_out} ({len(tracer.events())} events, "
+              f"{tracer.dropped} dropped)")
 
 
 if __name__ == "__main__":

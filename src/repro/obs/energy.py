@@ -1,0 +1,276 @@
+"""Serving-level roofline + energy attribution (the paper's Table II, per
+engine row instead of per kernel).
+
+Joins three things the repo already has:
+
+  * the tune registry's per-kernel cost models (``flops=`` / ``bytes=`` /
+    ``streamed=`` — audited registry-wide: modeled bytes == the sum of the
+    operands the kernel actually streams),
+  * the Spatz machine parameters of ``core.perfmodel`` (beats, memory
+    beats/cycle, issue overhead — the cycle model's roofline terms), and
+  * the energy constants fit for ``benchmarks/table2_energy.py`` (static
+    power per cycle, energy per 256-bit TCDM beat, energy per FMA beat —
+    calibrated once on the paper's dp-fdotp 25.9 DP-GFLOPs/W entry).
+
+``decode_step_account`` enumerates the registry kernels one engine decode
+step executes at given serving shapes (projections, paged attention, norms,
+lm head — as ``ShapeDtypeStruct`` placeholders, nothing allocated), and
+``EnergyModel.step_report`` folds the account into modeled cycles, energy,
+joules/token, tokens/s/W and fraction-of-roofline — the serving analog of
+the paper's 38 DP-GFLOPs/W headline, deterministic and CI-gateable.
+
+Byte-model convention: weight/pool operands are exact; per-slot activation
+vectors are counted once (not ``slots`` times) — at OI~=1 the streamed
+weights and KV pages dominate, and keeping each entry's bytes equal to its
+registry model preserves the audit identity (tested in ``test_obs``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct as sds
+
+from repro.core import perfmodel as PM
+
+# per-cycle / per-event energies (pJ), 12nm-scale; fit once on the paper's
+# Spatz_BASELINE dp-fdotp entry (25.9 DP-GFLOPs/W @ 1 GHz) and held fixed.
+# ``benchmarks/table2_energy.py`` imports these — one set of constants.
+P_STATIC = 36.0          # cluster overhead per cycle
+E_BEAT = 70.0            # TCDM access + interconnect per 256-bit beat
+E_FMA = 56.0             # 4x 64-bit FMA per beat
+
+BEAT_BYTES = 32          # one 256-bit beat
+FLOPS_PER_BEAT = 8       # 4 FMAs (64-bit lanes) per beat
+
+
+@dataclass(frozen=True)
+class AccountEntry:
+    """One registry-kernel invocation class within a step."""
+    kernel: str
+    args: Tuple                  # ShapeDtypeStruct placeholders
+    calls: int = 1
+    tag: str = ""                # attribution label (attn / mlp / head / ...)
+
+
+def _registry():
+    import repro.kernels   # noqa: F401  (populates the registry)
+    import repro.quant     # noqa: F401  (qgemv / int8 decode entries)
+    from repro.tune.registry import REGISTRY
+    return REGISTRY
+
+
+def decode_step_account(model_cfg, *, slots: int, cache_len: int,
+                        page_size: int = 16,
+                        kv_dtype: str = "bfloat16",
+                        weights: str = "bfloat16",
+                        quant_group: int = 128) -> List[AccountEntry]:
+    """Registry-kernel account of ONE decode step at the serving shapes.
+
+    Covers the causal-attention decoder path the chunked engine serves:
+    per layer 2 norms, QKV/O projections, paged decode attention over the
+    full block table (worst-case context = ``cache_len``), the MLP (or the
+    routed+shared experts of a MoE layer), plus final norm + lm head.
+    ``kv_dtype="int8"`` switches the attention entry to the int8 paged
+    kernel (scale pages included); ``weights="int8"`` routes projections
+    through ``qgemv`` (value + scale traffic).
+    """
+    from repro.serve.kvcache import PageSpec
+
+    REG = _registry()
+    cfg = model_cfg
+    B, d = slots, cfg.d_model
+    H, KV, hd, V = (cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+                    cfg.vocab_size)
+    dt = jnp.dtype(cfg.dtype)
+    if kv_dtype == "int8":
+        # int8 pages obey the coarser 32-row layout granule (mechanism D)
+        from repro.quant.tensor import granule
+        page_size = -(-page_size // granule()) * granule()
+    spec = PageSpec.for_engine(slots, cache_len, page_size, None, kv_dtype)
+    P, page, nblk = spec.num_pages, spec.page_size, spec.blocks_per_slot
+
+    def proj(n_out: int, n_in: int, tag: str, calls: int = 1) -> AccountEntry:
+        if weights == "int8":
+            g = quant_group if n_in % quant_group == 0 else n_in
+            return AccountEntry(
+                "qgemv", (sds((n_out, n_in), jnp.int8),
+                          sds((n_out, n_in // g), jnp.float32),
+                          sds((n_in,), dt)), calls, tag)
+        return AccountEntry(
+            "gemv", (sds((n_out, n_in), dt), sds((n_in,), dt)), calls, tag)
+
+    def attn_entry() -> AccountEntry:
+        if kv_dtype == "int8":
+            return AccountEntry(
+                "paged_decode_attention_int8",
+                (sds((B, H, hd), dt),
+                 sds((P, page, KV, hd), jnp.int8),
+                 sds((P, page, KV, 1), jnp.bfloat16),
+                 sds((P, page, KV, hd), jnp.int8),
+                 sds((P, page, KV, 1), jnp.bfloat16),
+                 sds((B, nblk), jnp.int32), sds((B,), jnp.int32)),
+                1, "attn")
+        return AccountEntry(
+            "paged_decode_attention",
+            (sds((B, H, hd), dt),
+             sds((P, page, KV, hd), dt), sds((P, page, KV, hd), dt),
+             sds((B, nblk), jnp.int32), sds((B,), jnp.int32)),
+            1, "attn")
+
+    norm = AccountEntry("rmsnorm", (sds((B, d), dt),
+                                    sds((d,), jnp.float32)), 1, "norm")
+    entries: List[AccountEntry] = []
+    for mixer, ffn in cfg.layer_kinds():
+        if mixer != "attn":
+            raise ValueError(
+                f"decode_step_account models causal-attention decoder "
+                f"archs (the chunked engine's domain); {cfg.name!r} has a "
+                f"{mixer!r} mixer")
+        entries.append(norm)                                  # pre-attn
+        entries.append(proj(H * hd, d, "attn_proj"))          # W_Q
+        entries.append(proj(KV * hd, d, "attn_proj", calls=2))  # W_K, W_V
+        entries.append(attn_entry())
+        entries.append(proj(d, H * hd, "attn_proj"))          # W_O
+        entries.append(norm)                                  # pre-ffn
+        mult = 3 if cfg.act == "swiglu" else 2
+        if ffn == "moe":
+            mo = cfg.moe
+            entries.append(proj(mo.num_experts, d, "router"))
+            entries.append(proj(mo.d_ff, d, "moe",
+                                calls=mo.num_experts_per_tok * (mult - 1)))
+            entries.append(proj(d, mo.d_ff, "moe",
+                                calls=mo.num_experts_per_tok))
+            if mo.shared_d_ff:
+                entries.append(proj(mo.shared_d_ff, d, "moe",
+                                    calls=mult - 1))
+                entries.append(proj(d, mo.shared_d_ff, "moe"))
+        else:
+            entries.append(proj(cfg.d_ff, d, "mlp", calls=mult - 1))
+            entries.append(proj(d, cfg.d_ff, "mlp"))
+    entries.append(norm)                                      # final norm
+    entries.append(proj(V, d, "head"))                        # lm head
+    for e in entries:
+        if e.kernel not in REG:
+            raise KeyError(f"account kernel {e.kernel!r} not registered")
+    return entries
+
+
+def account_totals(entries: List[AccountEntry]) -> Dict[str, float]:
+    """Fold an account through the registry cost models: total modeled
+    bytes and FLOPs (the audit quantities)."""
+    REG = _registry()
+    total_bytes = total_flops = 0.0
+    for e in entries:
+        spec = REG[e.kernel]
+        total_bytes += spec.bytes(*e.args) * e.calls
+        total_flops += spec.flops(*e.args) * e.calls
+    return {"bytes": total_bytes, "flops": total_flops,
+            "kernels": sum(e.calls for e in entries)}
+
+
+@dataclass
+class StepReport:
+    """Modeled cost of one decode step (Spatz cycle terms + energy)."""
+    bytes: float
+    flops: float
+    mem_beats: float
+    flop_beats: float
+    cycles: float
+    energy_pj: float
+    tokens_per_step: int
+    fraction_of_roofline: float
+    per_kernel: List[Dict] = field(default_factory=list)
+
+    @property
+    def joules_per_token(self) -> float:
+        return self.energy_pj * 1e-12 / max(self.tokens_per_step, 1)
+
+    @property
+    def tokens_per_s_per_w(self) -> float:
+        """tokens/J == tokens/s per watt (unit identity)."""
+        j = self.joules_per_token
+        return 1.0 / j if j else 0.0
+
+    def row(self) -> Dict:
+        """Flat dict for BENCH JSON / ci_gate (ints exact-gateable)."""
+        return {
+            "modeled_bytes_per_step": int(self.bytes),
+            "modeled_flops_per_step": int(self.flops),
+            "modeled_cycles_per_step": round(self.cycles, 3),
+            "tokens_per_step": self.tokens_per_step,
+            "bytes_per_token": int(self.bytes / max(self.tokens_per_step,
+                                                    1)),
+            "joules_per_token": self.joules_per_token,
+            "tokens_per_s_per_w": self.tokens_per_s_per_w,
+            "fraction_of_roofline": self.fraction_of_roofline,
+        }
+
+
+class EnergyModel:
+    """Spatz-style roofline/energy fold over a kernel account.
+
+    ``spatz``: the machine point (default: the paper's full TROOP config).
+    cycles = max(mem_beats / mem_beats_per_cycle, flop_beats) +
+    issue_overhead per kernel launch; roofline fraction = the memory-bound
+    ideal over modeled cycles (OI~=1: the memory roofline IS the bound).
+    E = cycles*P_STATIC + mem_beats*E_BEAT + flop_beats*E_FMA, the
+    ``table2_energy`` formula applied to serving-step traffic.
+    """
+
+    def __init__(self, spatz: Optional[PM.SpatzConfig] = None):
+        self.spatz = spatz if spatz is not None else PM.BW2X_TROOP
+
+    def step_report(self, entries: List[AccountEntry],
+                    tokens_per_step: int) -> StepReport:
+        REG = _registry()
+        cfg = self.spatz
+        per_kernel: List[Dict] = []
+        tot_b = tot_f = 0.0
+        launches = 0
+        agg: Dict[str, Dict] = {}
+        for e in entries:
+            spec = REG[e.kernel]
+            b = spec.bytes(*e.args) * e.calls
+            f = spec.flops(*e.args) * e.calls
+            tot_b += b
+            tot_f += f
+            launches += e.calls
+            a = agg.setdefault(e.kernel, {"kernel": e.kernel, "calls": 0,
+                                          "bytes": 0.0, "flops": 0.0})
+            a["calls"] += e.calls
+            a["bytes"] += b
+            a["flops"] += f
+        mem_beats = tot_b / BEAT_BYTES
+        flop_beats = tot_f / FLOPS_PER_BEAT
+        mem_cycles = mem_beats / cfg.mem_beats_per_cycle
+        cycles = max(mem_cycles, flop_beats) + launches * cfg.issue_overhead
+        energy = cycles * P_STATIC + mem_beats * E_BEAT + \
+            flop_beats * E_FMA
+        for a in agg.values():
+            share = a["bytes"] / tot_b if tot_b else 0.0
+            per_kernel.append({**a, "bytes_share": round(share, 4)})
+        per_kernel.sort(key=lambda r: -r["bytes"])
+        return StepReport(
+            bytes=tot_b, flops=tot_f, mem_beats=mem_beats,
+            flop_beats=flop_beats, cycles=cycles, energy_pj=energy,
+            tokens_per_step=tokens_per_step,
+            fraction_of_roofline=mem_cycles / cycles if cycles else 0.0,
+            per_kernel=per_kernel)
+
+
+def engine_energy_row(model_cfg, *, slots: int, cache_len: int,
+                      page_size: int = 16, kv_dtype: str = "bfloat16",
+                      weights: str = "bfloat16",
+                      spatz: Optional[PM.SpatzConfig] = None) -> Dict:
+    """One BENCH-ready energy row for an engine config: account + fold."""
+    entries = decode_step_account(
+        model_cfg, slots=slots, cache_len=cache_len, page_size=page_size,
+        kv_dtype=kv_dtype, weights=weights)
+    rep = EnergyModel(spatz).step_report(entries, tokens_per_step=slots)
+    row = {"arch": model_cfg.name, "kv_dtype": kv_dtype, "weights": weights,
+           "slots": slots, "cache_len": cache_len, "page_size": page_size,
+           **rep.row()}
+    row["per_kernel"] = rep.per_kernel
+    return row

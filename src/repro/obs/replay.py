@@ -1,0 +1,184 @@
+"""Trace replayer: drive any ServingEngine config with a workload trace.
+
+Submits a ``WorkloadTrace``'s requests against their arrival times and
+collects the load-harness metrics: per-request TTFT/TPOT percentiles,
+queue-depth / pool-occupancy / decoding-slot timelines, and defer +
+eviction counts.  Two clocks:
+
+  * ``clock="steps"`` (default) — *virtual* time: one engine cycle (or one
+    idle tick when the engine has nothing to do) advances time by
+    ``step_period`` trace units.  Fully deterministic: the same seeded
+    trace against the same engine config produces bit-identical step-based
+    latency percentiles on any machine — these are the numbers
+    ``benchmarks/ci_gate.py`` puts SLO bands on.
+  * ``clock="wall"`` — arrivals map to real seconds (scaled by
+    ``time_scale``); the replayer sleeps through idle gaps.  Wall-clock
+    percentiles vary with hardware and stay info-only in CI.
+
+Latency is reported in both units: ``*_steps`` metrics count engine cycles
+(deterministic), ``*_s`` metrics are ``perf_counter`` seconds.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.obs.workload import WorkloadTrace
+
+
+def percentiles(xs, qs=(50, 95, 99), prefix: str = "") -> Dict[str, float]:
+    """{prefix_p50: ..., ...}; zeros when ``xs`` is empty."""
+    out = {}
+    for q in qs:
+        key = f"{prefix}p{q}"
+        out[key] = float(np.percentile(xs, q)) if len(xs) else 0.0
+    return out
+
+
+@dataclass
+class ReplayReport:
+    finished: List = field(default_factory=list)
+    submitted: int = 0
+    timeline: Dict[str, List] = field(default_factory=dict)
+    wall_s: float = 0.0
+    idle_ticks: int = 0
+    engine_metrics: Dict = field(default_factory=dict)
+
+    def _per_request(self):
+        rows = []
+        for r in self.finished:
+            gen = len(r.out)
+            row = {"rid": r.rid, "prompt_len": r.prompt_len,
+                   "generated": gen,
+                   "wait_steps": r.admit_step - r.submit_step,
+                   "ttft_steps": r.first_token_step - r.submit_step,
+                   "ttft_s": r.ttft_s}
+            if gen > 1 and r.finish_step > r.first_token_step:
+                row["tpot_steps"] = ((r.finish_step - r.first_token_step)
+                                     / (gen - 1))
+                dt = r.finish_t - r.first_token_t
+                row["tpot_s"] = dt / (gen - 1) if dt > 0 else None
+            rows.append(row)
+        return rows
+
+    def row(self) -> Dict:
+        """Flat summary dict for BENCH_load.json (step metrics are
+        deterministic and gateable; ``*_s`` stay info-only)."""
+        per = self._per_request()
+        ttft_steps = [r["ttft_steps"] for r in per]
+        wait_steps = [r["wait_steps"] for r in per]
+        tpot_steps = [r["tpot_steps"] for r in per if "tpot_steps" in r]
+        ttft_s = [r["ttft_s"] for r in per]
+        tpot_s = [r["tpot_s"] for r in per if r.get("tpot_s")]
+        m = self.engine_metrics
+        out = {
+            "requests_submitted": self.submitted,
+            "requests_finished": len(self.finished),
+            "all_finished": len(self.finished) == self.submitted,
+            "wall_s": self.wall_s,
+            "idle_ticks": self.idle_ticks,
+            **percentiles(ttft_steps, prefix="ttft_steps_"),
+            **percentiles(wait_steps, (95,), prefix="wait_steps_"),
+            **percentiles(tpot_steps, (50, 95), prefix="tpot_steps_"),
+            **percentiles(ttft_s, prefix="ttft_s_"),
+            **percentiles(tpot_s, (50, 95), prefix="tpot_s_"),
+        }
+        tl = self.timeline
+        if tl.get("queue_depth"):
+            out["queue_depth_max"] = int(max(tl["queue_depth"]))
+            out["queue_depth_mean"] = float(np.mean(tl["queue_depth"]))
+        if tl.get("decoding"):
+            busy = [d for d in tl["decoding"] if d > 0]
+            out["mean_decode_occupancy"] = (float(np.mean(busy))
+                                            if busy else 0.0)
+        if tl.get("pages_in_use"):
+            out["pages_in_use_max"] = int(max(tl["pages_in_use"]))
+        for k in ("deferrals", "tokens_generated", "tokens_per_s",
+                  "prefill_traces", "prefix_hit_rate", "prefix_evictions",
+                  "cow_copies"):
+            if k in m:
+                out[k] = m[k]
+        return out
+
+
+class Replayer:
+    """Feed a trace to an engine along its arrival schedule.
+
+    ``step_period``: trace time units per engine cycle (steps clock) or
+    ``time_scale``: trace units per wall second (wall clock).  The
+    ``timeline_every`` knob thins timeline samples for long soaks.
+    """
+
+    def __init__(self, engine, *, clock: str = "steps",
+                 step_period: float = 1.0, time_scale: float = 1.0,
+                 prefix_len: int = 24, timeline_every: int = 1):
+        if clock not in ("steps", "wall"):
+            raise ValueError(f"clock must be 'steps' or 'wall', got "
+                             f"{clock!r}")
+        self.engine = engine
+        self.clock = clock
+        self.step_period = step_period
+        self.time_scale = time_scale
+        self.prefix_len = prefix_len
+        self.timeline_every = max(timeline_every, 1)
+
+    def _sample(self, report: ReplayReport, t: float):
+        eng = self.engine
+        tl = report.timeline
+        tl.setdefault("t", []).append(t)
+        tl.setdefault("queue_depth", []).append(len(eng.queue))
+        tl.setdefault("active", []).append(
+            sum(r is not None for r in eng.active.values()))
+        tl.setdefault("decoding", []).append(len(eng._decoding))
+        alloc = getattr(eng.backend, "allocator", None)
+        if alloc is not None:
+            tl.setdefault("pages_in_use", []).append(
+                alloc.num_pages - 1 - alloc.num_free)
+        tracer = getattr(eng, "tracer", None)
+        if tracer is not None:
+            tracer.counter("queue_depth", len(eng.queue))
+            tracer.counter("decoding_slots", len(eng._decoding))
+
+    def run(self, trace: WorkloadTrace, vocab_size: int,
+            max_steps: int = 200_000) -> ReplayReport:
+        eng = self.engine
+        pending = trace.materialize(vocab_size, prefix_len=self.prefix_len)
+        pending.sort(key=lambda ar: (ar[0], ar[1].rid))
+        report = ReplayReport(submitted=len(pending))
+        t0 = time.perf_counter()
+        i = 0
+        ticks = 0
+
+        def virtual_now() -> float:
+            return (eng.steps + report.idle_ticks) * self.step_period
+
+        while (i < len(pending) or eng.queue
+               or any(r is not None for r in eng.active.values())):
+            if ticks >= max_steps:
+                break
+            ticks += 1
+            t = (virtual_now() if self.clock == "steps"
+                 else (time.perf_counter() - t0) * self.time_scale)
+            while i < len(pending) and pending[i][0] <= t:
+                eng.submit(pending[i][1])
+                i += 1
+            if ticks % self.timeline_every == 0:
+                self._sample(report, t)
+            out = eng.step()
+            if out is None:
+                # engine idle: advance virtual time to keep arrivals
+                # flowing (steps) or sleep until the next arrival (wall)
+                report.idle_ticks += 1
+                if self.clock == "wall" and i < len(pending):
+                    now = (time.perf_counter() - t0) * self.time_scale
+                    gap = (pending[i][0] - now) / max(self.time_scale, 1e-9)
+                    if gap > 0:
+                        time.sleep(min(gap, 0.05))
+                continue
+            report.finished.extend(out)
+        report.wall_s = time.perf_counter() - t0
+        report.engine_metrics = eng.metrics()
+        return report

@@ -1,0 +1,167 @@
+"""Replayable workload traces: seeded request streams for the load harness.
+
+A trace is a list of ``TraceEntry`` rows — (arrival time, prompt length,
+shared-prefix id, max_new tokens) — drawn from one of three arrival/length
+families (the shapes production serving actually sees):
+
+  * ``heavy_tail``  — Poisson arrivals, Pareto-tailed prompt lengths: most
+    prompts short, a fat tail of long ones (the scheduler-stressing mix —
+    a long prompt must not head-of-line-block the short ones behind it).
+  * ``bursty``      — arrivals clustered in geometric-size bursts separated
+    by exponential quiet gaps (thundering herds; exercises admission
+    deferral and queue growth).
+  * ``diurnal``     — a sinusoidally rate-modulated Poisson process (the
+    day/night cycle compressed into one trace; exercises ramp-up/drain).
+
+Everything derives from one ``numpy`` Generator seed: the same
+``(dist, seed, requests, knobs)`` always yields byte-identical traces —
+the determinism CI gates and the replay tests rely on.  ``materialize``
+turns entries into engine ``Request``s with concrete token arrays; prompts
+sharing a ``prefix_id`` share their leading ``prefix_len`` tokens (the
+prefix-cache workload), and token content is itself seed-deterministic.
+
+Arrival times are in abstract *time units*; the replayer maps them onto
+wall-clock seconds or engine cycles (``repro.obs.replay``).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+DISTRIBUTIONS = ("heavy_tail", "bursty", "diurnal")
+
+
+@dataclass(frozen=True)
+class TraceEntry:
+    rid: int
+    arrival: float            # time units since trace start (non-decreasing)
+    prompt_len: int
+    prefix_id: int            # -1: no shared prefix
+    max_new: int
+
+
+@dataclass
+class WorkloadTrace:
+    entries: List[TraceEntry]
+    meta: Dict = field(default_factory=dict)
+
+    def __len__(self):
+        return len(self.entries)
+
+    def __iter__(self):
+        return iter(self.entries)
+
+    # ------------------------------------------------------------ persist
+    def to_jsonl(self, path: str):
+        with open(path, "w") as f:
+            f.write(json.dumps({"meta": self.meta}) + "\n")
+            for e in self.entries:
+                f.write(json.dumps(asdict(e)) + "\n")
+
+    @staticmethod
+    def from_jsonl(path: str) -> "WorkloadTrace":
+        with open(path) as f:
+            head = json.loads(f.readline())
+            entries = [TraceEntry(**json.loads(line)) for line in f if
+                       line.strip()]
+        return WorkloadTrace(entries, head.get("meta", {}))
+
+    # -------------------------------------------------------- materialize
+    def materialize(self, vocab_size: int, *, prefix_len: int = 24,
+                    seed: Optional[int] = None):
+        """-> list of ``(arrival, Request)``: concrete token arrays, shared
+        heads per ``prefix_id``.  Token content derives from ``seed``
+        (default: the trace's own seed) so two materializations of one
+        trace are identical."""
+        from repro.serve.scheduler import Request
+        rng = np.random.default_rng(
+            self.meta.get("seed", 0) if seed is None else seed)
+        hi = max(2, min(vocab_size, 1000))
+        heads: Dict[int, np.ndarray] = {}
+        for e in self.entries:          # fixed draw order: rid order
+            if e.prefix_id >= 0 and e.prefix_id not in heads:
+                heads[e.prefix_id] = rng.integers(
+                    1, hi, prefix_len).astype(np.int32)
+        out = []
+        for e in self.entries:
+            body_len = e.prompt_len
+            head = None
+            if e.prefix_id >= 0:
+                head = heads[e.prefix_id]
+                body_len = max(e.prompt_len - prefix_len, 1)
+            body = rng.integers(1, hi, body_len).astype(np.int32)
+            prompt = body if head is None else np.concatenate([head, body])
+            out.append((e.arrival, Request(rid=e.rid, prompt=prompt,
+                                           max_new_tokens=e.max_new)))
+        return out
+
+
+def _lengths(rng, n, dist, lo, hi):
+    """Prompt lengths: Pareto-tailed for heavy_tail, log-uniform-ish for
+    the arrival-shaped families."""
+    if dist == "heavy_tail":
+        raw = lo + (rng.pareto(1.8, n) * lo)
+    else:
+        raw = lo * np.exp(rng.uniform(0, np.log(max(hi / lo, 1.001)), n))
+    return np.clip(raw.astype(np.int64), lo, hi)
+
+
+def generate(dist: str = "heavy_tail", requests: int = 64, seed: int = 0, *,
+             mean_interarrival: float = 1.0,
+             prompt_len: tuple = (4, 48),
+             max_new: tuple = (2, 16),
+             num_prefixes: int = 4,
+             prefix_fraction: float = 0.5,
+             burst_size: int = 8,
+             diurnal_period: float = 32.0) -> WorkloadTrace:
+    """Seeded trace of ``requests`` entries from distribution ``dist``.
+
+    ``prompt_len``/``max_new``: (lo, hi) clamps.  ``prefix_fraction`` of
+    requests get a shared-prefix id in [0, num_prefixes) — their prompts
+    will share leading tokens when materialized.  Identical arguments =>
+    identical trace (tested)."""
+    if dist not in DISTRIBUTIONS:
+        raise ValueError(f"unknown distribution {dist!r}; "
+                         f"one of {DISTRIBUTIONS}")
+    rng = np.random.default_rng(seed)
+    n = requests
+
+    if dist == "bursty":
+        gaps = []
+        while len(gaps) < n:
+            burst = max(int(rng.geometric(1.0 / burst_size)), 1)
+            gaps.append(rng.exponential(mean_interarrival * burst_size))
+            gaps.extend(rng.exponential(mean_interarrival * 0.02, burst - 1))
+        arrivals = np.cumsum(np.asarray(gaps[:n]))
+    elif dist == "diurnal":
+        # inhomogeneous Poisson by per-gap rate modulation: the local rate
+        # swings 5x between trough and peak over ``diurnal_period`` units
+        t, arrivals = 0.0, []
+        for _ in range(n):
+            phase = np.sin(2 * np.pi * t / diurnal_period)
+            rate = (1.0 / mean_interarrival) * (1.0 + 0.8 * phase)
+            t += rng.exponential(1.0 / max(rate, 1e-6))
+            arrivals.append(t)
+        arrivals = np.asarray(arrivals)
+    else:                                         # heavy_tail: plain Poisson
+        arrivals = np.cumsum(rng.exponential(mean_interarrival, n))
+
+    lens = _lengths(rng, n, dist, prompt_len[0], prompt_len[1])
+    news = rng.integers(max_new[0], max_new[1] + 1, n)
+    shared = rng.random(n) < prefix_fraction
+    pids = rng.integers(0, max(num_prefixes, 1), n)
+
+    entries = [TraceEntry(rid=i, arrival=float(arrivals[i]),
+                          prompt_len=int(lens[i]),
+                          prefix_id=int(pids[i]) if shared[i] else -1,
+                          max_new=int(news[i]))
+               for i in range(n)]
+    meta = {"dist": dist, "seed": seed, "requests": requests,
+            "mean_interarrival": mean_interarrival,
+            "prompt_len": list(prompt_len), "max_new": list(max_new),
+            "num_prefixes": num_prefixes,
+            "prefix_fraction": prefix_fraction}
+    return WorkloadTrace(entries, meta)

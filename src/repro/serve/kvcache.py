@@ -129,10 +129,16 @@ class BlockAllocator:
     ``free`` decrefs and returns a page to the free list only when its last
     holder lets go.  The original alloc/free discipline (every page held by
     exactly one slot) is the refcount-1 special case.
+
+    With a ``tracer``, emits ``page_alloc`` / ``page_free`` instants on the
+    allocator track — ``page_free`` counts pages *actually returned* to the
+    free list (a decref of a shared page is not a free), so at any moment
+    ``sum(page_alloc.pages) - sum(page_free.pages) == pages in use``.
     """
 
-    def __init__(self, num_pages: int):
+    def __init__(self, num_pages: int, tracer=None):
         self.num_pages = num_pages
+        self.tracer = tracer
         self._free: List[int] = list(range(num_pages - 1, NULL_PAGE, -1))
         self._refs: Dict[int, int] = {}
 
@@ -149,6 +155,10 @@ class BlockAllocator:
         pages = [self._free.pop() for _ in range(n)]
         for p in pages:
             self._refs[p] = 1
+        if self.tracer is not None and n:
+            self.tracer.instant("page_alloc", "allocator", pages=n)
+            self.tracer.counter("pages_in_use",
+                                self.num_pages - 1 - len(self._free))
         return pages
 
     def incref(self, pages: List[int]):
@@ -157,6 +167,7 @@ class BlockAllocator:
             self._refs[p] += 1
 
     def free(self, pages: List[int]):
+        returned = 0
         for p in pages:
             assert p != NULL_PAGE
             n = self._refs.get(p, 0)
@@ -164,8 +175,13 @@ class BlockAllocator:
             if n == 1:
                 del self._refs[p]
                 self._free.append(p)
+                returned += 1
             else:
                 self._refs[p] = n - 1
+        if self.tracer is not None and returned:
+            self.tracer.instant("page_free", "allocator", pages=returned)
+            self.tracer.counter("pages_in_use",
+                                self.num_pages - 1 - len(self._free))
 
 
 class _PrefixNode:
@@ -460,6 +476,7 @@ class DenseBackend:
 
     def __init__(self):
         self.slots = 0
+        self.tracer = None         # set by the engine (repro.obs.Tracer)
 
     def init_caches(self, model, slots: int, cache_len: int):
         self.slots = slots
@@ -522,6 +539,7 @@ class PagedBackend:
         self.kv_dtype = kv_dtype
         self.prefix_cache = prefix_cache
         self.chunk_stage = chunk_stage
+        self.tracer = None         # set by the engine (repro.obs.Tracer)
         self.spec: Optional[PageSpec] = None
         self.prefix_index: Optional[PrefixIndex] = None
         self._pending_cow: Dict[int, Any] = {}
@@ -542,7 +560,8 @@ class PagedBackend:
         self.cache_len = cache_len
         self.spec = PageSpec.for_engine(slots, cache_len, self.page_size,
                                         self.num_pages, dtype)
-        self.allocator = BlockAllocator(self.spec.num_pages)
+        self.allocator = BlockAllocator(self.spec.num_pages,
+                                        tracer=self.tracer)
         self.block_tables = np.full(
             (slots, self.spec.blocks_per_slot), NULL_PAGE, np.int32)
         self._slot_pages: Dict[int, List[int]] = {}
@@ -573,7 +592,9 @@ class PagedBackend:
         only touches pages whose sole holder is the index)."""
         pages = self.allocator.alloc(n)
         if pages is None and self.prefix_index is not None:
-            self.prefix_index.evict(n - self.allocator.num_free)
+            freed = self.prefix_index.evict(n - self.allocator.num_free)
+            if freed and self.tracer is not None:
+                self.tracer.instant("evict", "allocator", pages=freed)
             pages = self.allocator.alloc(n)
         return pages
 
@@ -624,6 +645,10 @@ class PagedBackend:
         self.block_tables[slot, :len(pages)] = pages
         offset = len(shared) * page + cow_depth
         self._shared_tokens += offset
+        if offset and self.tracer is not None:
+            self.tracer.instant("prefix_hit", "allocator", slot=slot,
+                                shared_pages=len(shared), tokens=offset,
+                                cow=cow_src is not None)
         return offset
 
     def take_cow(self, slot: int):
@@ -632,9 +657,12 @@ class PagedBackend:
 
     def cow_done(self, slot: int):
         """The engine copied the divergence page: drop the source ref."""
-        src, _ = self._pending_cow.pop(slot)
+        src, dst = self._pending_cow.pop(slot)
         self.allocator.free([src])
         self.cow_copies += 1
+        if self.tracer is not None:
+            self.tracer.instant("cow_copy", "allocator", slot=slot,
+                                src_page=src, dst_page=dst)
 
     def register_prefix(self, slot: int, prompt):
         """Index ``slot``'s fully written prompt pages for future reuse

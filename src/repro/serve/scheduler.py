@@ -50,12 +50,15 @@ class Request:
     max_new_tokens: int = 16
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
-    # lifecycle metadata (filled by the engine)
+    # lifecycle metadata (filled by the engine; *_step counters are engine
+    # cycles — deterministic for a seeded trace, the basis of the CI SLO
+    # bands — while *_t markers are wall-clock perf_counter seconds)
     submit_step: int = -1
     admit_step: int = -1
+    first_token_step: int = -1
     finish_step: int = -1
-    # wall-clock latency markers (perf_counter seconds)
     submit_t: float = 0.0
+    admit_t: float = 0.0
     first_token_t: float = 0.0
     finish_t: float = 0.0
 
@@ -74,6 +77,12 @@ class Request:
         dt = self.finish_t - self.first_token_t
         return (len(self.out) - 1) / dt if dt > 0 and len(self.out) > 1 \
             else 0.0
+
+    @property
+    def tpot_s(self) -> float:
+        """Time per output token after the first (1 / decode_tok_s)."""
+        r = self.decode_tok_s
+        return 1.0 / r if r else 0.0
 
 
 def splice_cache(batch_cache, one_cache, slot: int, slots: int):
@@ -104,15 +113,21 @@ class ServingEngine:
                  prefill_batch: Optional[int] = None, min_bucket: int = 8,
                  chunked_prefill: bool = False, chunk_size: int = 32,
                  chunks_per_step: int = 1, prefix_cache: bool = False,
-                 chunk_step=None):
+                 chunk_step=None, tracer=None, metrics_window: int = 4096):
         """``prefill_extras(req) -> dict``: extra prefill batch entries
-        (modality frontend stubs for enc-dec / VLM archs)."""
+        (modality frontend stubs for enc-dec / VLM archs).  ``tracer``: a
+        ``repro.obs.Tracer`` fed with per-request lifecycle spans and
+        allocator events (None: zero overhead).  ``metrics_window`` bounds
+        the per-request latency samples ``metrics()`` aggregates so a
+        long-lived engine never grows without bound."""
         self.model = model
+        self.tracer = tracer
         self.slots = slots
         self.cache_len = cache_len
         self.params = params
         self.prefill_extras = prefill_extras
         self.backend: CacheBackend = make_backend(backend)
+        self.backend.tracer = tracer       # allocator/prefix/COW events
         self.prefill_batch = prefill_batch or min(slots, 4)
         self.min_bucket = min(min_bucket, cache_len)
         self.chunked = chunked_prefill
@@ -190,9 +205,14 @@ class ServingEngine:
         self._chunk_off: Dict[int, int] = {}         # next token to prefill
         self._stage_base: Dict[int, int] = {}        # first non-shared pos
         # ------------------------------------------------------- metrics
+        # _admission_seq is the nonce source and NEVER resets (a reset
+        # nonce would replay a previous request's sampling randomness);
+        # everything below it is a resettable window (reset_metrics).
+        self._admission_seq = 0
         self.tokens_generated = 0
         self.requests_admitted = 0
         self.requests_finished = 0
+        self.deferrals = 0                 # cycles a request sat pool-blocked
         self.prefill_calls = 0
         self.prefill_s = 0.0
         self.decode_s = 0.0
@@ -200,8 +220,10 @@ class ServingEngine:
         self.chunk_tokens = 0                        # valid slab rows
         self.prefill_tokens = 0                      # admitted prompt tokens
         self.shared_tokens = 0                       # served from the prefix
-        self._ttfts: List[float] = []
-        self._decode_rates: List[float] = []
+        # bounded latency samples: a soak appends one entry per finished
+        # request; the deque keeps the trailing window only
+        self._ttfts: deque = deque(maxlen=metrics_window)
+        self._decode_rates: deque = deque(maxlen=metrics_window)
 
     @property
     def prefill_traces(self) -> int:
@@ -222,6 +244,11 @@ class ServingEngine:
         req.submit_step = self.steps
         req.submit_t = time.perf_counter()
         self.queue.append(req)
+        if self.tracer is not None:
+            self.tracer.instant("submit", "queue", rid=req.rid,
+                                prompt_len=req.prompt_len,
+                                max_new=req.max_new_tokens,
+                                queue_depth=len(self.queue))
 
     def _free_slots(self) -> List[int]:
         return [s for s, r in self.active.items() if r is None]
@@ -256,6 +283,10 @@ class ServingEngine:
         next_tok, prefill_caches = self.prefill_step(self.params, batch)
         next_tok = np.asarray(next_tok)
         self.prefill_calls += 1
+        if self.tracer is not None:
+            self.tracer.span("prefill", "engine", self.tracer.rel(t0),
+                             self.tracer.now(), bucket=bucket,
+                             batch=len(group))
 
         finished: List[Request] = []
         for i, req in enumerate(group):
@@ -266,13 +297,23 @@ class ServingEngine:
                 prompt_len=plen)
             self.active[slot] = req
             req.admit_step = self.steps
+            req.admit_t = time.perf_counter()
             self.requests_admitted += 1
+            self._admission_seq += 1
             self.prefill_tokens += req.prompt_len
-            self._nonce[slot] = self.requests_admitted
+            self._nonce[slot] = self._admission_seq
             self.pos[slot] = plen
+            if self.tracer is not None:
+                self.tracer.instant("admit", slot, rid=req.rid,
+                                    prompt_len=req.prompt_len,
+                                    wait_steps=self.steps - req.submit_step)
             tok = int(next_tok[i])
             req.out.append(tok)
+            req.first_token_step = self.steps
             req.first_token_t = time.perf_counter()
+            if self.tracer is not None:
+                self.tracer.instant("first_token", slot, rid=req.rid,
+                                    ttft_steps=self.steps - req.submit_step)
             self.tokens_generated += 1
             self.last_tok[slot] = tok
             # the first token obeys the same finish rules as decode tokens
@@ -303,6 +344,7 @@ class ServingEngine:
                 slot = free[0]
                 need = self._front + req.prompt_len + req.max_new_tokens
                 if not self.backend.reserve(slot, need):
+                    self._defer(req, need)
                     break                  # pool exhausted: defer admission
                 self.queue.popleft()
                 free.pop(0)
@@ -329,6 +371,7 @@ class ServingEngine:
                 offset = self.backend.reserve_with_prefix(
                     slot, need, req.prompt)
                 if offset is None:
+                    self._defer(req, need)
                     return                 # pool exhausted: defer (FIFO)
                 cow = self.backend.take_cow(slot)
                 if cow is not None:
@@ -338,19 +381,34 @@ class ServingEngine:
                     self.backend.cow_done(slot)
             else:
                 if not self.backend.reserve(slot, need):
+                    self._defer(req, need)
                     return
                 offset = 0
             self.queue.popleft()
             self.active[slot] = req
             req.admit_step = self.steps
+            req.admit_t = time.perf_counter()
             self.requests_admitted += 1
+            self._admission_seq += 1
             self.prefill_tokens += req.prompt_len
             self.shared_tokens += offset
-            self._nonce[slot] = self.requests_admitted
+            self._nonce[slot] = self._admission_seq
             self.pos[slot] = 0
             self._chunk_off[slot] = offset
             self._stage_base[slot] = offset
             self._prefilling.append(slot)
+            if self.tracer is not None:
+                self.tracer.instant("admit", slot, rid=req.rid,
+                                    prompt_len=req.prompt_len,
+                                    prefix_offset=offset,
+                                    wait_steps=self.steps - req.submit_step)
+
+    def _defer(self, req: Request, need: int):
+        """Head-of-queue request cannot reserve pages this cycle."""
+        self.deferrals += 1
+        if self.tracer is not None:
+            self.tracer.instant("defer", "queue", rid=req.rid,
+                                need_tokens=need)
 
     def _chunk_one(self) -> List[Request]:
         """Run one prefill slab for the oldest mid-prefill request; on the
@@ -379,6 +437,10 @@ class ServingEngine:
         self.chunk_calls += 1
         self.chunk_tokens += valid
         self._chunk_off[slot] = end
+        if self.tracer is not None:
+            self.tracer.span("chunk", slot, self.tracer.rel(t0),
+                             self.tracer.now(), rid=req.rid, off=off,
+                             valid=valid)
         if end < req.prompt_len:
             return []
         # prompt fully on-pool: index its pages for prefix reuse, start
@@ -389,7 +451,11 @@ class ServingEngine:
         self.prefill_calls += 1
         tok = int(np.asarray(next_tok)[0])
         req.out.append(tok)
+        req.first_token_step = self.steps
         req.first_token_t = time.perf_counter()
+        if self.tracer is not None:
+            self.tracer.instant("first_token", slot, rid=req.rid,
+                                ttft_steps=self.steps - req.submit_step)
         self.tokens_generated += 1
         self.last_tok[slot] = tok
         self.pos[slot] = req.prompt_len
@@ -406,8 +472,25 @@ class ServingEngine:
         self._decoding.discard(slot)
         self.backend.release(slot)
         self.requests_finished += 1
-        self._ttfts.append(req.ttft_s)
-        self._decode_rates.append(req.decode_tok_s)
+        # latency samples: only requests that actually emitted a first
+        # token have a TTFT, and only multi-token requests have a decode
+        # rate — a request finished without either (e.g. truncated before
+        # generating) would record a negative ttft_s / a 0.0 rate and drag
+        # every mean and percentile
+        if req.out and req.first_token_t > 0.0:
+            self._ttfts.append(req.ttft_s)
+        if len(req.out) > 1 and req.finish_t > req.first_token_t:
+            self._decode_rates.append(req.decode_tok_s)
+        if self.tracer is not None:
+            self.tracer.instant("finish", slot, rid=req.rid,
+                                generated=len(req.out),
+                                total_steps=self.steps - req.submit_step)
+            if req.admit_t > 0.0:
+                self.tracer.span("request", slot,
+                                 self.tracer.rel(req.admit_t),
+                                 self.tracer.rel(req.finish_t), rid=req.rid,
+                                 prompt_len=req.prompt_len,
+                                 generated=len(req.out))
         return req
 
     # -------------------------------------------------------------- decode
@@ -465,6 +548,9 @@ class ServingEngine:
         toks = np.asarray(next_tok)[:, 0]
         self.decode_s += time.perf_counter() - t0
         self.decode_steps += 1
+        if self.tracer is not None:
+            self.tracer.span("decode", "engine", self.tracer.rel(t0),
+                             self.tracer.now(), batch=len(self._decoding))
         for slot, req in self.active.items():
             if req is None:
                 continue
@@ -519,12 +605,17 @@ class ServingEngine:
             "tokens_per_s": (self.tokens_generated
                              / (self.decode_s + self.prefill_s)
                              if self.decode_s + self.prefill_s else 0.0),
+            "deferrals": self.deferrals,
             "ttft_s_mean": (float(np.mean(self._ttfts))
                             if self._ttfts else 0.0),
+            "ttft_s_p50": (float(np.percentile(self._ttfts, 50))
+                           if self._ttfts else 0.0),
             "ttft_s_p95": (float(np.percentile(self._ttfts, 95))
                            if self._ttfts else 0.0),
             "decode_tok_s_mean": (float(np.mean(self._decode_rates))
                                   if self._decode_rates else 0.0),
+            "decode_tok_s_p95": (float(np.percentile(self._decode_rates, 95))
+                                 if self._decode_rates else 0.0),
         }
         if self.chunked:
             m.update({
@@ -539,3 +630,25 @@ class ServingEngine:
             })
         m.update(self.backend.stats())
         return m
+
+    def reset_metrics(self):
+        """Zero the metrics window (counters, timers, latency samples) so a
+        long-lived engine can report per-interval numbers.  Does NOT touch
+        scheduling state: ``steps`` keeps counting (in-flight ``*_step``
+        deltas stay valid) and ``_admission_seq`` — the sampling-nonce
+        source — never resets, so a slot reused after a reset cannot replay
+        a predecessor's randomness."""
+        self.tokens_generated = 0
+        self.requests_admitted = 0
+        self.requests_finished = 0
+        self.deferrals = 0
+        self.prefill_calls = 0
+        self.prefill_s = 0.0
+        self.decode_s = 0.0
+        self.decode_steps = 0
+        self.chunk_calls = 0
+        self.chunk_tokens = 0
+        self.prefill_tokens = 0
+        self.shared_tokens = 0
+        self._ttfts.clear()
+        self._decode_rates.clear()

@@ -1,0 +1,359 @@
+"""repro.obs: seeded workload determinism, tracer event ordering +
+allocator balance, Chrome-trace export structure, replay determinism,
+energy-accounting identity vs the tune registry, engine metrics edge
+cases, and the ci_gate SLO bands on BENCH_load rows."""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.configs import get_config, reduced
+from repro.models import RuntimeConfig, build_model
+from repro.models import modules as M
+from repro.serve.kvcache import PagedBackend
+from repro.serve.scheduler import Request, ServingEngine
+from repro.serve.step import make_prefill_step, make_serve_step
+
+
+def setup():
+    cfg = reduced(get_config("qwen1.5-0.5b"),
+                  num_layers=2, d_model=64, d_ff=128, vocab_size=128,
+                  num_heads=2, num_kv_heads=2, head_dim=32)
+    model = build_model(cfg, RuntimeConfig(remat="none"))
+    params = M.unbox(model.init(jax.random.PRNGKey(0)))
+    return cfg, model, params
+
+
+def make_engine(model, params, *, tracer=None, prefix=True, **kw):
+    kw.setdefault("slots", 3)
+    kw.setdefault("cache_len", 64)
+    return ServingEngine(
+        model, prefill_step=make_prefill_step(model),
+        serve_step=make_serve_step(model), params=params,
+        backend=PagedBackend(page_size=16), chunked_prefill=True,
+        chunk_size=16, prefix_cache=prefix, tracer=tracer, **kw)
+
+
+# --------------------------------------------------------------------------
+# workload traces
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("dist", obs.DISTRIBUTIONS)
+def test_workload_seeded_determinism(dist):
+    a = obs.generate(dist, requests=40, seed=7)
+    b = obs.generate(dist, requests=40, seed=7)
+    assert a.entries == b.entries
+    c = obs.generate(dist, requests=40, seed=8)
+    assert c.entries != a.entries
+
+
+@pytest.mark.parametrize("dist", obs.DISTRIBUTIONS)
+def test_workload_shapes_and_clamps(dist):
+    tr = obs.generate(dist, requests=50, seed=1, prompt_len=(4, 48),
+                      max_new=(2, 16), num_prefixes=3)
+    assert len(tr) == 50
+    arr = [e.arrival for e in tr]
+    assert arr == sorted(arr) and arr[0] >= 0
+    for e in tr:
+        assert 4 <= e.prompt_len <= 48
+        assert 2 <= e.max_new <= 16
+        assert -1 <= e.prefix_id < 3
+
+
+def test_workload_jsonl_roundtrip(tmp_path):
+    tr = obs.generate("bursty", requests=12, seed=3)
+    p = str(tmp_path / "trace.jsonl")
+    tr.to_jsonl(p)
+    back = obs.WorkloadTrace.from_jsonl(p)
+    assert back.entries == tr.entries
+    assert back.meta == tr.meta
+
+
+def test_materialize_deterministic_and_shares_prefixes():
+    tr = obs.generate("heavy_tail", requests=24, seed=5,
+                      prefix_fraction=1.0, num_prefixes=2,
+                      prompt_len=(30, 48))
+    a = tr.materialize(128, prefix_len=16)
+    b = tr.materialize(128, prefix_len=16)
+    for (ta, ra), (tb, rb) in zip(a, b):
+        assert ta == tb and np.array_equal(ra.prompt, rb.prompt)
+    # same prefix_id -> identical leading tokens
+    by_pid = {}
+    for e, (_, r) in zip(tr, a):
+        by_pid.setdefault(e.prefix_id, []).append(r.prompt[:16])
+    for heads in by_pid.values():
+        for h in heads[1:]:
+            assert np.array_equal(h, heads[0])
+
+
+def test_unknown_distribution_raises():
+    with pytest.raises(ValueError, match="unknown distribution"):
+        obs.generate("uniform")
+
+
+# --------------------------------------------------------------------------
+# tracer
+# --------------------------------------------------------------------------
+def test_tracer_ring_capacity_and_counts():
+    tr = obs.Tracer(capacity=8)
+    for i in range(12):
+        tr.instant("tick", "queue", rid=i)
+    assert len(tr.events()) == 8
+    assert tr.dropped == 4
+    assert [e[4] for e in tr.events()] == list(range(4, 12))
+    assert tr.counts() == {"tick": 8}
+    tr.clear()
+    assert tr.events() == [] and tr.dropped == 0
+
+
+def test_tracer_sum_arg_and_chrome_export(tmp_path):
+    tr = obs.Tracer()
+    tr.instant("page_alloc", "allocator", pages=3)
+    tr.instant("page_alloc", "allocator", pages=2)
+    tr.span("request", 0, 0.001, 0.005, rid=7, generated=4)
+    tr.counter("queue_depth", 5)
+    assert tr.sum_arg("page_alloc", "pages") == 5
+    p = str(tmp_path / "t.json")
+    tr.to_chrome(p)
+    doc = json.load(open(p))
+    evs = doc["traceEvents"]
+    meta = [e for e in evs if e["ph"] == "M"]
+    assert any(e["name"] == "process_name" for e in meta)
+    # slot 0 gets a named thread track
+    assert any(e["name"] == "thread_name"
+               and e["args"]["name"] == "slot 0" for e in meta)
+    span = next(e for e in evs if e["ph"] == "X")
+    assert span["name"] == "request" and span["args"]["rid"] == 7
+    assert span["dur"] == pytest.approx(4000.0)      # 4 ms in us
+    ctr = next(e for e in evs if e["ph"] == "C")
+    assert ctr["args"] == {"value": 5}
+
+
+def test_tracer_jsonl_export(tmp_path):
+    tr = obs.Tracer()
+    tr.instant("submit", "queue", rid=1, prompt_len=9)
+    tr.span("chunk", 2, 0.0, 0.002, rid=1, off=0, valid=9)
+    p = str(tmp_path / "t.jsonl")
+    tr.to_jsonl(p)
+    recs = [json.loads(line) for line in open(p)]
+    assert recs[0]["name"] == "submit" and recs[0]["args"]["prompt_len"] == 9
+    assert recs[1]["ph"] == "X" and recs[1]["dur_us"] == pytest.approx(2000)
+
+
+# --------------------------------------------------------------------------
+# engine lifecycle tracing + replay
+# --------------------------------------------------------------------------
+def test_traced_soak_spans_close_and_allocator_balances():
+    cfg, model, params = setup()
+    tracer = obs.Tracer()
+    eng = make_engine(model, params, tracer=tracer)
+    trace = obs.generate("heavy_tail", requests=10, seed=0,
+                         prompt_len=(4, 40), max_new=(2, 6))
+    rep = obs.Replayer(eng, prefix_len=16).run(trace, vocab_size=128)
+    assert rep.row()["all_finished"]
+    c = tracer.counts()
+    # every lifecycle stage fired, and per-request events are 1:1
+    assert c["submit"] == c["admit"] == c["first_token"] == c["finish"] \
+        == c["request"] == 10
+    # ordering per rid: submit <= admit <= first_token <= finish
+    for open_name, close_name in (("submit", "admit"),
+                                  ("admit", "first_token"),
+                                  ("first_token", "finish")):
+        opened, closed = obs.span_pairs(tracer.events(), open_name,
+                                        close_name)
+        assert set(opened) == set(closed) == set(range(10))
+        for rid in opened:
+            assert opened[rid] <= closed[rid]
+    # allocator balance: alloc - free == pages still held (prefix index)
+    alloc = eng.backend.allocator
+    in_use = alloc.num_pages - 1 - alloc.num_free
+    assert tracer.sum_arg("page_alloc", "pages") \
+        - tracer.sum_arg("page_free", "pages") == in_use
+    # dropping the index's references drains the pool to empty — and the
+    # traced alloc/free totals then balance exactly
+    eng.backend.prefix_index.clear()
+    assert alloc.num_free == alloc.num_pages - 1
+    assert tracer.sum_arg("page_alloc", "pages") == \
+        tracer.sum_arg("page_free", "pages")
+
+
+def test_replay_step_metrics_deterministic():
+    cfg, model, params = setup()
+    trace = obs.generate("bursty", requests=8, seed=2, prompt_len=(4, 30),
+                         max_new=(2, 5))
+    rows = []
+    for _ in range(2):
+        eng = make_engine(model, params)
+        rep = obs.Replayer(eng, prefix_len=16).run(trace, vocab_size=128)
+        row = rep.row()
+        rows.append({k: v for k, v in row.items()
+                     if not k.endswith("_s") and "_s_" not in k})
+    assert rows[0] == rows[1]
+    assert rows[0]["all_finished"]
+
+
+def test_replayer_rejects_unknown_clock():
+    cfg, model, params = setup()
+    eng = make_engine(model, params)
+    with pytest.raises(ValueError, match="clock"):
+        obs.Replayer(eng, clock="simulated")
+
+
+# --------------------------------------------------------------------------
+# engine metrics edge cases (satellites)
+# --------------------------------------------------------------------------
+def test_metrics_exclude_zero_decode_requests_and_percentiles():
+    cfg, model, params = setup()
+    eng = make_engine(model, params, prefix=False)
+    # max_new=1: the request finishes on its prefill-emitted first token —
+    # it has a TTFT but NO decode rate; it must not drag the decode mean
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=np.arange(1, 6, dtype=np.int32),
+                           max_new_tokens=1))
+    eng.submit(Request(rid=3, prompt=np.arange(1, 6, dtype=np.int32),
+                       max_new_tokens=4))
+    eng.run_until_drained()
+    m = eng.metrics()
+    assert m["requests_finished"] == 4
+    assert len(eng._ttfts) == 4                  # every request has a TTFT
+    assert len(eng._decode_rates) == 1           # only the multi-token one
+    assert m["decode_tok_s_mean"] > 0.0
+    assert m["decode_tok_s_p95"] > 0.0
+    assert 0.0 < m["ttft_s_p50"] <= m["ttft_s_p95"]
+    assert m["deferrals"] == 0
+
+
+def test_reset_metrics_preserves_nonce_and_bounds_windows():
+    cfg, model, params = setup()
+    eng = make_engine(model, params, prefix=False, metrics_window=2)
+    for i in range(5):
+        eng.submit(Request(rid=i, prompt=np.arange(1, 6, dtype=np.int32),
+                           max_new_tokens=3))
+    eng.run_until_drained()
+    assert eng.requests_finished == 5
+    # the window bounds growth: only the trailing 2 samples are kept
+    assert len(eng._ttfts) == 2 and len(eng._decode_rates) == 2
+    seq, steps = eng._admission_seq, eng.steps
+    eng.reset_metrics()
+    assert eng.requests_finished == 0 and eng.tokens_generated == 0
+    assert len(eng._ttfts) == 0
+    assert eng.metrics()["decode_steps"] == 0
+    # scheduling state is NOT a metric: the step counter keeps counting and
+    # the admission sequence (the sampling-nonce source) never rewinds —
+    # a slot reused after a reset must not replay its predecessor's RNG
+    assert eng._admission_seq == seq == 5
+    assert eng.steps == steps
+    eng.submit(Request(rid=9, prompt=np.arange(1, 6, dtype=np.int32),
+                       max_new_tokens=3))
+    eng.run_until_drained()
+    assert eng._admission_seq == 6
+    assert eng.requests_finished == 1
+
+
+# --------------------------------------------------------------------------
+# energy attribution
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("kv_dtype,weights", [("bfloat16", "bfloat16"),
+                                              ("int8", "int8")])
+def test_energy_account_bytes_match_streamed_operands(kv_dtype, weights):
+    """The audit identity, per account entry: the registry ``bytes=`` model
+    must equal ``operand_bytes`` of the ``streamed=`` operand list at the
+    account's exact serving shapes."""
+    from repro.obs.energy import _registry
+    from repro.tune.registry import operand_bytes
+
+    cfg, _, _ = setup()
+    REG = _registry()
+    entries = obs.decode_step_account(cfg, slots=3, cache_len=64,
+                                      kv_dtype=kv_dtype, weights=weights)
+    assert entries, "empty account"
+    for e in entries:
+        spec = REG[e.kernel]
+        assert spec.streamed is not None, e.kernel
+        assert spec.bytes(*e.args) == pytest.approx(
+            operand_bytes(spec.streamed(*e.args))), e.kernel
+
+
+def test_energy_int8_cuts_bytes_and_energy():
+    cfg, _, _ = setup()
+    bf = obs.engine_energy_row(cfg, slots=3, cache_len=64)
+    q8 = obs.engine_energy_row(cfg, slots=3, cache_len=64,
+                               kv_dtype="int8", weights="int8")
+    assert q8["bytes_per_token"] < 0.6 * bf["bytes_per_token"]
+    assert q8["joules_per_token"] < bf["joules_per_token"]
+    assert q8["tokens_per_s_per_w"] > bf["tokens_per_s_per_w"]
+    for row in (bf, q8):
+        assert 0.0 < row["fraction_of_roofline"] <= 1.0
+        assert row["per_kernel"][0]["bytes_share"] <= 1.0
+        # attribution shares sum to 1
+        assert sum(k["bytes_share"] for k in row["per_kernel"]) \
+            == pytest.approx(1.0, abs=2e-3)
+
+
+def test_energy_rejects_non_attention_mixers():
+    cfg = reduced(get_config("jamba-v0.1-52b"))     # mamba-mixer layers
+    with pytest.raises(ValueError, match="mixer"):
+        obs.decode_step_account(cfg, slots=2, cache_len=64)
+
+
+def test_energy_constants_shared_with_table2():
+    """One set of Table-II constants: ``benchmarks/table2_energy.py`` must
+    import them from ``repro.obs.energy``, not duplicate the literals."""
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    src = open(os.path.join(here, "benchmarks", "table2_energy.py")).read()
+    assert "from repro.obs.energy import" in src
+    assert "P_STATIC = " not in src          # no duplicated constants
+
+
+# --------------------------------------------------------------------------
+# ci_gate SLO bands
+# --------------------------------------------------------------------------
+def _load_ci_gate():
+    import importlib.util
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    spec = importlib.util.spec_from_file_location(
+        "ci_gate", os.path.join(here, "benchmarks", "ci_gate.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_ci_gate_fails_on_injected_p95_regression(tmp_path):
+    gate = _load_ci_gate()
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    base_path = os.path.join(here, "benchmarks", "baselines",
+                             "BENCH_load.json")
+    base = json.load(open(base_path))
+    bdir = tmp_path / "baselines"
+    fdir = tmp_path / "fresh"
+    bdir.mkdir(), fdir.mkdir()
+    json.dump(base, open(bdir / "BENCH_load.json", "w"))
+
+    # the committed baseline passes against itself
+    json.dump(base, open(fdir / "BENCH_load.json", "w"))
+    _, failures = gate.gate(["BENCH_load.json"], str(bdir), str(fdir))
+    assert failures == []
+
+    # +50% TTFT p95 on one row -> the SLO band trips
+    bad = json.loads(json.dumps(base))
+    bad["rows"][-1]["ttft_steps_p95"] *= 1.5
+    json.dump(bad, open(fdir / "BENCH_load.json", "w"))
+    _, failures = gate.gate(["BENCH_load.json"], str(bdir), str(fdir))
+    assert any("ttft_steps_p95" in f for f in failures)
+
+    # a changed modeled byte count is an exact-gate failure
+    bad = json.loads(json.dumps(base))
+    bad["energy"][0]["bytes_per_token"] += 1
+    json.dump(bad, open(fdir / "BENCH_load.json", "w"))
+    _, failures = gate.gate(["BENCH_load.json"], str(bdir), str(fdir))
+    assert any("bytes_per_token" in f for f in failures)
+
+    # wall-clock is info-only: a 10x tokens/s swing does NOT fail
+    bad = json.loads(json.dumps(base))
+    for row in bad["rows"]:
+        row["tokens_per_s"] *= 10
+    json.dump(bad, open(fdir / "BENCH_load.json", "w"))
+    _, failures = gate.gate(["BENCH_load.json"], str(bdir), str(fdir))
+    assert failures == []
