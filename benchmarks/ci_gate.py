@@ -52,6 +52,13 @@ GATES = [
     ("BENCH_serve.json", "engines[*].prefix_hit_rate", "rel_band", 0.05),
     ("BENCH_serve.json", "engines[*].tokens_per_s", "info", 0),
     ("BENCH_serve.json", "engines[*].ttft_s_mean", "info", 0),
+    ("BENCH_serve.json", "engines[*].ttft_s_p95", "info", 0),
+    # TP rows: modeled per-device streamed-KV bytes are exact integers
+    # (row-bytes model x rows submitted / kv_shards) — a sharding
+    # regression that re-streams replicated KV shows up here.
+    ("BENCH_serve.json", "engines[*].kv_bytes_streamed", "exact", 0),
+    ("BENCH_serve.json", "engines[*].kv_bytes_streamed_per_device",
+     "exact", 0),
     ("BENCH_serve.json", "decode_kernels[*].roofline_us", "rel_band", 0.05),
     ("BENCH_serve.json", "decode_kernels[*].measured_us", "info", 0),
     # --- tune: the analytic model is deterministic ----------------------

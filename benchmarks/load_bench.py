@@ -38,7 +38,7 @@ MODES = ("paged", "chunked", "chunked+prefix")
 
 
 def build_engine(arch: str, mode: str, *, slots, cache_len, page_size,
-                 chunk_size, tracer=None):
+                 chunk_size, tracer=None, tp=1):
     import jax
     from repro.configs import get_config, reduced
     from repro.models import RuntimeConfig, build_model
@@ -56,7 +56,7 @@ def build_engine(arch: str, mode: str, *, slots, cache_len, page_size,
         serve_step=make_serve_step(model), params=params,
         backend=PagedBackend(page_size=page_size),
         chunked_prefill=mode.startswith("chunked"), chunk_size=chunk_size,
-        prefix_cache=(mode == "chunked+prefix"), tracer=tracer)
+        prefix_cache=(mode == "chunked+prefix"), tracer=tracer, tp=tp)
     return cfg, eng
 
 

@@ -7,9 +7,13 @@ tokens/s, per-request TTFT / decode rate, prefill-compile counts and
 prefix-hit rates; then times the decode/prefill attention kernels (dense
 and paged layouts) at the serving shapes and scores each as a measured
 fraction-of-roofline (t_roofline / t_measured, tune subsystem
-denominators).  ``--soak N`` adds an N-request drain through the
-chunked+prefix engine (the nightly workload); ``benchmarks/ci_gate.py``
-gates the JSON against committed baselines.
+denominators).  Three extra chunked+prefix rows run the tensor-parallel
+engine at tp=1/2/4 on a simulated 4-device host mesh — the modeled
+per-device streamed-KV bytes are exact integers and gateable (a tp=4 row
+must stream exactly 1/4 of the logical bytes per device).  ``--soak N``
+adds an N-request drain through the chunked+prefix engine (the nightly
+workload; ``--soak-tp 4`` adds a TP soak row);
+``benchmarks/ci_gate.py`` gates the JSON against committed baselines.
 
     PYTHONPATH=src python benchmarks/serve_bench.py --fast
 
@@ -52,7 +56,7 @@ def make_trace(cfg, rng, requests, max_new, *, shared_prefix=0):
 
 
 def bench_engine(arch: str, mode: str, *, slots, cache_len, requests,
-                 max_new, page_size, chunk_size=16):
+                 max_new, page_size, chunk_size=16, tp=1):
     import jax
     import numpy as np
     from repro.configs import get_config, reduced
@@ -65,15 +69,16 @@ def bench_engine(arch: str, mode: str, *, slots, cache_len, requests,
     cfg = reduced(get_config(arch))
     model = build_model(cfg, RuntimeConfig(remat="none"))
     params = M.unbox(model.init(jax.random.PRNGKey(0)))
-    be = "dense" if mode == "dense" else PagedBackend(page_size=page_size)
-    chunked = mode.startswith("chunked")
-    prefix = mode == "chunked+prefix"
+    base = mode.split("/")[0]        # "chunked+prefix/tp4" -> "chunked+prefix"
+    be = "dense" if base == "dense" else PagedBackend(page_size=page_size)
+    chunked = base.startswith("chunked")
+    prefix = base == "chunked+prefix"
     eng = ServingEngine(
         model, slots=slots, cache_len=cache_len,
         prefill_step=make_prefill_step(model),
         serve_step=make_serve_step(model), params=params, backend=be,
         chunked_prefill=chunked, chunk_size=chunk_size,
-        prefix_cache=prefix)
+        prefix_cache=prefix, tp=tp)
     rng = np.random.default_rng(0)
     reqs = make_trace(cfg, rng, requests, max_new,
                       shared_prefix=24 if prefix else 0)
@@ -90,11 +95,12 @@ def bench_engine(arch: str, mode: str, *, slots, cache_len, requests,
 
 
 def bench_soak(arch: str, *, requests, slots, cache_len, page_size,
-               chunk_size=16):
+               chunk_size=16, tp=1):
     """N-request heavy-tail soak through the chunked+prefix engine under
     the deterministic step clock (``repro.obs``): percentile latency rows
     (engine cycles, gateable; wall seconds, info) plus queue-depth /
-    occupancy timelines."""
+    occupancy timelines.  ``tp`` > 1 drains the same trace through the
+    tensor-parallel engine (the nightly TP row)."""
     from repro import obs
     _here = os.path.dirname(os.path.abspath(__file__))
     if _here not in sys.path:
@@ -103,13 +109,14 @@ def bench_soak(arch: str, *, requests, slots, cache_len, page_size,
 
     cfg, eng = build_engine(arch, "chunked+prefix", slots=slots,
                             cache_len=cache_len, page_size=page_size,
-                            chunk_size=chunk_size)
+                            chunk_size=chunk_size, tp=tp)
     trace = obs.generate("heavy_tail", requests=requests, seed=0,
                          prompt_len=(4, min(48, cache_len - 18)),
                          max_new=(2, 16))
     rep = obs.Replayer(eng, timeline_every=4).run(
         trace, vocab_size=cfg.vocab_size)
-    row = {"arch": cfg.name, "mode": "soak/chunked+prefix",
+    mode = "soak/chunked+prefix" + (f"/tp{tp}" if tp > 1 else "")
+    row = {"arch": cfg.name, "mode": mode,
            "dist": "heavy_tail", **rep.row()}
     tl = rep.timeline
     row["timeline"] = {k: [float(x) for x in tl[k]]
@@ -181,9 +188,18 @@ def main(argv=None):
     ap.add_argument("--soak", type=int, default=0, metavar="N",
                     help="also run an N-request mixed-length drain through "
                          "the chunked+prefix engine (the nightly soak)")
+    ap.add_argument("--soak-tp", type=int, default=0, metavar="TP",
+                    help="with --soak: add one more soak row through the "
+                         "tensor-parallel engine at this tp size")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args(argv)
 
+    # The tp rows simulate a 4-way mesh on the host; the flag must land
+    # before the first jax import in this process.
+    if "--xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                                   " --xla_force_host_platform_device_count=4")
     import jax
     requests = args.requests or (6 if args.fast else 12)
     max_new = args.max_new or (6 if args.fast else 16)
@@ -203,7 +219,19 @@ def main(argv=None):
               f"ttft {m['ttft_s_mean']*1e3:>7.1f} ms  "
               f"{m['prefill_traces']} prefill compiles{extra}")
 
-    soak = None
+    for tp in (1, 2, 4):
+        mode = f"chunked+prefix/tp{tp}"
+        m = bench_engine(args.arch, mode, slots=args.slots,
+                         cache_len=args.cache_len, requests=requests,
+                         max_new=max_new, page_size=args.page_size, tp=tp)
+        engines.append(m)
+        print(f"{mode:<15} {m['decode_steps']:>4} steps  "
+              f"{m['tokens_per_s']:>8.2f} tok/s  "
+              f"ttft p95 {m['ttft_s_p95']*1e3:>7.1f} ms  "
+              f"kv/dev {m['kv_bytes_streamed_per_device']:>9,} B  "
+              f"overlap {m['dispatch_overlap_fraction']:.2f}")
+
+    soak = soak_tp = None
     if args.soak:
         soak = bench_soak(args.arch, requests=args.soak, slots=args.slots,
                           cache_len=args.cache_len,
@@ -213,6 +241,15 @@ def main(argv=None):
               f"{soak['ttft_steps_p95']:.1f}/{soak['ttft_steps_p99']:.1f}  "
               f"queue max {soak['queue_depth_max']}  "
               f"drained={soak['all_finished']}")
+        if args.soak_tp > 1:
+            soak_tp = bench_soak(args.arch, requests=args.soak,
+                                 slots=args.slots, cache_len=args.cache_len,
+                                 page_size=args.page_size, tp=args.soak_tp)
+            print(f"soak/tp{args.soak_tp}({args.soak:>3})  "
+                  f"ttft_steps p50/p95 {soak_tp['ttft_steps_p50']:.1f}/"
+                  f"{soak_tp['ttft_steps_p95']:.1f}  "
+                  f"overlap {soak_tp.get('dispatch_overlap_fraction', 0):.2f}"
+                  f"  drained={soak_tp['all_finished']}")
 
     kernels = bench_decode_kernels(slots=args.slots, cache_len=args.cache_len,
                                    page_size=args.page_size, iters=iters)
@@ -229,6 +266,8 @@ def main(argv=None):
     }
     if soak is not None:
         payload["soak"] = soak
+    if soak_tp is not None:
+        payload["soak_tp"] = soak_tp
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=1, default=str)
     print(f"wrote {args.out}")

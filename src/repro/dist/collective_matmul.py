@@ -14,8 +14,10 @@ import jax.numpy as jnp
 
 
 def allgather_matmul(x_local, w_full, axis_name: str):
-    """x_local (B, K/n) — the K-shard this device holds; w_full (K, N)
-    replicated.  Returns the full (B, N) product on every device."""
+    """x_local (..., K/n) — the K-shard this device holds; w_full (K, N)
+    rows replicated (its columns may themselves be a shard: only the K
+    extent must match ``n * K/n``).  Returns the full (..., N) product on
+    every device; leading batch dims ride along."""
     n = jax.lax.psum(1, axis_name)            # concrete under shard_map
     idx = jax.lax.axis_index(axis_name)
     Kl = x_local.shape[-1]
@@ -24,7 +26,7 @@ def allgather_matmul(x_local, w_full, axis_name: str):
     # statically unrolled ring: ppermute inside a fori_loop deadlocks the
     # multi-device CPU backend, and unrolling lets XLA overlap each step's
     # matmul with the next shard's transfer
-    acc = jnp.zeros((x_local.shape[0], w_full.shape[-1]), jnp.float32)
+    acc = jnp.zeros(x_local.shape[:-1] + (w_full.shape[-1],), jnp.float32)
     xs = x_local
     for t in range(n):
         src = (idx + t) % n                   # shard id currently held
@@ -36,9 +38,10 @@ def allgather_matmul(x_local, w_full, axis_name: str):
 
 
 def reduce_scatter_matmul(x_local, w_local, axis_name: str):
-    """x_local (B, K/n), w_local (K/n, N): per-device partial product,
-    reduce-scattered over N -> each device returns its (B, N/n) tile."""
+    """x_local (..., K/n), w_local (K/n, N): per-device partial product,
+    reduce-scattered over N -> each device returns its (..., N/n) tile."""
     partial = x_local.astype(jnp.float32) @ w_local.astype(jnp.float32)
-    out = jax.lax.psum_scatter(partial, axis_name, scatter_dimension=1,
+    out = jax.lax.psum_scatter(partial, axis_name,
+                               scatter_dimension=partial.ndim - 1,
                                tiled=True)
     return out.astype(x_local.dtype)

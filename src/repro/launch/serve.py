@@ -5,26 +5,32 @@ paper's decode workload): bucketed batched prefill (one compile per length
 bucket), pluggable cache backend (``--backend paged`` is the default:
 page-pool KV with block tables, see serve.kvcache).  ``--smoke`` uses the
 reduced config on the host and prints the engine metrics.
+
+``--tp N`` serves tensor-parallel over N devices (``repro.dist.tp``,
+DESIGN.md §8); on a CPU host the launcher simulates the mesh by setting
+``XLA_FLAGS=--xla_force_host_platform_device_count`` *before* JAX loads —
+which is why every heavyweight import lives inside ``main``.
 """
 import argparse
 import json
-
-import jax
-import numpy as np
-
-from repro.configs import get_config, reduced
-from repro.models import RuntimeConfig, build_model
-from repro.models import modules as M
-from repro.serve.kvcache import PagedBackend
-from repro.serve.scheduler import Request, ServingEngine
-from repro.serve.step import (make_prefill_step, make_serve_step,
-                              tuned_kernel_configs)
+import os
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel devices: shard heads/ffn/experts "
+                         "+ KV pools under shard_map (1 = single device)")
+    ap.add_argument("--tp-mode", choices=("exact", "overlap"),
+                    default="exact",
+                    help="exact: token-identical to tp=1; overlap: ring "
+                         "collective matmuls (communication hidden behind "
+                         "the GEMV, tolerance-equal)")
+    ap.add_argument("--sync-dispatch", action="store_true",
+                    help="disable the async submit/stream-out pipeline "
+                         "(decode consumed in the cycle it was submitted)")
     ap.add_argument("--backend", choices=("dense", "paged"), default="paged")
     ap.add_argument("--kernel-decode", action="store_true",
                     help="attend via the tuned Pallas paged kernel (no "
@@ -50,6 +56,10 @@ def main():
                     help="quantize matmul weights via repro.quant."
                          "quantize_params (MLP/attention projections; "
                          "embeddings/norms stay raw — DESIGN.md §5)")
+    ap.add_argument("--quantize-group-size", type=int, default=128,
+                    help="scale-group rows on the contraction axis (32-row "
+                         "granule multiple; under --tp each weight shard "
+                         "must hold whole groups — shrink for small archs)")
     ap.add_argument("--kv-cache-dtype", choices=("model", "int8"),
                     default="model",
                     help="int8: quantized KV (int8 page pools + scale "
@@ -66,6 +76,24 @@ def main():
                          "ui.perfetto.dev (a .jsonl suffix writes "
                          "JSON-lines instead)")
     args = ap.parse_args()
+
+    if args.tp > 1 and "--xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        # simulate the mesh on CPU: must land before jax is imported
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count={args.tp}")
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config, reduced
+    from repro.models import RuntimeConfig, build_model
+    from repro.models import modules as M
+    from repro.serve.kvcache import PagedBackend
+    from repro.serve.scheduler import Request, ServingEngine
+    from repro.serve.step import (make_prefill_step, make_serve_step,
+                                  tuned_kernel_configs)
 
     if args.kernel_decode and args.backend != "paged":
         raise SystemExit("--kernel-decode requires --backend paged "
@@ -90,8 +118,15 @@ def main():
     params = M.unbox(model.init(jax.random.PRNGKey(0)))
     if args.quantize_weights != "none":
         from repro.quant import quantize_params, quantized_stats
-        params = quantize_params(
-            params, bits=8 if args.quantize_weights == "int8" else 4)
+        try:
+            params = quantize_params(
+                params, bits=8 if args.quantize_weights == "int8" else 4,
+                group_size=args.quantize_group_size, tp=args.tp)
+        except AssertionError as e:
+            raise SystemExit(
+                f"{e}\n(pass a smaller --quantize-group-size — it must "
+                f"divide every projection's contraction extent"
+                + (" per tp shard" if args.tp > 1 else "") + ")")
         qs = quantized_stats(params)
         print(f"quantized {qs['quantized_leaves']} weight leaves: "
               f"{qs['quantized_bytes']:,} B (was "
@@ -125,7 +160,9 @@ def main():
                                    troop_configs=configs),
         params=params, prefill_extras=extras, backend=backend,
         chunked_prefill=args.chunked_prefill, chunk_size=args.chunk_size,
-        prefix_cache=args.prefix_cache, tracer=tracer)
+        prefix_cache=args.prefix_cache, tracer=tracer,
+        tp=args.tp, tp_mode=args.tp_mode,
+        async_dispatch=not args.sync_dispatch)
     rng = np.random.default_rng(0)
     system_prompt = rng.integers(1, min(cfg.vocab_size, 1000), 24) \
         if args.prefix_cache else None

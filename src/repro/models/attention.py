@@ -136,12 +136,46 @@ def _bf16_cache_einsum(spec, a, b):
     return jnp.einsum(spec, a.astype(b.dtype), b)
 
 
+def _tp_ctx():
+    from repro.dist import tp as _tp
+    return _tp.current()
+
+
+def _tp_merge_heads(out):
+    """Exact-TP merge: re-concatenate the per-device head shards (tiled
+    all_gather, bitwise) ahead of the replicated output projection.  A
+    no-op outside a TP context and in overlap mode (where ``wo`` is
+    row-parallel and consumes the local shard directly)."""
+    ctx = _tp_ctx()
+    if ctx is not None and ctx.mode == "exact":
+        from repro.dist import tp as _tp
+        return _tp.gather_cols(out)
+    return out
+
+
+def _tp_attend_kv(k, v, cfg):
+    """GQA fallback (``kv_shards == 1``): the cache holds every KV head on
+    every device — slice the one head this device's query block reads, so
+    ``attend``'s shape-derived grouping sees (KV=1, G=local heads)."""
+    ctx = _tp_ctx()
+    if ctx is not None and ctx.kv_replicated:
+        from repro.dist import tp as _tp
+        k = _tp.local_kv_head(k, cfg.num_heads, cfg.num_kv_heads)
+        v = _tp.local_kv_head(v, cfg.num_heads, cfg.num_kv_heads)
+    return k, v
+
+
 def _project_qkv(p, cfg, x, x_kv, positions, kv_positions, dtype):
     B, T = x.shape[:2]
-    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
-    q = M.apply_dense(p["wq"], x, dtype).reshape(B, T, H, hd)
-    k = M.apply_dense(p["wk"], x_kv, dtype).reshape(B, x_kv.shape[1], KV, hd)
-    v = M.apply_dense(p["wv"], x_kv, dtype).reshape(B, x_kv.shape[1], KV, hd)
+    hd = cfg.head_dim
+    # head counts come from the projection widths, not cfg: under TP the
+    # sharded wq/wk/wv emit this device's heads only (wk/wv stay full when
+    # the plan replicates KV — fewer KV heads than devices)
+    q = M.apply_dense(p["wq"], x, dtype, tp="col").reshape(B, T, -1, hd)
+    k = M.apply_dense(p["wk"], x_kv, dtype,
+                      tp="col").reshape(B, x_kv.shape[1], -1, hd)
+    v = M.apply_dense(p["wv"], x_kv, dtype,
+                      tp="col").reshape(B, x_kv.shape[1], -1, hd)
     if cfg.qk_norm:
         q = M.apply_norm(p["q_norm"], q, "rmsnorm", cfg.norm_eps)
         k = M.apply_norm(p["k_norm"], k, "rmsnorm", cfg.norm_eps)
@@ -155,9 +189,11 @@ def apply_attention(p, cfg, x, *, positions, dtype, causal=True,
                     return_kv=False):
     """Full-sequence (train / prefill) self-attention."""
     q, k, v = _project_qkv(p, cfg, x, x, positions, positions, dtype)
-    out = attend(q, k, v, causal=causal)
+    ka, va = _tp_attend_kv(k, v, cfg)
+    out = attend(q, ka, va, causal=causal)
     B, T = x.shape[:2]
-    out = M.apply_dense(p["wo"], out.reshape(B, T, -1), dtype)
+    out = _tp_merge_heads(out.reshape(B, T, -1))
+    out = M.apply_dense(p["wo"], out, dtype, tp="row")
     # §Perf B3: reduce the TP partial sum HERE, in bf16 — otherwise XLA
     # defers the all-reduce past the next norm's fp32 upcast (2x bytes).
     # §Perf B4: name the post-psum tensor so the remat policy can SAVE it —
@@ -319,8 +355,10 @@ def apply_attention_decode_paged(p, cfg, x, cache: PagedKVCache, pos,
                 pos + 1)[:, None]
     else:
         k, v = gather_paged_kv(new_cache, block_tables, dtype)
+        k, v = _tp_attend_kv(k, v, cfg)
         out = attend(q, k, v, causal=False, length=pos + 1, decode=True)
-    out = M.apply_dense(p["wo"], out.reshape(B, 1, -1), dtype)
+    out = _tp_merge_heads(out.reshape(B, 1, -1))
+    out = M.apply_dense(p["wo"], out, dtype, tp="row")
     return out, new_cache
 
 
@@ -393,10 +431,12 @@ def apply_attention_chunk_paged(p, cfg, x, cache: PagedKVCache, offset,
                    & (spos < length[:, None]))[:, :, None, None]
             k = jnp.where(use, new_stage.k[:, :S].astype(k.dtype), k)
             v = jnp.where(use, new_stage.v[:, :S].astype(v.dtype), v)
+        k, v = _tp_attend_kv(k, v, cfg)
         out = attend(q, k, v, causal=True,
                      q_offset=offset[:, None, None, None, None],
                      length=length)
-    out = M.apply_dense(p["wo"], out.reshape(B, C, -1), dtype)
+    out = _tp_merge_heads(out.reshape(B, C, -1))
+    out = M.apply_dense(p["wo"], out, dtype, tp="row")
     if stage is not None and new_stage is None:   # kernel path keeps stage
         new_stage = stage
     return out, new_cache, new_stage
@@ -426,8 +466,10 @@ def apply_attention_decode(p, cfg, x, cache, pos, dtype, block_tables=None,
         k = PT.constrain(update_cache(cache.k, k_new, pos), cs)
         v = PT.constrain(update_cache(cache.v, v_new, pos), cs)
         new_cache = KVCache(k, v)
+    k, v = _tp_attend_kv(k, v, cfg)
     out = attend(q, k, v, causal=False, length=pos + 1, decode=True)
-    out = M.apply_dense(p["wo"], out.reshape(B, 1, -1), dtype)
+    out = _tp_merge_heads(out.reshape(B, 1, -1))
+    out = M.apply_dense(p["wo"], out, dtype, tp="row")
     return out, new_cache
 
 

@@ -71,7 +71,15 @@ def dense_init(key, in_dim: int, out_dim: int, axes, *, bias: bool = False,
     return p
 
 
-def apply_dense(p, x, dtype=None):
+def apply_dense(p, x, dtype=None, tp=None):
+    """``tp``: the projection's tensor-parallel role when serving under a
+    TP mesh — ``"col"`` (output columns sharded: qkv/up/gate) or ``"row"``
+    (contraction rows sharded: o/down projections).  Outside a TP context
+    the flag is inert.  In *exact* TP mode the flag is also inert here:
+    column shards are plain local matmuls on the pre-sharded weight and
+    row projections see the re-gathered full activation.  In *overlap*
+    mode the projection routes through ``repro.dist.collective_matmul``'s
+    ring collectives so the gather/scatter hides behind the GEMV."""
     w = p["w"]
     if isinstance(w, QuantizedTensor):
         # repro.quant weights (DESIGN.md §5): grouped dequant on the fly —
@@ -82,6 +90,25 @@ def apply_dense(p, x, dtype=None):
         w = w.astype(dtype)
     if dtype is not None:
         x = x.astype(dtype)
+    if tp is not None:
+        from repro.dist import tp as _tp
+        ctx = _tp.current()
+        if ctx is not None and ctx.mode == "overlap":
+            from repro.dist.collective_matmul import (allgather_matmul,
+                                                      reduce_scatter_matmul)
+            if tp == "col":
+                # slice our K-chunk of the replicated activation and walk
+                # the ring against the full-K local-column weight
+                Kl = x.shape[-1] // ctx.size
+                xs = jax.lax.dynamic_slice_in_dim(
+                    x, _tp.axis_index() * Kl, Kl, axis=x.ndim - 1)
+                y = allgather_matmul(xs, w, ctx.axis)
+            else:                                 # "row"
+                y = reduce_scatter_matmul(x, w, ctx.axis)
+                y = _tp.gather_cols(y)            # re-replicate the tiles
+            if "b" in p:
+                y = y + p["b"].astype(y.dtype)
+            return y
     y = x @ w
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
@@ -158,14 +185,20 @@ def mlp_init(key, d: int, d_ff: int, act: str, *, ff_axis: str = "ffn",
 
 def apply_mlp(p, x, act: str, dtype):
     from repro.core.partitioning import constrain
+    from repro.dist import tp as _tp
     ffn_axes = ("batch",) + (None,) * (x.ndim - 2) + ("ffn",)
     if "wi_gate" in p:
-        h = jax.nn.silu(apply_dense(p["wi_gate"], x, dtype)) * \
-            apply_dense(p["wi_up"], x, dtype)
+        h = jax.nn.silu(apply_dense(p["wi_gate"], x, dtype, tp="col")) * \
+            apply_dense(p["wi_up"], x, dtype, tp="col")
     else:
-        h = activation(act)(apply_dense(p["wi_up"], x, dtype))
+        h = activation(act)(apply_dense(p["wi_up"], x, dtype, tp="col"))
     h = constrain(h, ffn_axes)
-    out = apply_dense(p["wo"], h, dtype)
+    ctx = _tp.current()
+    if ctx is not None and ctx.mode == "exact":
+        # exact TP: the silu-gate was elementwise on our ffn columns;
+        # re-concatenate the shards (bitwise) for the replicated down-proj
+        h = _tp.gather_cols(h)
+    out = apply_dense(p["wo"], h, dtype, tp="row")
     # §Perf B3/B4: pin the TP reduction in bf16 + name it for the remat
     # policy (see attention.py)
     out = constrain(out, ("batch",) + (None,) * (x.ndim - 1))

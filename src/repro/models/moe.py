@@ -149,6 +149,17 @@ def apply_moe(p, cfg, x, *, dtype, num_groups: int = 1):
 
     # expert compute (E sharded over "model" => all-to-all here)
     xe = PT.constrain(xe, ("batch", "expert", None, None))
+    from repro.dist import tp as _tp
+    ctx = _tp.current()
+    if ctx is not None:
+        # serving TP (expert-parallel): the expert stacks arrive dim-0
+        # sharded under shard_map, so slice our contiguous expert block of
+        # the replicated dispatch buffer, run the local einsums, and
+        # re-concatenate partials in device (= expert-major) order below —
+        # the downstream gate/combine then matches tp=1 bitwise
+        El = p["wi_up"]["w"].shape[0]
+        xe = jax.lax.dynamic_slice_in_dim(
+            xe, _tp.axis_index() * El, El, axis=1)
     up = jnp.einsum("gecd,edf->gecf", xe, p["wi_up"]["w"].astype(dtype))
     if "wi_gate" in p:
         gate = jnp.einsum("gecd,edf->gecf", xe, p["wi_gate"]["w"].astype(dtype))
@@ -157,6 +168,8 @@ def apply_moe(p, cfg, x, *, dtype, num_groups: int = 1):
         h = M.activation(cfg.act)(up)
     h = PT.constrain(h, ("batch", "expert", None, "expert_ff"))
     ye = jnp.einsum("gecf,efd->gecd", h, p["wo"]["w"].astype(dtype))
+    if ctx is not None:
+        ye = jax.lax.all_gather(ye, ctx.axis, axis=1, tiled=True)
     ye = PT.constrain(ye, ("batch", "expert", None, None))
     ye = ye * gates[..., None].astype(dtype)
 

@@ -98,7 +98,9 @@ class ReplayReport:
             out["pages_in_use_max"] = int(max(tl["pages_in_use"]))
         for k in ("deferrals", "tokens_generated", "tokens_per_s",
                   "prefill_traces", "prefix_hit_rate", "prefix_evictions",
-                  "cow_copies"):
+                  "cow_copies", "dispatch_overlap_fraction",
+                  "kv_bytes_streamed", "kv_bytes_streamed_per_device",
+                  "tp", "kv_shards"):
             if k in m:
                 out[k] = m[k]
         return out

@@ -76,7 +76,7 @@ def _moe_expert_prefixes(paths) -> set:
 
 def quantize_params(params, *, bits: int = 8, group_size: int = 128,
                     policy: Optional[Callable] = None,
-                    scale_dtype=jnp.float32):
+                    scale_dtype=jnp.float32, tp: int = 1):
     """Quantize the matmul weights of an (unboxed) params pytree.
 
     Returns the same tree with policy-selected ``w`` leaves replaced by
@@ -85,11 +85,22 @@ def quantize_params(params, *, bits: int = 8, group_size: int = 128,
     ``repro.quant.kernels``).  ``bits``: 8 or 4 (int4 packs two values per
     byte).  ``group_size`` groups the contraction axis and must be a
     multiple of the int8 layout granule (mechanism-D alignment).
+
+    ``tp``: tensor-parallel degree the tree will serve under.  Row-parallel
+    projections (``wo`` under overlap collectives) shard the contraction
+    axis, so each shard must hold a whole number of scale groups — a group
+    straddling the shard boundary would mix rows from two devices.  The
+    alignment is checked here, at quantize time, per the sharding contract
+    in ``repro.dist.tp``.
     """
     assert bits in (8, 4)
     assert group_size % granule() == 0, \
         f"group_size {group_size} not a multiple of the {granule()}-row " \
         f"int8 layout granule (mechanism D — see DESIGN.md §5)"
+    if tp > 1:
+        assert bits == 8, \
+            "int4 packs row pairs that would straddle the tensor-parallel " \
+            "shard boundary; use bits=8 under tp > 1"
     pol = policy or default_policy
     leaves, _ = jax.tree_util.tree_flatten_with_path(params)
     moe = _moe_expert_prefixes([_path_keys(p) for p, _ in leaves])
@@ -100,6 +111,15 @@ def quantize_params(params, *, bits: int = 8, group_size: int = 128,
             return leaf                          # stacked MoE expert weights
         if not pol(keys, leaf):
             return leaf
+        if tp > 1 and keys[-2] == "wo":
+            # row-parallel candidate: contraction axis K is sharded over tp
+            # under overlap collectives — scale groups must tile each shard
+            K = leaf.shape[-2]
+            assert K % tp == 0 and (K // tp) % group_size == 0, \
+                f"'{'/'.join(keys)}' contraction extent {K} does not hold " \
+                f"a whole number of {group_size}-row scale groups per " \
+                f"tp={tp} shard (groups must not straddle the shard " \
+                f"boundary)"
         # int4 packs pairs along the contraction axis: odd extents stay int8
         b = bits if (bits == 8 or leaf.shape[-2] % 2 == 0) else 8
         return quantize(leaf, bits=b, group_size=group_size, axis=-2,

@@ -433,6 +433,21 @@ def copy_page(caches, src, dst):
     return jax.tree.map(one, caches, is_leaf=_is_paged)
 
 
+def kv_row_bytes(cfg, kv_dtype: str) -> int:
+    """Bytes one token-row of KV occupies across all attention layers —
+    the unit of the serve layer's streamed-bytes model (decode reads every
+    cached row once per step).  ``int8`` rows carry the per-(token, head)
+    bf16 absmax scales alongside (quantize_kv layout)."""
+    n_attn = sum(1 for (m, _) in cfg.layer_kinds() if m == "attn")
+    if kv_dtype == "int8":
+        per_layer = cfg.num_kv_heads * cfg.head_dim * 1 * 2   # K + V bytes
+        per_layer += cfg.num_kv_heads * 2 * 2                 # bf16 scales
+    else:
+        itemsize = jnp.dtype(kv_dtype).itemsize
+        per_layer = cfg.num_kv_heads * cfg.head_dim * itemsize * 2
+    return n_attn * per_layer
+
+
 # --------------------------------------------------------------------------
 # Backends
 # --------------------------------------------------------------------------
@@ -545,6 +560,12 @@ class PagedBackend:
         self._pending_cow: Dict[int, Any] = {}
         self._shared_tokens = 0
         self.cow_copies = 0
+        # tensor-parallel layout, set by the engine: kv_shards > 1 means
+        # the pools are head-sharded and each device holds 1/kv_shards of
+        # every page; kv_shards == 1 under tp > 1 means replicated pools
+        # (the GQA fallback when kv_heads < tp)
+        self.tp = 1
+        self.kv_shards = 1
 
     def _resolve_kv_dtype(self, model) -> str:
         if self.kv_dtype is not None:
@@ -570,6 +591,7 @@ class PagedBackend:
                                             self.allocator)
         self._axes = slot_axes(model, slots, cache_len, page_spec=self.spec,
                                chunk_stage=self.chunk_stage)
+        self._row_bytes = kv_row_bytes(model.cfg, dtype)
         return model.init_caches(slots, cache_len, page_spec=self.spec,
                                  chunk_stage=self.chunk_stage)
 
@@ -749,8 +771,24 @@ class PagedBackend:
         if sp is None:
             return {"kv_pages_logical": 0, "kv_pages_resident": 0}
         live = self.block_tables[self.block_tables != NULL_PAGE]
+        page_bytes = sp.page_size * self._row_bytes
+        logical_b = int(live.size) * page_bytes
+        resident_b = int(np.unique(live).size) * page_bytes
+        # per-device resident bytes: a head-sharded pool splits every page
+        # 1/kv_shards per device — the headline stays the single-copy
+        # footprint, never tp × it; a replicated pool (GQA fallback) really
+        # does hold a full copy per device.
+        shards = self.kv_shards if self.kv_shards > 1 else 1
+        if shards > 1:
+            per_device = [resident_b // shards] * shards
+        else:
+            per_device = [resident_b] * max(self.tp, 1)
         return {"kv_pages_logical": int(live.size),
-                "kv_pages_resident": int(np.unique(live).size)}
+                "kv_pages_resident": int(np.unique(live).size),
+                "kv_page_bytes_logical": logical_b,
+                "kv_page_bytes_resident": resident_b,
+                "kv_page_bytes_per_device": per_device,
+                "kv_shards": shards}
 
     def stats(self) -> Dict[str, Any]:
         sp = self.spec

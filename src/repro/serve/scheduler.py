@@ -40,7 +40,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serve.kvcache import (CacheBackend, PagedBackend, bucket_length,
-                                 copy_page, make_backend, splice_row)
+                                 copy_page, kv_row_bytes, make_backend,
+                                 splice_row)
 
 
 @dataclasses.dataclass
@@ -113,13 +114,26 @@ class ServingEngine:
                  prefill_batch: Optional[int] = None, min_bucket: int = 8,
                  chunked_prefill: bool = False, chunk_size: int = 32,
                  chunks_per_step: int = 1, prefix_cache: bool = False,
-                 chunk_step=None, tracer=None, metrics_window: int = 4096):
+                 chunk_step=None, tracer=None, metrics_window: int = 4096,
+                 tp: int = 1, tp_mode: str = "exact",
+                 async_dispatch: bool = True):
         """``prefill_extras(req) -> dict``: extra prefill batch entries
         (modality frontend stubs for enc-dec / VLM archs).  ``tracer``: a
         ``repro.obs.Tracer`` fed with per-request lifecycle spans and
         allocator events (None: zero overhead).  ``metrics_window`` bounds
         the per-request latency samples ``metrics()`` aggregates so a
-        long-lived engine never grows without bound."""
+        long-lived engine never grows without bound.
+
+        ``tp > 1`` runs every jitted step under ``shard_map`` over a 1-D
+        tensor-parallel mesh (``repro.dist.tp``): attention heads / ffn
+        dims / MoE experts shard across devices and the KV page pools
+        shard on the head axis, while block tables, the prefix index and
+        the allocator stay host-side and replicated.  ``tp_mode``:
+        ``"exact"`` (token-identical to tp=1) or ``"overlap"`` (ring
+        collectives from ``repro.dist.collective_matmul``; tolerance-equal).
+        ``async_dispatch`` (default): the decode step submitted in cycle N
+        is consumed at the start of cycle N+1, so host-side scheduling work
+        overlaps the in-flight device step (one-step-deep pipeline)."""
         self.model = model
         self.tracer = tracer
         self.slots = slots
@@ -168,14 +182,33 @@ class ServingEngine:
                              "prefix hit resumes prefill mid-prompt, which "
                              "only the chunk walk supports)")
 
+        # --------------------------------------------------- tensor parallel
+        self.tp = tp
+        self.tp_mode = tp_mode
+        self._async = bool(async_dispatch)
+        self._tpx = None
+        self._kv_shards = 1
+        if tp > 1:
+            from repro.dist.tp import TPExecutor
+            self._tpx = TPExecutor(model, tp, mode=tp_mode)
+            self._kv_shards = self._tpx.plan.kv_shards
+            self.params = self._tpx.shard_params(model, params)
+
         self._prefill_traces = 0
 
         def counted_prefill(params, batch):
             self._prefill_traces += 1      # runs at trace time only
             return prefill_step(params, batch)
 
-        self.prefill_step = jax.jit(counted_prefill)
-        self.serve_step = jax.jit(serve_step, donate_argnums=(2,))
+        if self._tpx is not None:
+            # probe = the uncounted twin: jit_step's one eval_shape must not
+            # inflate the compile counter
+            self.prefill_step = self._tpx.jit_step(counted_prefill,
+                                                   probe=prefill_step)
+            self.serve_step = self._tpx.jit_step(serve_step, donate=2)
+        else:
+            self.prefill_step = jax.jit(counted_prefill)
+            self.serve_step = jax.jit(serve_step, donate_argnums=(2,))
         if self.chunked:
             if chunk_step is None:
                 from repro.serve.step import make_chunk_step
@@ -185,9 +218,29 @@ class ServingEngine:
                 self._prefill_traces += 1  # runs at trace time only
                 return chunk_step(params, batch, caches)
 
-            self.chunk_step = jax.jit(counted_chunk, donate_argnums=(2,))
+            if self._tpx is not None:
+                self.chunk_step = self._tpx.jit_step(counted_chunk,
+                                                     probe=chunk_step,
+                                                     donate=2)
+            else:
+                self.chunk_step = jax.jit(counted_chunk, donate_argnums=(2,))
             self._copy_page = jax.jit(copy_page, donate_argnums=(0,))
         self.caches = self.backend.init_caches(model, slots, cache_len)
+        if self._tpx is not None:
+            self.caches = self._tpx.shard_caches(self.caches)
+            self.backend.tp = tp
+            self.backend.kv_shards = self._kv_shards
+        # streamed-bytes model (DESIGN.md §8): decode reads every cached
+        # row of every decoding slot once per step; a head-sharded pool
+        # streams 1/kv_shards of each row per device
+        rt = getattr(model, "rt", None)
+        if isinstance(self.backend, PagedBackend):
+            kd = self.backend._resolve_kv_dtype(model)
+        elif rt is not None and getattr(rt, "kv_cache_dtype", "") == "int8":
+            kd = "int8"
+        else:
+            kd = jnp.dtype(model.cfg.dtype).name
+        self._kv_row_bytes = kv_row_bytes(model.cfg, kd)
         self.active: Dict[int, Optional[Request]] = {
             i: None for i in range(slots)}
         self.pos = np.zeros((slots,), np.int32)
@@ -220,6 +273,13 @@ class ServingEngine:
         self.chunk_tokens = 0                        # valid slab rows
         self.prefill_tokens = 0                      # admitted prompt tokens
         self.shared_tokens = 0                       # served from the prefix
+        # async dispatch: the parked decode step (futures + slot snapshot +
+        # submit timestamps) and its overlap accounting
+        self._inflight = None
+        self.kv_bytes_streamed = 0                   # modeled, all devices
+        self.kv_bytes_streamed_per_device = 0        # modeled, one device
+        self.host_overlap_s = 0.0      # host work while a step is in flight
+        self.stream_wait_s = 0.0       # blocked in stream-out (np.asarray)
         # bounded latency samples: a soak appends one entry per finished
         # request; the deque keeps the trailing window only
         self._ttfts: deque = deque(maxlen=metrics_window)
@@ -356,7 +416,7 @@ class ServingEngine:
         return finished
 
     # ------------------------------------------------- chunked admission
-    def _admit_chunked(self):
+    def _admit_chunked(self, count_defer: bool = True):
         """Assign slots + pages to queued requests, strictly FIFO: a
         request the pool cannot hold right now *blocks* admission (no
         overtaking — the starvation guard) until releases free pages."""
@@ -371,7 +431,7 @@ class ServingEngine:
                 offset = self.backend.reserve_with_prefix(
                     slot, need, req.prompt)
                 if offset is None:
-                    self._defer(req, need)
+                    self._defer(req, need, count=count_defer)
                     return                 # pool exhausted: defer (FIFO)
                 cow = self.backend.take_cow(slot)
                 if cow is not None:
@@ -381,7 +441,7 @@ class ServingEngine:
                     self.backend.cow_done(slot)
             else:
                 if not self.backend.reserve(slot, need):
-                    self._defer(req, need)
+                    self._defer(req, need, count=count_defer)
                     return
                 offset = 0
             self.queue.popleft()
@@ -403,8 +463,13 @@ class ServingEngine:
                                     prefix_offset=offset,
                                     wait_steps=self.steps - req.submit_step)
 
-    def _defer(self, req: Request, need: int):
-        """Head-of-queue request cannot reserve pages this cycle."""
+    def _defer(self, req: Request, need: int, count: bool = True):
+        """Head-of-queue request cannot reserve pages this cycle.  The
+        async early-admission pass passes ``count=False``: it retries after
+        the in-flight decode is consumed, and only the retry counts — so
+        deferral totals match the synchronous engine."""
+        if not count:
+            return
         self.deferrals += 1
         if self.tracer is not None:
             self.tracer.instant("defer", "queue", rid=req.rid,
@@ -508,33 +573,11 @@ class ServingEngine:
             mask[s] = 1
         return jnp.asarray(bt * mask)
 
-    def step(self) -> Optional[List[Request]]:
-        """One engine cycle: admit, (chunked: run prefill slabs,) then
-        decode every generating slot.
-
-        Returns the requests that finished this cycle, or ``None`` when the
-        engine is idle (nothing active after admission).
-        """
-        finished: List[Request] = []
-        if self.chunked:
-            self._admit_chunked()
-            for _ in range(self.chunks_per_step):
-                if not self._prefilling:
-                    break
-                finished.extend(self._chunk_one())
-            # a finish above may unblock a deferred reservation: admit
-            # again so freed pages go back to work within the same cycle
-            if finished:
-                self._admit_chunked()
-            decode_now = bool(self._decoding)
-        else:
-            finished.extend(self._admit())
-            decode_now = bool(self._decoding)
-        if not decode_now:
-            if (self.chunked and self._prefilling) or finished:
-                self.steps += 1
-                return finished
-            return None
+    def _submit_decode(self):
+        """Enqueue one decode step over the decoding slots and return
+        without blocking (JAX async dispatch): the device futures, the
+        decoding-slot snapshot and the submit timestamps park in
+        ``_inflight`` until ``_consume`` streams the tokens out."""
         batch = {"tokens": jnp.asarray(self.last_tok[:, None]),
                  "pos": jnp.asarray(self.pos),
                  "sample_nonce": jnp.asarray(self._nonce)}
@@ -545,17 +588,49 @@ class ServingEngine:
         t0 = time.perf_counter()
         next_tok, self.caches = self.serve_step(
             self.params, batch, self.caches)
-        toks = np.asarray(next_tok)[:, 0]
-        self.decode_s += time.perf_counter() - t0
+        t_sub = time.perf_counter()
+        # streamed-bytes model: this step reads every cached row of every
+        # decoding slot once; a head-sharded pool streams 1/kv_shards of
+        # each row per device
+        rows = int(sum(int(self.pos[s]) + 1 for s in self._decoding))
+        self.kv_bytes_streamed += rows * self._kv_row_bytes
+        self.kv_bytes_streamed_per_device += rows * (
+            self._kv_row_bytes // max(self._kv_shards, 1))
+        if self.tracer is not None:
+            self.tracer.span("device_submit", "engine", self.tracer.rel(t0),
+                             self.tracer.rel(t_sub),
+                             batch=len(self._decoding))
+        self._inflight = (next_tok, tuple(sorted(self._decoding)), t0, t_sub)
+
+    def _consume(self) -> List[Request]:
+        """Block on the in-flight decode step's tokens (the engine's only
+        ``block_until_ready`` point) and apply them to the slots that were
+        decoding at submit time."""
+        if self._inflight is None:
+            return []
+        next_tok, slots, t0, t_sub = self._inflight
+        self._inflight = None
+        t_wait = time.perf_counter()
+        toks = np.asarray(next_tok)[:, 0]          # stream-out: blocks
+        t_done = time.perf_counter()
+        # host work done between submit and here overlapped the device
+        # step — but only the async pipeline actually interleaves any;
+        # the sync path consumes immediately and must report ~0 overlap
+        if self._async:
+            self.host_overlap_s += max(0.0, t_wait - t_sub)
+        self.stream_wait_s += t_done - t_wait
+        # decode_s counts host time attributable to decode (submit + wait,
+        # not the overlapped window) so prefill_s + decode_s ~= wall time
+        self.decode_s += (t_sub - t0) + (t_done - t_wait)
         self.decode_steps += 1
         if self.tracer is not None:
+            self.tracer.span("stream_out", "engine", self.tracer.rel(t_wait),
+                             self.tracer.rel(t_done), batch=len(slots))
             self.tracer.span("decode", "engine", self.tracer.rel(t0),
-                             self.tracer.now(), batch=len(self._decoding))
-        for slot, req in self.active.items():
-            if req is None:
-                continue
-            if self.chunked and slot not in self._decoding:
-                continue                       # mid-prefill: no token yet
+                             self.tracer.rel(t_done), batch=len(slots))
+        finished: List[Request] = []
+        for slot in slots:
+            req = self.active[slot]
             tok = int(toks[slot])
             req.out.append(tok)
             self.tokens_generated += 1
@@ -564,6 +639,50 @@ class ServingEngine:
             if len(req.out) >= req.max_new_tokens or tok == self.stop_token \
                     or self.pos[slot] >= self.cache_len - 1:
                 finished.append(self._finish(slot, req))
+        return finished
+
+    def step(self) -> Optional[List[Request]]:
+        """One engine cycle: admit, (chunked: run prefill slabs,) then
+        decode every generating slot.
+
+        With ``async_dispatch`` (the default) the decode step submitted in
+        cycle N is consumed at the START of cycle N+1, so the host's
+        admission / prefix-index / allocator work overlaps the in-flight
+        device step.  Token streams are identical to the synchronous
+        engine; a request's finish surfaces one cycle later.
+
+        Returns the requests that finished this cycle, or ``None`` when the
+        engine is idle (nothing active after admission).
+        """
+        finished: List[Request] = []
+        if self.chunked:
+            if self._inflight is not None:
+                # overlap host-side admission with the in-flight decode; a
+                # deferral here is retried (and counted) after consume
+                self._admit_chunked(count_defer=False)
+            finished.extend(self._consume())
+            self._admit_chunked()
+            chunk_finished: List[Request] = []
+            for _ in range(self.chunks_per_step):
+                if not self._prefilling:
+                    break
+                chunk_finished.extend(self._chunk_one())
+            # a finish above may unblock a deferred reservation: admit
+            # again so freed pages go back to work within the same cycle
+            if chunk_finished:
+                self._admit_chunked()
+            finished.extend(chunk_finished)
+        else:
+            finished.extend(self._consume())
+            finished.extend(self._admit())
+        if not self._decoding:
+            if (self.chunked and self._prefilling) or finished:
+                self.steps += 1
+                return finished
+            return None
+        self._submit_decode()
+        if not self._async:
+            finished.extend(self._consume())
         self.steps += 1
         return finished
 
@@ -606,6 +725,17 @@ class ServingEngine:
                              / (self.decode_s + self.prefill_s)
                              if self.decode_s + self.prefill_s else 0.0),
             "deferrals": self.deferrals,
+            "tp": self.tp,
+            "kv_shards": self._kv_shards,
+            "async_dispatch": self._async,
+            "kv_bytes_streamed": self.kv_bytes_streamed,
+            "kv_bytes_streamed_per_device": self.kv_bytes_streamed_per_device,
+            "host_overlap_s": self.host_overlap_s,
+            "stream_wait_s": self.stream_wait_s,
+            "dispatch_overlap_fraction": (
+                self.host_overlap_s
+                / (self.host_overlap_s + self.stream_wait_s)
+                if self.host_overlap_s + self.stream_wait_s > 0 else 0.0),
             "ttft_s_mean": (float(np.mean(self._ttfts))
                             if self._ttfts else 0.0),
             "ttft_s_p50": (float(np.percentile(self._ttfts, 50))
@@ -650,5 +780,9 @@ class ServingEngine:
         self.chunk_tokens = 0
         self.prefill_tokens = 0
         self.shared_tokens = 0
+        self.kv_bytes_streamed = 0
+        self.kv_bytes_streamed_per_device = 0
+        self.host_overlap_s = 0.0
+        self.stream_wait_s = 0.0
         self._ttfts.clear()
         self._decode_rates.clear()

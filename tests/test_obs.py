@@ -188,8 +188,11 @@ def test_replay_step_metrics_deterministic():
         eng = make_engine(model, params)
         rep = obs.Replayer(eng, prefix_len=16).run(trace, vocab_size=128)
         row = rep.row()
+        # wall-clock-derived values (seconds, overlap fraction) vary run
+        # to run; everything else must be bit-identical
         rows.append({k: v for k, v in row.items()
-                     if not k.endswith("_s") and "_s_" not in k})
+                     if not k.endswith("_s") and "_s_" not in k
+                     and k != "dispatch_overlap_fraction"})
     assert rows[0] == rows[1]
     assert rows[0]["all_finished"]
 
