@@ -1,0 +1,139 @@
+"""Nightly SLO trend: append one row per run to ``BENCH_trend.jsonl``.
+
+The nightly bench uploads per-run BENCH artifacts, but a slow drift in
+serving latency or modeled efficiency is invisible in any single run.
+This script distills a fresh ``BENCH_load.json`` / ``BENCH_serve.json``
+into one JSON-lines row — date, commit, TTFT / TPOT p95 (step clock,
+deterministic; wall p95 as info) and modeled tokens/s/W for bf16 and int8
+— appends it to a carried-forward ``BENCH_trend.jsonl`` (the nightly
+workflow restores the previous run's artifact first, so the file grows
+across runs), and renders a last-7-runs delta table to stdout and to
+``$GITHUB_STEP_SUMMARY`` when set.
+
+    python benchmarks/bench_trend.py                 # after the benches
+    python benchmarks/bench_trend.py --trend my.jsonl --no-append
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import os
+import sys
+
+METRICS = ("ttft_steps_p95", "tpot_steps_p95", "ttft_s_p95",
+           "tokens_per_s", "tok_s_w_bf16", "tok_s_w_int8",
+           "soak_ttft_steps_p95", "soak_tpot_steps_p95")
+
+
+def build_row(load_path, serve_path):
+    """One trend row from the fresh BENCH files (missing files/fields
+    leave nulls — the trend line must survive a partial nightly)."""
+    row = {"date": datetime.datetime.now(datetime.timezone.utc)
+           .strftime("%Y-%m-%dT%H:%M:%SZ"),
+           "commit": os.environ.get("GITHUB_SHA", "")[:12]}
+    for m in METRICS:
+        row[m] = None
+    if os.path.exists(load_path):
+        load = json.load(open(load_path))
+        cp = next((r for r in load.get("rows", [])
+                   if r.get("mode") == "chunked+prefix"), None)
+        if cp:
+            for m in ("ttft_steps_p95", "tpot_steps_p95", "ttft_s_p95",
+                      "tokens_per_s"):
+                if m in cp:
+                    row[m] = cp[m]
+        for e in load.get("energy", []):
+            key = {"bfloat16": "tok_s_w_bf16",
+                   "int8": "tok_s_w_int8"}.get(e.get("kv_dtype"))
+            if key and "tokens_per_s_per_w" in e:
+                row[key] = e["tokens_per_s_per_w"]
+    if os.path.exists(serve_path):
+        serve = json.load(open(serve_path))
+        soak = serve.get("soak")
+        if soak:
+            row["soak_ttft_steps_p95"] = soak.get("ttft_steps_p95")
+            row["soak_tpot_steps_p95"] = soak.get("tpot_steps_p95")
+    return row
+
+
+def _fmt(v):
+    if v is None:
+        return "—"
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def _delta(prev, cur):
+    if not isinstance(prev, (int, float)) or not isinstance(
+            cur, (int, float)) or not prev:
+        return ""
+    return f" ({(cur - prev) / abs(prev) * 100:+.1f}%)"
+
+
+def markdown(rows, window=7):
+    tail = rows[-window:]
+    keys = ["date", "commit"] + [m for m in METRICS
+                                 if any(r.get(m) is not None for r in tail)]
+    out = [f"## SLO trend (last {len(tail)} runs)", "",
+           "| " + " | ".join(keys) + " |",
+           "|" + "---|" * len(keys)]
+    prev = None
+    for r in tail:
+        cells = []
+        for k in keys:
+            cell = _fmt(r.get(k))
+            if prev is not None and k not in ("date", "commit"):
+                cell += _delta(prev.get(k), r.get(k))
+            cells.append(cell)
+        out.append("| " + " | ".join(cells) + " |")
+        prev = r
+    out.append("")
+    return "\n".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--load", default="BENCH_load.json")
+    ap.add_argument("--serve", default="BENCH_serve.json")
+    ap.add_argument("--trend", default="BENCH_trend.jsonl")
+    ap.add_argument("--window", type=int, default=7)
+    ap.add_argument("--no-append", action="store_true",
+                    help="render the existing trend file without adding "
+                         "a new row")
+    args = ap.parse_args(argv)
+
+    rows = []
+    if os.path.exists(args.trend):
+        with open(args.trend) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rows.append(json.loads(line))
+                except json.JSONDecodeError:
+                    print(f"skip malformed trend line: {line[:60]}",
+                          file=sys.stderr)
+    if not args.no_append:
+        row = build_row(args.load, args.serve)
+        rows.append(row)
+        with open(args.trend, "a") as f:
+            f.write(json.dumps(row) + "\n")
+        print(f"appended run {row['date']} ({row['commit'] or 'no sha'}) "
+              f"-> {args.trend} ({len(rows)} rows)")
+    if not rows:
+        print("no trend rows yet")
+        return 0
+    md = markdown(rows, window=args.window)
+    print(md)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(md + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -61,6 +61,14 @@ GATES = [
      "exact", 0),
     ("BENCH_serve.json", "decode_kernels[*].roofline_us", "rel_band", 0.05),
     ("BENCH_serve.json", "decode_kernels[*].measured_us", "info", 0),
+    # profiled engine row: per-phase dispatch counts + modeled bytes are
+    # deterministic replays of the dispatch programs — exact; the
+    # wall-derived roofline fractions track CI hardware and stay info.
+    ("BENCH_serve.json", "engines[*].profile[*].occurrences", "exact", 0),
+    ("BENCH_serve.json", "engines[*].profile[*].dispatches", "exact", 0),
+    ("BENCH_serve.json", "engines[*].profile[*].modeled_bytes", "exact", 0),
+    ("BENCH_serve.json", "engines[*].profile[*].fraction_of_roofline",
+     "info", 0),
     # --- tune: the analytic model is deterministic ----------------------
     ("BENCH_tune.json", "kernels[*].predicted_fraction", "rel_band", 0.05),
     ("BENCH_tune.json", "kernels[*].fraction_of_roofline", "info", 0),
@@ -96,6 +104,18 @@ GATES = [
     ("BENCH_load.json", "energy[*].joules_per_token", "rel_band", 0.01),
     ("BENCH_load.json", "energy[*].tokens_per_s_per_w", "rel_band", 0.01),
     ("BENCH_load.json", "energy[*].fraction_of_roofline", "rel_band", 0.01),
+    # profiler: phase dispatch counts / modeled bytes replay deterministic
+    # dispatch programs; the decode-step audit is the measured-vs-modeled
+    # invariant (kernel multiset == decode_step_account, byte-exact).
+    ("BENCH_load.json", "profile[*].occurrences", "exact", 0),
+    ("BENCH_load.json", "profile[*].dispatches", "exact", 0),
+    ("BENCH_load.json", "profile[*].modeled_bytes", "exact", 0),
+    ("BENCH_load.json", "profile[*].achieved_bytes_per_s", "info", 0),
+    ("BENCH_load.json", "profile[*].fraction_of_roofline", "info", 0),
+    ("BENCH_load.json", "audit[*].match", "exact", 0),
+    ("BENCH_load.json", "audit[*].dispatches", "exact", 0),
+    ("BENCH_load.json", "audit[*].modeled_bytes_measured", "exact", 0),
+    ("BENCH_load.json", "audit[*].modeled_bytes_expected", "exact", 0),
 ]
 
 
@@ -103,7 +123,7 @@ def _label(el, idx):
     if not isinstance(el, dict):
         return str(idx)
     parts = [str(el[k]) for k in ("kernel", "mode", "arch") if k in el][:1]
-    parts += [str(el[k]) for k in ("backend", "dtype", "kv_dtype")
+    parts += [str(el[k]) for k in ("backend", "dtype", "kv_dtype", "phase")
               if k in el and str(el[k]) not in parts]
     return "/".join(parts) if parts else str(idx)
 

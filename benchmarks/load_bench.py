@@ -15,6 +15,13 @@ model and the Table-II energy constants (``repro.obs.energy``) into
 modeled energy rows per engine config — bytes/token, joules/token,
 tokens/s/W, fraction-of-roofline — for bf16 and int8 KV+weights.
 
+Two profiler sections (``repro.obs.profiler``, DESIGN.md §9): ``profile``
+re-runs the chunked+prefix replay under a ``DispatchProfiler`` and reports
+per-phase dispatch counts + modeled bytes (deterministic, exact-gated) and
+wall-derived roofline fractions (info); ``audit`` runs the decode-step
+dispatch audit (measured kernel multiset == ``decode_step_account``) for
+bf16 and int8 KV, gated as exact booleans.
+
     PYTHONPATH=src python benchmarks/load_bench.py --fast
     PYTHONPATH=src python benchmarks/load_bench.py --requests 64 \
         --trace-out BENCH_load_trace.json      # open in ui.perfetto.dev
@@ -38,7 +45,7 @@ MODES = ("paged", "chunked", "chunked+prefix")
 
 
 def build_engine(arch: str, mode: str, *, slots, cache_len, page_size,
-                 chunk_size, tracer=None, tp=1):
+                 chunk_size, tracer=None, profiler=None, tp=1):
     import jax
     from repro.configs import get_config, reduced
     from repro.models import RuntimeConfig, build_model
@@ -56,7 +63,8 @@ def build_engine(arch: str, mode: str, *, slots, cache_len, page_size,
         serve_step=make_serve_step(model), params=params,
         backend=PagedBackend(page_size=page_size),
         chunked_prefill=mode.startswith("chunked"), chunk_size=chunk_size,
-        prefix_cache=(mode == "chunked+prefix"), tracer=tracer, tp=tp)
+        prefix_cache=(mode == "chunked+prefix"), tracer=tracer,
+        profiler=profiler, tp=tp)
     return cfg, eng
 
 
@@ -72,6 +80,54 @@ def replay_mode(arch: str, mode: str, trace, *, slots, cache_len,
     row = {"arch": cfg.name, "mode": mode, "dist": trace.meta.get("dist"),
            "seed": trace.meta.get("seed"), **rep.row()}
     return row, rep
+
+
+def profile_rows(arch: str, trace, *, slots, cache_len, page_size,
+                 chunk_size, prefix_len):
+    """Profiled chunked+prefix replay: per-phase dispatch counts and
+    modeled bytes (deterministic — exact CI gates) plus wall-derived
+    roofline fractions (info)."""
+    from repro.configs import get_config, reduced
+    from repro.obs import (DispatchProfiler, Replayer, decode_step_account)
+
+    cfg = reduced(get_config(arch))
+    prof = DispatchProfiler()
+    prof.seed_phase("decode", decode_step_account(
+        cfg, slots=slots, cache_len=cache_len, page_size=page_size))
+    _, eng = build_engine(arch, "chunked+prefix", slots=slots,
+                          cache_len=cache_len, page_size=page_size,
+                          chunk_size=chunk_size, profiler=prof)
+    prof.install()
+    try:
+        Replayer(eng, prefix_len=prefix_len).run(
+            trace, vocab_size=cfg.vocab_size)
+    finally:
+        prof.uninstall()
+    return prof.phase_rows()
+
+
+def audit_rows(arch: str, *, cache_len, page_size):
+    """Dispatch audit (exact-match booleans + byte totals) for bf16 and
+    int8 KV — the measured-vs-modeled invariant, gated exactly."""
+    import jax
+    from repro.configs import get_config, reduced
+    from repro.models import RuntimeConfig, build_model
+    from repro.obs import audit_decode_step
+
+    rows = []
+    for kv_dtype in ("bfloat16", "int8"):
+        cfg = reduced(get_config(arch))
+        model = build_model(cfg, RuntimeConfig(
+            remat="none", kv_cache_dtype="int8" if kv_dtype == "int8"
+            else ""))
+        a = audit_decode_step(model, cache_len=cache_len,
+                              page_size=page_size)
+        rows.append({"arch": cfg.name, "kv_dtype": kv_dtype,
+                     "match": bool(a.ok),
+                     "dispatches": a.dispatches,
+                     "modeled_bytes_measured": int(a.measured_bytes),
+                     "modeled_bytes_expected": int(a.expected_bytes)})
+    return rows
 
 
 def energy_rows(arch: str, *, slots, cache_len, page_size):
@@ -150,12 +206,30 @@ def main(argv=None):
               f"{e['tokens_per_s_per_w']:>10.0f} tok/s/W  "
               f"roofline frac {e['fraction_of_roofline']:.3f}")
 
+    profile = profile_rows(args.arch, trace, slots=args.slots,
+                           cache_len=args.cache_len,
+                           page_size=args.page_size,
+                           chunk_size=args.chunk_size,
+                           prefix_len=args.prefix_len)
+    for p in profile:
+        print(f"profile {p['phase']:<16} {p['occurrences']:>4} occ  "
+              f"{p['dispatches']:>6} dispatches  "
+              f"{p['modeled_bytes']:>12,} B modeled")
+    audit = audit_rows(args.arch, cache_len=args.cache_len,
+                       page_size=args.page_size)
+    for a in audit:
+        print(f"audit  kv={a['kv_dtype']:<9} match={a['match']}  "
+              f"{a['dispatches']} dispatches  "
+              f"{a['modeled_bytes_measured']:,} B")
+
     payload = {
         "backend": jax.default_backend(),
         "interpret_mode": True,
         "workload": trace.meta,
         "rows": rows,
         "energy": energy,
+        "profile": profile,
+        "audit": audit,
     }
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=1, default=str)

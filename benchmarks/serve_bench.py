@@ -10,10 +10,15 @@ fraction-of-roofline (t_roofline / t_measured, tune subsystem
 denominators).  Three extra chunked+prefix rows run the tensor-parallel
 engine at tp=1/2/4 on a simulated 4-device host mesh — the modeled
 per-device streamed-KV bytes are exact integers and gateable (a tp=4 row
-must stream exactly 1/4 of the logical bytes per device).  ``--soak N``
-adds an N-request drain through the chunked+prefix engine (the nightly
-workload; ``--soak-tp 4`` adds a TP soak row);
-``benchmarks/ci_gate.py`` gates the JSON against committed baselines.
+must stream exactly 1/4 of the logical bytes per device).  One more
+chunked+prefix row runs under a ``repro.obs.DispatchProfiler``
+(mode ``chunked+prefix/profiled``): per-phase dispatch counts and modeled
+bytes are deterministic and exact-gated.  ``--soak N`` adds an N-request
+drain through the chunked+prefix engine (the nightly workload;
+``--soak-tp 4`` adds a TP soak row; ``--soak-profile-trace PATH`` writes
+the soak's Perfetto trace with per-kernel spans + streamed-bytes
+counters); ``benchmarks/ci_gate.py`` gates the JSON against committed
+baselines.
 
     PYTHONPATH=src python benchmarks/serve_bench.py --fast
 
@@ -56,7 +61,7 @@ def make_trace(cfg, rng, requests, max_new, *, shared_prefix=0):
 
 
 def bench_engine(arch: str, mode: str, *, slots, cache_len, requests,
-                 max_new, page_size, chunk_size=16, tp=1):
+                 max_new, page_size, chunk_size=16, tp=1, profiler=None):
     import jax
     import numpy as np
     from repro.configs import get_config, reduced
@@ -78,7 +83,7 @@ def bench_engine(arch: str, mode: str, *, slots, cache_len, requests,
         prefill_step=make_prefill_step(model),
         serve_step=make_serve_step(model), params=params, backend=be,
         chunked_prefill=chunked, chunk_size=chunk_size,
-        prefix_cache=prefix, tp=tp)
+        prefix_cache=prefix, profiler=profiler, tp=tp)
     rng = np.random.default_rng(0)
     reqs = make_trace(cfg, rng, requests, max_new,
                       shared_prefix=24 if prefix else 0)
@@ -94,30 +99,75 @@ def bench_engine(arch: str, mode: str, *, slots, cache_len, requests,
     return m
 
 
+def bench_profiled_engine(arch: str, *, slots, cache_len, requests,
+                          max_new, page_size, chunk_size=16):
+    """chunked+prefix engine run under a ``DispatchProfiler``: the engine
+    row plus per-phase dispatch counts / modeled bytes (deterministic —
+    exact CI gates) and wall-derived roofline fractions (info)."""
+    from repro.configs import get_config, reduced
+    from repro.obs import DispatchProfiler, decode_step_account
+
+    cfg = reduced(get_config(arch))
+    prof = DispatchProfiler()
+    prof.seed_phase("decode", decode_step_account(
+        cfg, slots=slots, cache_len=cache_len, page_size=page_size))
+    prof.install()
+    try:
+        m = bench_engine(arch, "chunked+prefix/profiled", slots=slots,
+                         cache_len=cache_len, requests=requests,
+                         max_new=max_new, page_size=page_size,
+                         chunk_size=chunk_size, profiler=prof)
+    finally:
+        prof.uninstall()
+    m["profile"] = prof.phase_rows()
+    return m
+
+
 def bench_soak(arch: str, *, requests, slots, cache_len, page_size,
-               chunk_size=16, tp=1):
+               chunk_size=16, tp=1, profile_trace=None):
     """N-request heavy-tail soak through the chunked+prefix engine under
     the deterministic step clock (``repro.obs``): percentile latency rows
     (engine cycles, gateable; wall seconds, info) plus queue-depth /
     occupancy timelines.  ``tp`` > 1 drains the same trace through the
-    tensor-parallel engine (the nightly TP row)."""
+    tensor-parallel engine (the nightly TP row).  ``profile_trace`` runs
+    the soak under a ``DispatchProfiler`` feeding a ``Tracer`` and writes
+    the Chrome trace (per-kernel spans + streamed-bytes counters) there."""
     from repro import obs
     _here = os.path.dirname(os.path.abspath(__file__))
     if _here not in sys.path:
         sys.path.insert(0, _here)
     from load_bench import build_engine
 
+    tracer = prof = None
+    if profile_trace:
+        from repro.configs import get_config, reduced
+        tracer = obs.Tracer()
+        prof = obs.DispatchProfiler(tracer=tracer)
+        prof.seed_phase("decode", obs.decode_step_account(
+            reduced(get_config(arch)), slots=slots, cache_len=cache_len,
+            page_size=page_size))
+        prof.install()
     cfg, eng = build_engine(arch, "chunked+prefix", slots=slots,
                             cache_len=cache_len, page_size=page_size,
-                            chunk_size=chunk_size, tp=tp)
+                            chunk_size=chunk_size, tracer=tracer,
+                            profiler=prof, tp=tp)
     trace = obs.generate("heavy_tail", requests=requests, seed=0,
                          prompt_len=(4, min(48, cache_len - 18)),
                          max_new=(2, 16))
-    rep = obs.Replayer(eng, timeline_every=4).run(
-        trace, vocab_size=cfg.vocab_size)
+    try:
+        rep = obs.Replayer(eng, timeline_every=4).run(
+            trace, vocab_size=cfg.vocab_size)
+    finally:
+        if prof is not None:
+            prof.uninstall()
     mode = "soak/chunked+prefix" + (f"/tp{tp}" if tp > 1 else "")
     row = {"arch": cfg.name, "mode": mode,
            "dist": "heavy_tail", **rep.row()}
+    if profile_trace:
+        tracer.to_chrome(profile_trace)
+        print(f"wrote {profile_trace} ({len(tracer.events())} events, "
+              f"{tracer.dropped} dropped)")
+        row["profile"] = prof.phase_rows()
     tl = rep.timeline
     row["timeline"] = {k: [float(x) for x in tl[k]]
                        for k in ("t", "queue_depth", "decoding",
@@ -191,6 +241,11 @@ def main(argv=None):
     ap.add_argument("--soak-tp", type=int, default=0, metavar="TP",
                     help="with --soak: add one more soak row through the "
                          "tensor-parallel engine at this tp size")
+    ap.add_argument("--soak-profile-trace", default=None, metavar="PATH",
+                    help="with --soak: run the soak under a "
+                         "DispatchProfiler and write a Chrome trace with "
+                         "per-kernel spans + streamed-bytes counters "
+                         "(open in ui.perfetto.dev)")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args(argv)
 
@@ -231,11 +286,22 @@ def main(argv=None):
               f"kv/dev {m['kv_bytes_streamed_per_device']:>9,} B  "
               f"overlap {m['dispatch_overlap_fraction']:.2f}")
 
+    m = bench_profiled_engine(args.arch, slots=args.slots,
+                              cache_len=args.cache_len, requests=requests,
+                              max_new=max_new, page_size=args.page_size)
+    engines.append(m)
+    pdec = next((p for p in m["profile"] if p["phase"] == "decode"), {})
+    print(f"{m['mode']:<15} {m['decode_steps']:>4} steps  "
+          f"{m['tokens_per_s']:>8.2f} tok/s  "
+          f"decode {pdec.get('dispatches', 0)} dispatches  "
+          f"{pdec.get('modeled_bytes', 0):,} B modeled")
+
     soak = soak_tp = None
     if args.soak:
         soak = bench_soak(args.arch, requests=args.soak, slots=args.slots,
                           cache_len=args.cache_len,
-                          page_size=args.page_size)
+                          page_size=args.page_size,
+                          profile_trace=args.soak_profile_trace)
         print(f"soak({args.soak:>3})      "
               f"ttft_steps p50/p95/p99 {soak['ttft_steps_p50']:.1f}/"
               f"{soak['ttft_steps_p95']:.1f}/{soak['ttft_steps_p99']:.1f}  "

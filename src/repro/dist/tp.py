@@ -268,6 +268,10 @@ class TPExecutor:
         self.plan = plan(model, tp, mode)
         self.mesh = self.plan.mesh
         self._pspecs = None
+        # optional repro.obs.DispatchProfiler (set by the engine): every
+        # sharded step call is bracketed in a "collective" phase tagged
+        # with the mesh size
+        self.profiler = None
 
     # ------------------------------------------------------- placement
     def shard_params(self, model, params):
@@ -322,6 +326,10 @@ class TPExecutor:
             f = state.get("f")
             if f is None:
                 f = state["f"] = build(args)
+            prof = self.profiler
+            if prof is not None:
+                with prof.phase("collective", devices=plan_.size):
+                    return f(*args)
             return f(*args)
 
         return call

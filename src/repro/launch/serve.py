@@ -75,6 +75,16 @@ def main():
                          "write it as a Chrome trace-event file — open in "
                          "ui.perfetto.dev (a .jsonl suffix writes "
                          "JSON-lines instead)")
+    ap.add_argument("--profile", action="store_true",
+                    help="install a repro.obs.DispatchProfiler on the "
+                         "kernel-dispatch seam: per-phase dispatch counts, "
+                         "modeled bytes and fraction-of-roofline (printed "
+                         "after the run), kernel spans + streamed-bytes "
+                         "counters on --trace-out, and the decode-step "
+                         "dispatch audit (exits non-zero on mismatch)")
+    ap.add_argument("--profile-out", default=None, metavar="PATH",
+                    help="write the profiler summary (phases + per-kernel "
+                         "rows + audit result) as JSON; implies --profile")
     args = ap.parse_args()
 
     if args.tp > 1 and "--xla_force_host_platform_device_count" not in \
@@ -153,6 +163,25 @@ def main():
     if args.trace_out:
         from repro.obs import Tracer
         tracer = Tracer()
+    profiler = None
+    if args.profile or args.profile_out:
+        from repro.obs import DispatchProfiler, decode_step_account
+        profiler = DispatchProfiler(tracer=tracer)
+        try:
+            # seed the decode phase program from the modeled account (the
+            # jnp decode path never hits the registry; the dispatch audit
+            # below is what licenses this substitution)
+            profiler.seed_phase("decode", decode_step_account(
+                cfg, slots=args.slots, cache_len=args.cache_len,
+                page_size=args.page_size,
+                kv_dtype="int8" if kv_int8 else "bfloat16",
+                weights="int8" if args.quantize_weights == "int8"
+                else "bfloat16",
+                quant_group=args.quantize_group_size))
+        except ValueError as e:
+            print(f"profile: decode account unavailable ({e}); decode "
+                  f"phase reports occurrences/wall only")
+        profiler.install()
     engine = ServingEngine(
         model, slots=args.slots, cache_len=args.cache_len,
         prefill_step=make_prefill_step(model),
@@ -160,7 +189,7 @@ def main():
                                    troop_configs=configs),
         params=params, prefill_extras=extras, backend=backend,
         chunked_prefill=args.chunked_prefill, chunk_size=args.chunk_size,
-        prefix_cache=args.prefix_cache, tracer=tracer,
+        prefix_cache=args.prefix_cache, tracer=tracer, profiler=profiler,
         tp=args.tp, tp_mode=args.tp_mode,
         async_dispatch=not args.sync_dispatch)
     rng = np.random.default_rng(0)
@@ -187,6 +216,41 @@ def main():
             tracer.to_chrome(args.trace_out)
         print(f"wrote {args.trace_out} ({len(tracer.events())} events, "
               f"{tracer.dropped} dropped)")
+    if profiler is not None:
+        profiler.uninstall()
+        summary = profiler.summary()
+        print(f"profile ({summary['spatz']}, roofline "
+              f"{summary['roofline_bytes_per_s'] / 1e9:.0f} GB/s):")
+        for row in summary["phases"]:
+            print(f"  {row['phase']:>18s}: {row['occurrences']:5d} occ, "
+                  f"{row['dispatches']:6d} dispatches, "
+                  f"{row['modeled_bytes']:>14,d} B modeled, "
+                  f"wall {row['wall_s'] * 1e3:8.1f} ms, "
+                  f"roofline frac {row['fraction_of_roofline']:.2e}")
+        audit_row = None
+        if args.quantize_weights == "none":
+            from repro.obs import audit_decode_step
+            try:
+                audit = audit_decode_step(model, cache_len=args.cache_len,
+                                          page_size=args.page_size)
+            except ValueError as e:
+                print(f"dispatch audit skipped: {e}")
+            else:
+                print(audit.report())
+                audit_row = {"ok": audit.ok, "arch": audit.arch,
+                             "kv_dtype": audit.kv_dtype,
+                             "dispatches": audit.dispatches,
+                             "modeled_bytes": int(audit.measured_bytes)}
+        else:
+            print("dispatch audit skipped: quantized weights dequantize "
+                  "in-graph (no qgemv dispatch to audit)")
+        if args.profile_out:
+            summary["audit"] = audit_row
+            with open(args.profile_out, "w") as f:
+                json.dump(summary, f, indent=1)
+            print(f"wrote {args.profile_out}")
+        if audit_row is not None and not audit_row["ok"]:
+            raise SystemExit(1)
 
 
 if __name__ == "__main__":

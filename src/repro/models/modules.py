@@ -7,6 +7,7 @@ launcher to derive ``NamedSharding``s.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Optional, Tuple
 
@@ -54,6 +55,52 @@ def box_like(values, boxed):
 
 
 # --------------------------------------------------------------------------
+# Kernel routing (observability)
+# --------------------------------------------------------------------------
+# When enabled, single-token projections, rmsnorms and the tied read-out
+# dispatch their registry Pallas kernels (repro.kernels.ops) instead of the
+# inline jnp expressions — the capture mode behind the dispatch audit
+# (obs.profiler.audit_decode_step), which replays a decode step under
+# jax.eval_shape and compares the dispatched kernel multiset against
+# obs.energy.decode_step_account.  Off by default; the flag is read at
+# trace time, so already-jitted steps are unaffected by a later flip.
+_KERNEL_ROUTED = False
+
+
+def kernel_routed() -> bool:
+    return _KERNEL_ROUTED
+
+
+@contextlib.contextmanager
+def kernel_routing(enable: bool = True):
+    global _KERNEL_ROUTED
+    prev = _KERNEL_ROUTED
+    _KERNEL_ROUTED = enable
+    try:
+        yield
+    finally:
+        _KERNEL_ROUTED = prev
+
+
+def _no_tp() -> bool:
+    from repro.dist import tp as _tp
+    return _tp.current() is None
+
+
+def _gemv_routable(x, w) -> bool:
+    """One output row-vector against a raw 2-D weight, outside TP."""
+    return (getattr(w, "ndim", 0) == 2 and x.ndim >= 1
+            and x.shape[-1] == w.shape[0]
+            and int(np.prod(x.shape[:-1], dtype=np.int64)) == 1 and _no_tp())
+
+
+def _routed_gemv(w_nk, x, dtype):
+    """Dispatch the registry gemv on an (N, K) weight; returns (N,)."""
+    from repro.kernels import ops as KO
+    return KO.gemv(w_nk, x.reshape(-1)).astype(dtype)
+
+
+# --------------------------------------------------------------------------
 # Initializers
 # --------------------------------------------------------------------------
 def _normal(key, shape, dtype, scale):
@@ -81,7 +128,8 @@ def apply_dense(p, x, dtype=None, tp=None):
     mode the projection routes through ``repro.dist.collective_matmul``'s
     ring collectives so the gather/scatter hides behind the GEMV."""
     w = p["w"]
-    if isinstance(w, QuantizedTensor):
+    quantized = isinstance(w, QuantizedTensor)
+    if quantized:
         # repro.quant weights (DESIGN.md §5): grouped dequant on the fly —
         # the GSPMD-shardable reference of the fused-dequant qgemv kernels
         # (which stream the int8/int4 bytes + scales; repro.quant.kernels)
@@ -90,6 +138,12 @@ def apply_dense(p, x, dtype=None, tp=None):
         w = w.astype(dtype)
     if dtype is not None:
         x = x.astype(dtype)
+    if _KERNEL_ROUTED and not quantized and _gemv_routable(x, w):
+        # W is stored (in_dim, out_dim); the gemv kernel walks (N, K)
+        y = _routed_gemv(w.T, x, jnp.result_type(x.dtype, w.dtype))
+        if "b" in p:
+            y = y + p["b"].astype(y.dtype)
+        return y.reshape(x.shape[:-1] + (w.shape[1],))
     if tp is not None:
         from repro.dist import tp as _tp
         ctx = _tp.current()
@@ -126,7 +180,12 @@ def apply_embed(p, ids, dtype):
 
 def apply_unembed(p, x, dtype):
     """Tied read-out: x @ table.T"""
-    return x.astype(dtype) @ p["table"].astype(dtype).T
+    t = p["table"].astype(dtype)
+    if _KERNEL_ROUTED and x.ndim >= 1 and x.shape[-1] == t.shape[1] \
+            and int(np.prod(x.shape[:-1], dtype=np.int64)) == 1 and _no_tp():
+        y = _routed_gemv(t, x.astype(dtype), dtype)   # table is (V, d)
+        return y.reshape(x.shape[:-1] + (t.shape[0],))
+    return x.astype(dtype) @ t.T
 
 
 # --------------------------------------------------------------------------
@@ -140,6 +199,12 @@ def norm_init(kind: str, d: int, axes=("embed",)):
 
 
 def apply_norm(p, x, kind: str, eps: float = 1e-6):
+    if _KERNEL_ROUTED and kind == "rmsnorm" and "bias" not in p and _no_tp():
+        from repro.kernels import ops as KO
+        d = x.shape[-1]
+        # eps is a static kernel arg — must stay a kwarg
+        return KO.rmsnorm(x.reshape(-1, d), p["scale"],
+                          eps=eps).reshape(x.shape)
     dtype = x.dtype
     x = x.astype(jnp.float32)
     if kind == "rmsnorm":

@@ -120,10 +120,57 @@ def _route_group(xg, logits, mo, capacity):
     return dispatch, valid, gates, aux
 
 
+def _apply_moe_routed(p, cfg, x, *, dtype):
+    """Single-token MoE through the registry gemv kernels — the kernel-
+    routing capture mode behind ``obs.profiler.audit_decode_step``.  Same
+    math as the gather path at B*T == 1 (fp32 router, top-k with optional
+    prob renormalization and scaling, k routed expert MLPs, shared
+    expert + sigmoid gate); the aux loss is zero (decode discards it)."""
+    from repro.kernels import ops as KO
+    mo = cfg.moe
+    B, T, d = x.shape
+    k = mo.num_experts_per_tok
+    logits = M.apply_dense(p["router"], x.reshape(1, d), jnp.float32)
+    probs = jax.nn.softmax(logits.reshape(-1), axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)
+    if mo.norm_topk_prob:
+        top_p = top_p / jnp.sum(top_p)
+    top_p = top_p * mo.routed_scaling_factor
+
+    xv = x.reshape(d).astype(dtype)
+    y = jnp.zeros((d,), dtype)
+    for j in range(k):
+        e = top_e[j]
+        up_w = jax.lax.dynamic_index_in_dim(
+            p["wi_up"]["w"], e, keepdims=False)          # (d, d_ff)
+        up = KO.gemv(up_w.T.astype(dtype), xv)
+        if "wi_gate" in p:
+            gate_w = jax.lax.dynamic_index_in_dim(
+                p["wi_gate"]["w"], e, keepdims=False)
+            h = jax.nn.silu(KO.gemv(gate_w.T.astype(dtype), xv)) * up
+        else:
+            h = M.activation(cfg.act)(up)
+        wo_w = jax.lax.dynamic_index_in_dim(
+            p["wo"]["w"], e, keepdims=False)             # (d_ff, d)
+        yj = KO.gemv(wo_w.T.astype(dtype), h.astype(dtype))
+        y = y + top_p[j].astype(dtype) * yj.astype(dtype)
+    y = y.reshape(B, T, d)
+    if "shared" in p:
+        ys = M.apply_mlp(p["shared"], x, cfg.act, dtype)
+        if "shared_gate" in p:
+            ys = ys * jax.nn.sigmoid(
+                M.apply_dense(p["shared_gate"], x, dtype))
+        y = y + ys
+    return y, jnp.zeros((), jnp.float32)
+
+
 def apply_moe(p, cfg, x, *, dtype, num_groups: int = 1):
     """x: (B, T, d) -> (B, T, d), aux-loss scalar."""
     mo = cfg.moe
     B, T, d = x.shape
+    if M.kernel_routed() and B * T == 1 and M._no_tp() \
+            and not isinstance(p["wi_up"]["w"], M.QuantizedTensor):
+        return _apply_moe_routed(p, cfg, x, dtype=dtype)
     N = B * T
     G = num_groups
     while N % G:

@@ -173,7 +173,8 @@ def _apply_sublayer(p, cfg, rt, x, *, mixer, ffn, positions, state, dtype,
         o, c, stg = A.apply_attention_chunk_paged(
             p["mixer"], cfg, h, state["mixer"], chunk["offset"],
             chunk["valid"], chunk["stage_base"], dtype, block_tables=pages,
-            stage=state.get("stage"), use_kernel=rt.paged_kernel_decode)
+            stage=state.get("stage"),
+            use_kernel=rt.paged_kernel_decode or M.kernel_routed())
         out_state["mixer"] = c
         if stg is not None:
             out_state["stage"] = stg
@@ -196,7 +197,8 @@ def _apply_sublayer(p, cfg, rt, x, *, mixer, ffn, positions, state, dtype,
                 o, c = A.apply_attention_decode(
                     p["mixer"], cfg, h, state["mixer"], pos, dtype,
                     block_tables=pages,
-                    use_kernel=rt.paged_kernel_decode)
+                    use_kernel=rt.paged_kernel_decode or
+                    M.kernel_routed())
             out_state["mixer"] = c
         else:
             if cfg.attention == "mla":

@@ -1,6 +1,6 @@
 """repro.obs — observability: lifecycle tracing, load harness, telemetry.
 
-Three layers over the serving stack (DESIGN.md §7):
+Four layers over the serving stack (DESIGN.md §7, §9):
 
   tracer    — ring-buffer ``Tracer``: per-request spans + allocator events
               + counters, exported as JSON-lines or Chrome trace-event
@@ -14,6 +14,11 @@ Three layers over the serving stack (DESIGN.md §7):
               registry's byte/FLOP models, the Spatz machine point and the
               Table-II energy constants into modeled joules/token,
               tokens/s/W and fraction-of-roofline per engine row
+  profiler  — ``DispatchProfiler`` on the registry dispatch seam: per-
+              (kernel, phase, signature) dispatch counts, modeled bytes,
+              achieved bytes/s vs the Spatz roofline, Perfetto kernel
+              spans + streamed-bytes counters, and the measured-vs-modeled
+              ``audit_decode_step`` invariant (DESIGN.md §9)
 
 Quickstart::
 
@@ -28,6 +33,9 @@ Quickstart::
 from repro.obs.energy import (AccountEntry, E_BEAT, E_FMA, EnergyModel,
                               P_STATIC, StepReport, account_totals,
                               decode_step_account, engine_energy_row)
+from repro.obs.profiler import (AuditResult, DispatchProfiler,
+                                DispatchRecord, audit_decode_step,
+                                modeled_time_s, roofline_bytes_per_s)
 from repro.obs.replay import Replayer, ReplayReport, percentiles
 from repro.obs.tracer import Tracer, span_pairs
 from repro.obs.workload import (DISTRIBUTIONS, TraceEntry, WorkloadTrace,
@@ -40,4 +48,6 @@ __all__ = [
     "AccountEntry", "EnergyModel", "StepReport", "account_totals",
     "decode_step_account", "engine_energy_row",
     "P_STATIC", "E_BEAT", "E_FMA",
+    "DispatchProfiler", "DispatchRecord", "AuditResult",
+    "audit_decode_step", "modeled_time_s", "roofline_bytes_per_s",
 ]

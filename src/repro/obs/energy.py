@@ -137,7 +137,12 @@ def decode_step_account(model_cfg, *, slots: int, cache_len: int,
         mult = 3 if cfg.act == "swiglu" else 2
         if ffn == "moe":
             mo = cfg.moe
-            entries.append(proj(mo.num_experts, d, "router"))
+            # router logits are fp32 over raw weights ("router" is in
+            # quant.params.EXCLUDE_KEYS), so the entry is an f32 gemv
+            # regardless of the ``weights`` policy
+            entries.append(AccountEntry(
+                "gemv", (sds((mo.num_experts, d), jnp.float32),
+                         sds((d,), jnp.float32)), 1, "router"))
             entries.append(proj(mo.d_ff, d, "moe",
                                 calls=mo.num_experts_per_tok * (mult - 1)))
             entries.append(proj(d, mo.d_ff, "moe",
@@ -146,6 +151,8 @@ def decode_step_account(model_cfg, *, slots: int, cache_len: int,
                 entries.append(proj(mo.shared_d_ff, d, "moe",
                                     calls=mult - 1))
                 entries.append(proj(d, mo.shared_d_ff, "moe"))
+                if mo.shared_expert_gate:
+                    entries.append(proj(1, d, "moe"))
         else:
             entries.append(proj(cfg.d_ff, d, "mlp", calls=mult - 1))
             entries.append(proj(d, cfg.d_ff, "mlp"))

@@ -1,0 +1,462 @@
+"""Kernel-dispatch profiler — measured-vs-modeled roofline attribution.
+
+``DispatchProfiler`` hooks the registry dispatch seam
+(``repro.tune.registry.PROFILER``): every ``@troop_kernel`` wrapper call is
+recorded — kernel name, arg signature, the resolved ``TroopConfig``, and
+modeled flops/bytes from the spec's registered cost models — then invoked
+with exactly the config the plain dispatch path would have used.  With no
+profiler installed the wrapper pays a single module-attr check.
+
+Phase contexts
+--------------
+The serving engine brackets its step submissions in ``profiler.phase``
+(``admit`` / ``bucketed_prefill`` / ``chunk_prefill`` / ``decode`` /
+``collective``, the last tagged ``@tpN`` under tensor parallelism).  All
+engine steps are jitted, so registry dispatches only fire while a step
+*traces*; the profiler therefore memoizes the dispatch list captured during
+a phase's tracing occurrence as that phase's *program* (keyed by
+``(phase, key)`` — e.g. one program per prefill bucket) and replays it into
+the aggregates on every later occurrence of the same phase.  A program can
+also be *seeded* from a modeled account (``seed_phase`` +
+``obs.energy.decode_step_account``) — the dispatch audit below is what
+makes that substitution sound.
+
+Aggregation is per ``(phase, kernel, signature)``: dispatch counts, modeled
+bytes/flops, modeled Spatz time (memory-roofline cycles + issue overhead at
+1 GHz), and — against the per-phase measured wall — achieved bytes/s and
+fraction-of-roofline vs the ``BW2X_TROOP`` bound.  Counts and modeled bytes
+are deterministic (exact CI gates); wall-derived fractions are host
+measurements (info band).  An attached ``Tracer`` receives per-kernel spans
+on a ``kernels`` track plus cumulative ``streamed_bytes`` / ``dispatches``
+counter tracks, so a profiled soak opens in Perfetto with kernel-level
+attribution.
+
+Dispatch audit
+--------------
+``audit_decode_step`` replays ONE engine decode step (B=1) under the
+profiler with ``models.modules.kernel_routing`` active — every projection,
+norm, unembed and MoE expert routes through the registry kernels — via
+``jax.eval_shape`` (abstract, so nothing is compiled or executed) and
+asserts the captured kernel multiset and summed modeled bytes exactly equal
+``decode_step_account``'s enumeration.  That turns the modeled energy/SLO
+rows from assumption into checked invariant: model-code drift that adds,
+drops or reshapes a kernel fails the audit loudly.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from collections import Counter
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core import perfmodel as PM
+from repro.tune import registry as _reg
+from repro.tune.registry import arg_signature
+
+CLOCK_HZ = 1e9          # the Spatz cycle model is quoted at 1 GHz
+
+
+@dataclass(frozen=True)
+class DispatchRecord:
+    """One registry-kernel dispatch (or one modeled call from a seeded
+    program).  ``cfg`` is the resolved TroopConfig (None when seeded)."""
+    kernel: str
+    signature: str
+    cfg: Any
+    modeled_flops: float
+    modeled_bytes: float
+    phase: str = ""
+    timed_s: float = 0.0
+
+
+def modeled_time_s(bytes_: float, flops: float, launches: int,
+                   spatz: PM.SpatzConfig = PM.BW2X_TROOP) -> float:
+    """Spatz roofline time: max(memory, FLOP) beats + per-launch issue
+    overhead, at 1 GHz — the same fold as ``obs.energy.EnergyModel``."""
+    from repro.obs.energy import BEAT_BYTES, FLOPS_PER_BEAT
+    mem_cycles = bytes_ / BEAT_BYTES / spatz.mem_beats_per_cycle
+    cycles = max(mem_cycles, flops / FLOPS_PER_BEAT) \
+        + launches * spatz.issue_overhead
+    return cycles / CLOCK_HZ
+
+
+def roofline_bytes_per_s(spatz: PM.SpatzConfig = PM.BW2X_TROOP) -> float:
+    from repro.obs.energy import BEAT_BYTES
+    return spatz.mem_beats_per_cycle * BEAT_BYTES * CLOCK_HZ
+
+
+class DispatchProfiler:
+    """Records registry-kernel dispatches grouped by engine phase.
+
+    ``timed=True`` additionally blocks on every *concrete* dispatch
+    (``jax.block_until_ready``) and records per-call wall time — opt-in,
+    since it serializes the async pipeline; trace-time dispatches (tracer
+    args) are never timed.
+    """
+
+    def __init__(self, *, tracer=None, timed: bool = False,
+                 spatz: PM.SpatzConfig = PM.BW2X_TROOP):
+        self.tracer = tracer
+        self.timed = timed
+        self.spatz = spatz
+        self.records: List[DispatchRecord] = []     # raw trace-time log
+        self._stack: List[Dict[str, Any]] = []      # open phase frames
+        self._programs: Dict[Tuple[str, Any], List[DispatchRecord]] = {}
+        self._pinned: set = set()                   # seeded (label, key)s
+        self._agg: Dict[Tuple[str, str, str], Dict[str, float]] = {}
+        self._phases: Dict[str, Dict[str, float]] = {}
+        self._cum_bytes = 0.0
+        self._cum_dispatches = 0
+
+    # ------------------------------------------------------------ install
+    def install(self) -> "DispatchProfiler":
+        _reg.install_profiler(self)
+        return self
+
+    def uninstall(self) -> None:
+        _reg.uninstall_profiler(self)
+
+    def __enter__(self) -> "DispatchProfiler":
+        return self.install()
+
+    def __exit__(self, *exc) -> None:
+        self.uninstall()
+
+    # ------------------------------------------------------------- record
+    def record(self, spec, fn, args, kwargs):
+        """Called by the registry dispatch wrapper: log the invocation,
+        then invoke ``fn`` with exactly the config plain dispatch would
+        have resolved (explicit ``TroopConfig`` wins; else the tuned
+        cache / heuristic default)."""
+        from repro.core.troop import TroopConfig
+        explicit = kwargs.get("cfg") is not None or \
+            any(isinstance(a, TroopConfig) for a in args)
+        margs = tuple(a for a in args if not isinstance(a, TroopConfig))
+        if explicit:
+            cfg = kwargs["cfg"] if kwargs.get("cfg") is not None else \
+                next(a for a in args if isinstance(a, TroopConfig))
+            call = lambda: fn(*args, **kwargs)              # noqa: E731
+        else:
+            kw = dict(kwargs)
+            kw.pop("cfg", None)
+            from repro.tune.cache import get_tuned
+            cfg = get_tuned(spec.name, *args, variant_kwargs=kw)
+            call = lambda: fn(*args, cfg=cfg, **kw)         # noqa: E731
+
+        timed_s = 0.0
+        if self.timed and not self._abstract(margs):
+            import jax
+            t0 = time.perf_counter()
+            out = call()
+            jax.block_until_ready(out)
+            timed_s = time.perf_counter() - t0
+        else:
+            out = call()
+
+        rec = DispatchRecord(
+            kernel=spec.name, signature=arg_signature(margs), cfg=cfg,
+            modeled_flops=float(spec.flops(*margs)),
+            modeled_bytes=float(spec.bytes(*margs)),
+            phase=self._stack[-1]["label"] if self._stack else "",
+            timed_s=timed_s)
+        self.records.append(rec)
+        if self._stack:
+            self._stack[-1]["dispatches"].append(rec)
+        else:
+            self._aggregate("", [rec])      # unphased: aggregate directly
+        return out
+
+    @staticmethod
+    def _abstract(args) -> bool:
+        import jax
+        return any(isinstance(a, jax.core.Tracer) for a in args)
+
+    # ------------------------------------------------------------- phases
+    @contextlib.contextmanager
+    def phase(self, name: str, key: Any = None, devices: int = 1):
+        """Bracket an engine step.  Dispatches fired inside (i.e. while
+        the step traces) become the ``(name, key)`` program; every exit —
+        traced or cache-hit — counts one occurrence, adds the measured
+        wall, and replays the program into the aggregates."""
+        label = name if devices <= 1 else f"{name}@tp{devices}"
+        frame = {"label": label, "key": key, "dispatches": []}
+        self._stack.append(frame)
+        t0 = time.perf_counter()
+        try:
+            yield self
+        finally:
+            if self._stack and self._stack[-1] is frame:
+                self._stack.pop()
+            else:                           # tolerate reset() mid-phase
+                self._stack = [f for f in self._stack if f is not frame]
+            wall = time.perf_counter() - t0
+            self._close(label, key, frame["dispatches"], wall, t0)
+
+    def _close(self, label, key, dispatches, wall, t0_abs):
+        pk = (label, key)
+        if dispatches and pk not in self._pinned:
+            self._programs[pk] = list(dispatches)
+        prog = self._programs.get(pk, [])
+        ph = self._phase_row(label)
+        ph["occurrences"] += 1
+        ph["wall_s"] += wall
+        self._aggregate(label, prog)
+        self._feed_tracer(label, prog, wall, t0_abs)
+
+    def _phase_row(self, label):
+        return self._phases.setdefault(label, {
+            "occurrences": 0, "wall_s": 0.0, "dispatches": 0,
+            "modeled_bytes": 0.0, "modeled_flops": 0.0, "timed_s": 0.0})
+
+    def _aggregate(self, label, recs):
+        ph = self._phase_row(label)
+        for r in recs:
+            ph["dispatches"] += 1
+            ph["modeled_bytes"] += r.modeled_bytes
+            ph["modeled_flops"] += r.modeled_flops
+            ph["timed_s"] += r.timed_s
+            a = self._agg.setdefault((label, r.kernel, r.signature), {
+                "dispatches": 0, "modeled_bytes": 0.0, "modeled_flops": 0.0,
+                "timed_s": 0.0, "timed_calls": 0, "cfg": None})
+            a["dispatches"] += 1
+            a["modeled_bytes"] += r.modeled_bytes
+            a["modeled_flops"] += r.modeled_flops
+            if r.timed_s:
+                a["timed_s"] += r.timed_s
+                a["timed_calls"] += 1
+            if r.cfg is not None:
+                a["cfg"] = r.cfg
+            self._cum_bytes += r.modeled_bytes
+            self._cum_dispatches += 1
+
+    def add_wall(self, name: str, seconds: float):
+        """Attribute extra measured wall to a phase after the fact (the
+        engine adds the async decode stream-out wait here)."""
+        self._phase_row(name)["wall_s"] += max(seconds, 0.0)
+
+    def seed_phase(self, name: str, entries, key: Any = None):
+        """Pin a phase program from a modeled kernel account
+        (``obs.energy.AccountEntry`` list).  Used for phases whose jitted
+        steps never hit the registry (plain-jnp decode): every occurrence
+        then replays the account — validated by ``audit_decode_step``."""
+        REG = self._registry()
+        recs = []
+        for e in entries:
+            spec = REG[e.kernel]
+            rec = DispatchRecord(
+                kernel=e.kernel, signature=arg_signature(e.args), cfg=None,
+                modeled_flops=float(spec.flops(*e.args)),
+                modeled_bytes=float(spec.bytes(*e.args)), phase=name)
+            recs.extend([rec] * e.calls)
+        self._programs[(name, key)] = recs
+        self._pinned.add((name, key))
+
+    @staticmethod
+    def _registry():
+        from repro.obs.energy import _registry
+        return _registry()
+
+    # ------------------------------------------------------------- tracer
+    def _feed_tracer(self, label, prog, wall, t0_abs):
+        tr = self.tracer
+        if tr is None or not prog:
+            return
+        start = tr.rel(t0_abs)
+        by_kernel: Dict[str, Dict[str, float]] = {}
+        total_b = 0.0
+        for r in prog:
+            k = by_kernel.setdefault(r.kernel, {"calls": 0, "bytes": 0.0})
+            k["calls"] += 1
+            k["bytes"] += r.modeled_bytes
+            total_b += r.modeled_bytes
+        # one span per kernel name per occurrence, the phase wall split
+        # proportionally to modeled bytes (modeled attribution — the host
+        # has no per-kernel clocks inside a jitted step)
+        t = start
+        for kname, k in sorted(by_kernel.items()):
+            dur = wall * (k["bytes"] / total_b) if total_b else 0.0
+            tr.span(f"kernel:{kname}", "kernels", t, t + dur,
+                    phase=label, calls=int(k["calls"]),
+                    modeled_bytes=int(k["bytes"]))
+            t += dur
+        end = start + wall
+        tr.counter("streamed_bytes", int(self._cum_bytes), ts=end)
+        tr.counter("dispatches", int(self._cum_dispatches), ts=end)
+
+    # ------------------------------------------------------------ inspect
+    def reset(self):
+        """Clear aggregates and the raw record log.  Memoized/seeded phase
+        programs survive (they are structural, not cumulative), as does an
+        in-flight ``phase`` context — its occurrence lands in the fresh
+        aggregates on exit."""
+        self.records = []
+        self._agg = {}
+        self._phases = {}
+        self._cum_bytes = 0.0
+        self._cum_dispatches = 0
+        for frame in self._stack:
+            frame["dispatches"] = []
+
+    def phase_rows(self) -> List[Dict[str, Any]]:
+        rows = []
+        for label, ph in sorted(self._phases.items()):
+            mt = modeled_time_s(ph["modeled_bytes"], ph["modeled_flops"],
+                                int(ph["dispatches"]), self.spatz)
+            wall = ph["wall_s"]
+            rows.append({
+                "phase": label,
+                "occurrences": int(ph["occurrences"]),
+                "dispatches": int(ph["dispatches"]),
+                "modeled_bytes": int(ph["modeled_bytes"]),
+                "modeled_flops": int(ph["modeled_flops"]),
+                "modeled_time_s": mt,
+                "wall_s": wall,
+                "achieved_bytes_per_s":
+                    ph["modeled_bytes"] / wall if wall else 0.0,
+                "fraction_of_roofline": mt / wall if wall else 0.0,
+                "measured_minus_modeled_s": wall - mt,
+            })
+        return rows
+
+    def kernel_rows(self) -> List[Dict[str, Any]]:
+        rows = []
+        for (label, kernel, sig), a in sorted(self._agg.items()):
+            mt = modeled_time_s(a["modeled_bytes"], a["modeled_flops"],
+                                int(a["dispatches"]), self.spatz)
+            row = {
+                "phase": label, "kernel": kernel, "signature": sig,
+                "dispatches": int(a["dispatches"]),
+                "modeled_bytes": int(a["modeled_bytes"]),
+                "modeled_flops": int(a["modeled_flops"]),
+                "modeled_time_s": mt,
+                "cfg": repr(a["cfg"]) if a["cfg"] is not None else None,
+            }
+            if a["timed_calls"]:
+                row["timed_s"] = a["timed_s"]
+                row["timed_calls"] = int(a["timed_calls"])
+                row["achieved_bytes_per_s"] = \
+                    a["modeled_bytes"] * (a["timed_calls"] /
+                                          a["dispatches"]) / a["timed_s"]
+                row["fraction_of_roofline"] = \
+                    mt * (a["timed_calls"] / a["dispatches"]) / a["timed_s"]
+            rows.append(row)
+        return rows
+
+    def summary(self) -> Dict[str, Any]:
+        return {
+            "spatz": self.spatz.name,
+            "roofline_bytes_per_s": roofline_bytes_per_s(self.spatz),
+            "totals": {
+                "dispatches": int(self._cum_dispatches),
+                "modeled_bytes": int(self._cum_bytes),
+            },
+            "phases": self.phase_rows(),
+            "kernels": self.kernel_rows(),
+        }
+
+
+# ---------------------------------------------------------------- audit
+@dataclass
+class AuditResult:
+    """Measured-vs-modeled decode-step comparison (exact multiset)."""
+    ok: bool
+    arch: str
+    kv_dtype: str
+    measured: Dict[Tuple[str, str], int]
+    expected: Dict[Tuple[str, str], int]
+    measured_bytes: float
+    expected_bytes: float
+    dispatches: int = 0
+
+    def report(self) -> str:
+        lines = [f"dispatch audit {'OK' if self.ok else 'FAILED'}: "
+                 f"{self.arch} kv={self.kv_dtype} — "
+                 f"{self.dispatches} dispatches, "
+                 f"{int(self.measured_bytes):,} B measured vs "
+                 f"{int(self.expected_bytes):,} B modeled"]
+        if not self.ok:
+            m, e = Counter(self.measured), Counter(self.expected)
+            for k in sorted(set(m) | set(e)):
+                if m.get(k, 0) != e.get(k, 0):
+                    lines.append(f"  {k[0]}({k[1]}): measured "
+                                 f"{m.get(k, 0)} != modeled {e.get(k, 0)}")
+        return "\n".join(lines)
+
+
+def audit_decode_step(model, *, cache_len: int = 64,
+                      page_size: int = 16,
+                      temperature: float = 0.0) -> AuditResult:
+    """Replay ONE engine decode step (B=1) under a fresh profiler and
+    compare its kernel multiset + modeled bytes against
+    ``decode_step_account``.
+
+    The step is the engine's own ``make_serve_step`` body, abstractly
+    evaluated (``jax.eval_shape`` — no compile, no FLOPs) with
+    ``kernel_routing`` active so every projection/norm/unembed/expert
+    dispatches its registry kernel.  ``scan_layers`` is forced off (a
+    scanned stack traces its body once, under-counting by num_layers).
+    Weight-quantized models are not auditable this way (the jnp path
+    dequantizes in-graph rather than dispatching ``qgemv``).
+    """
+    import dataclasses as _dc
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import build_model
+    from repro.models import modules as M
+    from repro.obs.energy import account_totals, decode_step_account
+    from repro.serve.kvcache import PageSpec
+    from repro.serve.step import make_serve_step
+
+    cfg, rt = model.cfg, model.rt
+    if rt.quantize_weights not in ("", "none", None):
+        raise ValueError("audit_decode_step models raw-weight projections; "
+                         f"quantize_weights={rt.quantize_weights!r} is not "
+                         "auditable (the jnp path dequantizes in-graph)")
+    kv_dtype = "int8" if rt.kv_cache_dtype == "int8" else "bfloat16"
+    if kv_dtype == "int8":
+        from repro.quant.tensor import granule
+        page_size = -(-page_size // granule()) * granule()
+
+    rt_u = _dc.replace(rt, scan_layers=False, paged_kernel_decode=False)
+    model_u = build_model(cfg, rt_u)
+    serve = make_serve_step(model_u, temperature=temperature)
+    pspec = PageSpec.for_engine(1, cache_len, page_size, None, kv_dtype)
+    dt = jnp.dtype(cfg.dtype)
+
+    def one_step(params):
+        caches = model_u.init_caches(1, cache_len, dt, page_spec=pspec)
+        batch = {"tokens": jnp.zeros((1, 1), jnp.int32),
+                 "pos": jnp.full((1,), cache_len // 2, jnp.int32),
+                 "sample_nonce": jnp.zeros((1,), jnp.int32),
+                 "block_tables": jnp.tile(
+                     jnp.arange(pspec.blocks_per_slot, dtype=jnp.int32),
+                     (1, 1))}
+        return serve(params, batch, caches)
+
+    params = M.unbox(jax.eval_shape(
+        lambda: model_u.init(jax.random.PRNGKey(0))))
+    prof = DispatchProfiler()
+    prof.install()
+    try:
+        with M.kernel_routing():
+            jax.eval_shape(one_step, params)
+    finally:
+        prof.uninstall()
+
+    measured = Counter((r.kernel, r.signature) for r in prof.records)
+    measured_bytes = sum(r.modeled_bytes for r in prof.records)
+    entries = decode_step_account(cfg, slots=1, cache_len=cache_len,
+                                  page_size=page_size, kv_dtype=kv_dtype)
+    expected: Counter = Counter()
+    for e in entries:
+        expected[(e.kernel, arg_signature(e.args))] += e.calls
+    expected_bytes = account_totals(entries)["bytes"]
+    ok = measured == expected and measured_bytes == expected_bytes
+    return AuditResult(ok=ok, arch=cfg.name, kv_dtype=kv_dtype,
+                       measured=dict(measured), expected=dict(expected),
+                       measured_bytes=measured_bytes,
+                       expected_bytes=expected_bytes,
+                       dispatches=sum(measured.values()))

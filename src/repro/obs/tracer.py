@@ -114,6 +114,11 @@ class Tracer:
                 if args:
                     rec["args"] = args
                 f.write(json.dumps(rec) + "\n")
+            # trailing metadata record: a truncated ring is not a complete
+            # trace, and consumers must be able to tell
+            f.write(json.dumps({"ph": "M", "name": "dropped_events",
+                                "dropped": self.dropped,
+                                "capacity": self.capacity}) + "\n")
 
     def _tids(self) -> Dict[Track, int]:
         """Stable track -> tid map: slot ints keep their value (one track
@@ -131,7 +136,17 @@ class Tracer:
         tids = self._tids()
         out: List[Dict[str, Any]] = [
             {"ph": "M", "pid": pid, "name": "process_name",
-             "args": {"name": "repro.serve"}}]
+             "args": {"name": "repro.serve"}},
+            {"ph": "M", "pid": pid, "name": "dropped_events",
+             "args": {"dropped": self.dropped,
+                      "capacity": self.capacity}}]
+        if self.dropped:
+            # visible Perfetto counter: the exported window starts after
+            # `dropped` older events fell off the ring
+            first_ts = self._ring[0][0] if self._ring else 0.0
+            out.append({"ph": COUNTER, "pid": pid, "name": "dropped_events",
+                        "ts": first_ts * 1e6,
+                        "args": {"value": self.dropped}})
         for track, tid in tids.items():
             label = f"slot {track}" if isinstance(track, int) else track
             out.append({"ph": "M", "pid": pid, "tid": tid,

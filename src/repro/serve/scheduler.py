@@ -30,6 +30,7 @@ host-side control around jitted step functions, as production engines do.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from collections import deque
@@ -114,7 +115,8 @@ class ServingEngine:
                  prefill_batch: Optional[int] = None, min_bucket: int = 8,
                  chunked_prefill: bool = False, chunk_size: int = 32,
                  chunks_per_step: int = 1, prefix_cache: bool = False,
-                 chunk_step=None, tracer=None, metrics_window: int = 4096,
+                 chunk_step=None, tracer=None, profiler=None,
+                 metrics_window: int = 4096,
                  tp: int = 1, tp_mode: str = "exact",
                  async_dispatch: bool = True):
         """``prefill_extras(req) -> dict``: extra prefill batch entries
@@ -133,9 +135,16 @@ class ServingEngine:
         collectives from ``repro.dist.collective_matmul``; tolerance-equal).
         ``async_dispatch`` (default): the decode step submitted in cycle N
         is consumed at the start of cycle N+1, so host-side scheduling work
-        overlaps the in-flight device step (one-step-deep pipeline)."""
+        overlaps the in-flight device step (one-step-deep pipeline).
+
+        ``profiler``: a ``repro.obs.DispatchProfiler`` — the engine
+        brackets every step submission in a phase context (``admit`` /
+        ``bucketed_prefill`` / ``chunk_prefill`` / ``decode`` /
+        ``collective`` under TP) so registry-kernel dispatches and
+        measured step walls aggregate per phase (None: zero overhead)."""
         self.model = model
         self.tracer = tracer
+        self.profiler = profiler
         self.slots = slots
         self.cache_len = cache_len
         self.params = params
@@ -191,6 +200,7 @@ class ServingEngine:
         if tp > 1:
             from repro.dist.tp import TPExecutor
             self._tpx = TPExecutor(model, tp, mode=tp_mode)
+            self._tpx.profiler = profiler
             self._kv_shards = self._tpx.plan.kv_shards
             self.params = self._tpx.shard_params(model, params)
 
@@ -313,6 +323,13 @@ class ServingEngine:
     def _free_slots(self) -> List[int]:
         return [s for s, r in self.active.items() if r is None]
 
+    def _phase(self, name: str, key=None):
+        """Profiler phase context for one engine step (no-op without a
+        profiler — one attr check, like the tracer sites)."""
+        if self.profiler is None:
+            return contextlib.nullcontext()
+        return self.profiler.phase(name, key=key)
+
     def _admit_group(self, group, slots_for) -> List[Request]:
         """One bucketed batched prefill for ``group`` (list of Requests);
         returns requests whose prefill-emitted first token already finished
@@ -340,8 +357,9 @@ class ServingEngine:
             batch.update(extras)
 
         t0 = time.perf_counter()
-        next_tok, prefill_caches = self.prefill_step(self.params, batch)
-        next_tok = np.asarray(next_tok)
+        with self._phase("bucketed_prefill", key=bucket):
+            next_tok, prefill_caches = self.prefill_step(self.params, batch)
+            next_tok = np.asarray(next_tok)
         self.prefill_calls += 1
         if self.tracer is not None:
             self.tracer.span("prefill", "engine", self.tracer.rel(t0),
@@ -394,32 +412,42 @@ class ServingEngine:
             free = self._free_slots()
             if not free:
                 break
-            group, slots_for = [], []
-            while (self.queue and free
-                   and len(group) < self.prefill_batch):
-                req = self.queue[0]
-                if self._exact_prefill and group \
-                        and req.prompt_len != group[0].prompt_len:
-                    break                      # exact-length groups only
-                slot = free[0]
-                need = self._front + req.prompt_len + req.max_new_tokens
-                if not self.backend.reserve(slot, need):
-                    self._defer(req, need)
-                    break                  # pool exhausted: defer admission
-                self.queue.popleft()
-                free.pop(0)
-                group.append(req)
-                slots_for.append(slot)
+            with self._phase("admit"):
+                group, slots_for = self._gather_group(free)
             if not group:
                 break
             finished.extend(self._admit_group(group, slots_for))
         return finished
+
+    def _gather_group(self, free):
+        """Pop a bucketed-prefill admission group off the queue."""
+        group, slots_for = [], []
+        while (self.queue and free
+               and len(group) < self.prefill_batch):
+            req = self.queue[0]
+            if self._exact_prefill and group \
+                    and req.prompt_len != group[0].prompt_len:
+                break                      # exact-length groups only
+            slot = free[0]
+            need = self._front + req.prompt_len + req.max_new_tokens
+            if not self.backend.reserve(slot, need):
+                self._defer(req, need)
+                break                  # pool exhausted: defer admission
+            self.queue.popleft()
+            free.pop(0)
+            group.append(req)
+            slots_for.append(slot)
+        return group, slots_for
 
     # ------------------------------------------------- chunked admission
     def _admit_chunked(self, count_defer: bool = True):
         """Assign slots + pages to queued requests, strictly FIFO: a
         request the pool cannot hold right now *blocks* admission (no
         overtaking — the starvation guard) until releases free pages."""
+        with self._phase("admit"):
+            self._admit_chunked_locked(count_defer)
+
+    def _admit_chunked_locked(self, count_defer: bool):
         while self.queue:
             free = self._free_slots()
             if not free:
@@ -496,8 +524,9 @@ class ServingEngine:
                 self.backend.block_tables[slot:slot + 1]),
         }
         t0 = time.perf_counter()
-        next_tok, self.caches = self.chunk_step(
-            self.params, batch, self.caches)
+        with self._phase("chunk_prefill"):
+            next_tok, self.caches = self.chunk_step(
+                self.params, batch, self.caches)
         self.prefill_s += time.perf_counter() - t0
         self.chunk_calls += 1
         self.chunk_tokens += valid
@@ -586,8 +615,9 @@ class ServingEngine:
             extras["block_tables"] = self._decode_block_tables()
         batch.update(extras)
         t0 = time.perf_counter()
-        next_tok, self.caches = self.serve_step(
-            self.params, batch, self.caches)
+        with self._phase("decode"):
+            next_tok, self.caches = self.serve_step(
+                self.params, batch, self.caches)
         t_sub = time.perf_counter()
         # streamed-bytes model: this step reads every cached row of every
         # decoding slot once; a head-sharded pool streams 1/kv_shards of
@@ -619,6 +649,10 @@ class ServingEngine:
         if self._async:
             self.host_overlap_s += max(0.0, t_wait - t_sub)
         self.stream_wait_s += t_done - t_wait
+        if self.profiler is not None:
+            # the submit span landed in the decode phase; the stream-out
+            # wait is the rest of the step's measured wall
+            self.profiler.add_wall("decode", t_done - t_wait)
         # decode_s counts host time attributable to decode (submit + wait,
         # not the overlapped window) so prefill_s + decode_s ~= wall time
         self.decode_s += (t_sub - t0) + (t_done - t_wait)

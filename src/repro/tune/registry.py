@@ -18,6 +18,13 @@ raw kernel; called without one it resolves the best-known config through
 ``repro.tune.cache.get_tuned`` (persistent tuned cache, falling back to the
 spec's heuristic default).  The raw kernel stays reachable as
 ``spec.fn`` so the search engine never recurses through dispatch.
+
+When a ``repro.obs.profiler.DispatchProfiler`` is installed (module global
+``PROFILER``, via ``install_profiler``), every dispatch routes through
+``profiler.record`` which logs the call (name, arg signature, resolved
+config, modeled flops/bytes) before invoking the kernel with the exact
+config the plain path would have used.  With no profiler installed the
+wrapper pays a single module-attr check — nothing else.
 """
 from __future__ import annotations
 
@@ -123,6 +130,24 @@ class KernelSpec:
 
 REGISTRY: Dict[str, KernelSpec] = {}
 
+# Installed DispatchProfiler (repro.obs.profiler) or None.  The dispatch
+# wrapper below reads this module global once per call — the disabled path
+# costs exactly one attr check and nothing else.
+PROFILER: Optional[Any] = None
+
+
+def install_profiler(profiler) -> None:
+    """Route every registry dispatch through ``profiler.record``."""
+    global PROFILER
+    PROFILER = profiler
+
+
+def uninstall_profiler(profiler=None) -> None:
+    """Remove the installed profiler (no-op if ``profiler`` isn't it)."""
+    global PROFILER
+    if profiler is None or PROFILER is profiler:
+        PROFILER = None
+
 
 def get(name: str) -> KernelSpec:
     if name not in REGISTRY:
@@ -154,6 +179,9 @@ def troop_kernel(name: str, *, flops: Callable, bytes: Callable,
         REGISTRY[name] = spec
 
         def dispatch(*args, **kwargs):
+            prof = PROFILER            # one module-attr load when disabled
+            if prof is not None:
+                return prof.record(spec, fn, args, kwargs)
             if kwargs.get("cfg") is not None or \
                     any(isinstance(a, TroopConfig) for a in args):
                 return fn(*args, **kwargs)

@@ -1,0 +1,281 @@
+"""repro.obs.profiler: the zero-cost dispatch seam, record correctness,
+phase program memoization/replay, reset() safety, timed mode, tracer
+feeds, and the measured-vs-modeled decode-step dispatch audit
+(bf16 + int8 KV, attention-only and MoE archs)."""
+import dis
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.configs import get_config, reduced
+from repro.kernels import ops as KO
+from repro.models import RuntimeConfig, build_model
+from repro.models import modules as M
+from repro.obs.energy import AccountEntry
+from repro.serve.kvcache import PagedBackend
+from repro.serve.scheduler import Request, ServingEngine
+from repro.serve.step import make_prefill_step, make_serve_step
+from repro.tune import REGISTRY
+from repro.tune import registry as _reg
+
+
+def setup():
+    cfg = reduced(get_config("qwen1.5-0.5b"),
+                  num_layers=2, d_model=64, d_ff=128, vocab_size=128,
+                  num_heads=2, num_kv_heads=2, head_dim=32)
+    model = build_model(cfg, RuntimeConfig(remat="none"))
+    params = M.unbox(model.init(jax.random.PRNGKey(0)))
+    return cfg, model, params
+
+
+def make_engine(model, params, *, profiler=None, **kw):
+    kw.setdefault("slots", 3)
+    kw.setdefault("cache_len", 64)
+    return ServingEngine(
+        model, prefill_step=make_prefill_step(model),
+        serve_step=make_serve_step(model), params=params,
+        backend=PagedBackend(page_size=16), chunked_prefill=True,
+        chunk_size=16, prefix_cache=True, profiler=profiler, **kw)
+
+
+def gemv_args():
+    k = jax.random.split(jax.random.PRNGKey(0), 2)
+    A = jax.random.normal(k[0], (16, 8), jnp.bfloat16)
+    x = jax.random.normal(k[1], (8,), jnp.bfloat16)
+    return A, x
+
+
+# --------------------------------------------------------------------------
+# the zero-cost seam
+# --------------------------------------------------------------------------
+def test_disabled_path_is_one_attr_check():
+    """With no profiler installed the dispatch wrapper pays exactly one
+    global load of PROFILER — the bytecode proves the seam stays cheap."""
+    loads = [ins for ins in dis.Bytecode(KO.gemv)
+             if ins.argval == "PROFILER"]
+    assert len(loads) == 1, dis.Bytecode(KO.gemv).dis()
+
+
+def test_install_uninstall_semantics():
+    a, b = obs.DispatchProfiler(), obs.DispatchProfiler()
+    assert _reg.PROFILER is None
+    a.install()
+    assert _reg.PROFILER is a
+    b.uninstall()                       # someone else's: no-op
+    assert _reg.PROFILER is a
+    a.uninstall()
+    assert _reg.PROFILER is None
+    with b:
+        assert _reg.PROFILER is b
+    assert _reg.PROFILER is None
+
+
+def test_dispatch_value_identical_and_record_modeled_costs():
+    A, x = gemv_args()
+    want = np.asarray(KO.gemv(A, x))
+    prof = obs.DispatchProfiler()
+    with prof:
+        got = np.asarray(KO.gemv(A, x))
+    assert got.tobytes() == want.tobytes()
+    (rec,) = prof.records
+    assert rec.kernel == "gemv"
+    assert rec.modeled_bytes == float(REGISTRY["gemv"].bytes(A, x))
+    assert rec.modeled_flops == float(REGISTRY["gemv"].flops(A, x))
+    assert rec.cfg is not None          # the tuned/heuristic config
+    assert rec.phase == ""              # unphased -> aggregated directly
+    row = prof.phase_rows()[0]
+    assert (row["phase"], row["dispatches"]) == ("", 1)
+
+
+def test_explicit_config_wins():
+    from repro.core.troop import TroopConfig
+    A, x = gemv_args()
+    cfg = TroopConfig(streams=1, unroll=1)
+    prof = obs.DispatchProfiler()
+    with prof:
+        KO.gemv(A, x, cfg=cfg)
+    assert prof.records[0].cfg is cfg
+
+
+def test_engine_token_streams_bit_identical_with_profiler():
+    """Installing the profiler must not perturb serving output."""
+    cfg, model, params = setup()
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(1, 100, int(n)) for n in (5, 9, 21, 13)]
+
+    def run(profiler):
+        eng = make_engine(model, params, profiler=profiler)
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=5)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        if profiler is not None:
+            with profiler:
+                eng.run_until_drained()
+        else:
+            eng.run_until_drained()
+        return [list(r.out) for r in reqs]
+
+    base = run(None)
+    prof = obs.DispatchProfiler()
+    assert run(prof) == base
+    assert _reg.PROFILER is None        # seam restored
+
+
+# --------------------------------------------------------------------------
+# phases: programs, replay, reset
+# --------------------------------------------------------------------------
+def test_phase_program_capture_and_replay():
+    A, x = gemv_args()
+    prof = obs.DispatchProfiler()
+    with prof:
+        with prof.phase("step"):        # occurrence 1: traces the program
+            KO.gemv(A, x)
+            KO.gemv(A, x)
+        with prof.phase("step"):        # occurrence 2: cache hit, replayed
+            pass
+    (row,) = prof.phase_rows()
+    assert row["phase"] == "step"
+    assert row["occurrences"] == 2
+    assert row["dispatches"] == 4       # 2 traced + 2 replayed
+    per = 2 * float(REGISTRY["gemv"].bytes(A, x))
+    assert row["modeled_bytes"] == int(2 * per)
+    assert prof.summary()["totals"]["dispatches"] == 4
+
+
+def test_phase_keys_and_tp_labels():
+    A, x = gemv_args()
+    prof = obs.DispatchProfiler()
+    with prof:
+        with prof.phase("prefill", key=16):
+            KO.gemv(A, x)
+        with prof.phase("prefill", key=32):
+            pass                        # different key: no program yet
+        with prof.phase("collective", devices=4):
+            pass
+    rows = {r["phase"]: r for r in prof.phase_rows()}
+    assert rows["prefill"]["occurrences"] == 2
+    assert rows["prefill"]["dispatches"] == 1
+    assert "collective@tp4" in rows
+
+
+def test_seed_phase_is_pinned():
+    A, x = gemv_args()
+    sds = jax.ShapeDtypeStruct
+    entries = [AccountEntry("gemv", (sds((16, 8), jnp.bfloat16),
+                                     sds((8,), jnp.bfloat16)), 3, "mlp")]
+    prof = obs.DispatchProfiler()
+    prof.seed_phase("decode", entries)
+    with prof:
+        with prof.phase("decode"):
+            KO.gemv(A, x)               # must NOT overwrite the pinned prog
+        with prof.phase("decode"):
+            pass
+    (row,) = prof.phase_rows()
+    assert row["occurrences"] == 2
+    assert row["dispatches"] == 6       # 3 seeded calls x 2 occurrences
+
+
+def test_reset_mid_phase_is_safe():
+    A, x = gemv_args()
+    prof = obs.DispatchProfiler()
+    with prof:
+        with prof.phase("step"):
+            KO.gemv(A, x)
+            prof.reset()                # aggregates cleared mid-flight
+            KO.gemv(A, x)
+    (row,) = prof.phase_rows()
+    assert row["occurrences"] == 1
+    assert row["dispatches"] == 1       # only the post-reset dispatch
+    assert prof._stack == []
+    prof.reset()
+    assert prof.phase_rows() == []
+    with prof:                          # programs survive reset: replay
+        with prof.phase("step"):
+            pass
+    assert prof.phase_rows()[0]["dispatches"] == 1
+
+
+def test_timed_mode_records_wall():
+    A, x = gemv_args()
+    prof = obs.DispatchProfiler(timed=True)
+    with prof:
+        KO.gemv(A, x)
+    assert prof.records[0].timed_s > 0
+    (row,) = prof.kernel_rows()
+    assert row["timed_calls"] == 1
+    assert row["achieved_bytes_per_s"] > 0
+    assert 0 < row["fraction_of_roofline"] < 1
+
+
+def test_add_wall_and_tracer_feed():
+    A, x = gemv_args()
+    tr = obs.Tracer()
+    prof = obs.DispatchProfiler(tracer=tr)
+    with prof:
+        with prof.phase("decode"):
+            KO.gemv(A, x)
+    prof.add_wall("decode", 0.25)
+    assert prof.phase_rows()[0]["wall_s"] >= 0.25
+    names = [e[2] for e in tr.events()]
+    assert "kernel:gemv" in names
+    assert "streamed_bytes" in names and "dispatches" in names
+    ev = tr.events("streamed_bytes")[-1]
+    assert ev[6]["value"] == int(REGISTRY["gemv"].bytes(A, x))
+
+
+# --------------------------------------------------------------------------
+# tracer dropped-count exports
+# --------------------------------------------------------------------------
+def test_tracer_dropped_surfaced_in_exports(tmp_path):
+    tr = obs.Tracer(capacity=4)
+    for i in range(9):
+        tr.instant("tick", "queue", rid=i)
+    assert tr.dropped == 5
+    p = str(tmp_path / "t.jsonl")
+    tr.to_jsonl(p)
+    last = json.loads(open(p).read().splitlines()[-1])
+    assert last == {"ph": "M", "name": "dropped_events", "dropped": 5,
+                    "capacity": 4}
+    doc = tr.chrome_events()
+    meta = [e for e in doc if e["ph"] == "M"
+            and e["name"] == "dropped_events"]
+    assert meta and meta[0]["args"]["dropped"] == 5
+    ctr = [e for e in doc if e["ph"] == "C"
+           and e["name"] == "dropped_events"]
+    assert ctr and ctr[0]["args"]["value"] == 5
+
+
+# --------------------------------------------------------------------------
+# the dispatch audit: measured multiset == decode_step_account
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "qwen2-moe-a2.7b"])
+@pytest.mark.parametrize("kv_dtype", ["bfloat16", "int8"])
+def test_audit_decode_step_exact(arch, kv_dtype):
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg, RuntimeConfig(
+        remat="none", kv_cache_dtype="int8" if kv_dtype == "int8" else ""))
+    a = obs.audit_decode_step(model, cache_len=64, page_size=16)
+    assert a.ok, a.report()
+    assert a.kv_dtype == kv_dtype
+    assert a.dispatches == sum(a.expected.values())
+    assert a.measured_bytes == a.expected_bytes > 0
+
+
+def test_audit_rejects_quantized_weights():
+    cfg = reduced(get_config("qwen1.5-0.5b"))
+    model = build_model(cfg, RuntimeConfig(remat="none",
+                                           quantize_weights="int8"))
+    with pytest.raises(ValueError, match="not.*auditable|auditable"):
+        obs.audit_decode_step(model)
+
+
+def test_kernel_routing_restored_on_exit():
+    assert not M.kernel_routed()
+    with M.kernel_routing():
+        assert M.kernel_routed()
+    assert not M.kernel_routed()
