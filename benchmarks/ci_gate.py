@@ -59,6 +59,11 @@ GATES = [
     ("BENCH_serve.json", "engines[*].kv_bytes_streamed", "exact", 0),
     ("BENCH_serve.json", "engines[*].kv_bytes_streamed_per_device",
      "exact", 0),
+    # speculative row: a same-arch seed-0 draft accepts 100% of greedy
+    # proposals, so acceptance and tokens-per-target-pass are exact — any
+    # drift means the draft/verify/rollback machinery changed behavior.
+    ("BENCH_serve.json", "engines[*].acceptance_rate", "exact", 0),
+    ("BENCH_serve.json", "engines[*].tokens_per_target_pass", "exact", 0),
     ("BENCH_serve.json", "decode_kernels[*].roofline_us", "rel_band", 0.05),
     ("BENCH_serve.json", "decode_kernels[*].measured_us", "info", 0),
     # profiled engine row: per-phase dispatch counts + modeled bytes are

@@ -45,26 +45,27 @@ MODES = ("paged", "chunked", "chunked+prefix")
 
 
 def build_engine(arch: str, mode: str, *, slots, cache_len, page_size,
-                 chunk_size, tracer=None, profiler=None, tp=1):
-    import jax
+                 chunk_size, tracer=None, profiler=None, tp=1,
+                 speculate_k=0):
+    """(arch, mode) -> (model cfg, engine) through ``repro.serve``'s one
+    factory.  ``speculate_k`` > 0 adds a same-arch draft (seed-0 params on
+    both sides -> 100% greedy acceptance, so the speculative metrics are
+    deterministic and gateable)."""
     from repro.configs import get_config, reduced
-    from repro.models import RuntimeConfig, build_model
-    from repro.models import modules as M
-    from repro.serve.kvcache import PagedBackend
-    from repro.serve.scheduler import ServingEngine
-    from repro.serve.step import make_prefill_step, make_serve_step
+    from repro.serve import EngineConfig
+    from repro.serve import build_engine as _factory
 
     cfg = reduced(get_config(arch))
-    model = build_model(cfg, RuntimeConfig(remat="none"))
-    params = M.unbox(model.init(jax.random.PRNGKey(0)))
-    eng = ServingEngine(
-        model, slots=slots, cache_len=cache_len,
-        prefill_step=make_prefill_step(model),
-        serve_step=make_serve_step(model), params=params,
-        backend=PagedBackend(page_size=page_size),
-        chunked_prefill=mode.startswith("chunked"), chunk_size=chunk_size,
-        prefix_cache=(mode == "chunked+prefix"), tracer=tracer,
-        profiler=profiler, tp=tp)
+    base = mode.split("/")[0]
+    engine_cfg = EngineConfig(
+        slots=slots, cache_len=cache_len, backend="paged",
+        page_size=page_size,
+        chunked_prefill=base.startswith("chunked") or speculate_k > 0,
+        chunk_size=chunk_size, prefix_cache=(base == "chunked+prefix"),
+        speculate_k=speculate_k, tp=tp)
+    draft = reduced(get_config(arch)) if speculate_k else None
+    eng = _factory(cfg, engine_cfg, draft=draft, tracer=tracer,
+                   profiler=profiler)
     return cfg, eng
 
 
@@ -140,6 +141,12 @@ def energy_rows(arch: str, *, slots, cache_len, page_size):
         rows.append(engine_energy_row(
             cfg, slots=slots, cache_len=cache_len, page_size=page_size,
             kv_dtype=kv_dtype, weights=weights))
+    # the TROOP lever as a bytes/token ratio: same target stream amortized
+    # over slots * (1 + k * acceptance) tokens per verify pass
+    rows.append(engine_energy_row(
+        cfg, slots=slots, cache_len=cache_len, page_size=page_size,
+        kv_dtype="bfloat16", weights="bfloat16", speculate_k=3,
+        acceptance=1.0))
     return rows
 
 
@@ -201,6 +208,13 @@ def main(argv=None):
                          cache_len=args.cache_len,
                          page_size=args.page_size)
     for e in energy:
+        if e.get("speculate_k"):
+            print(f"energy bf16/spec-k{e['speculate_k']} "
+                  f"{e['bytes_per_token']:>8} B/tok  "
+                  f"{e['joules_per_token']*1e6:>8.3f} uJ/tok  "
+                  f"{e['tokens_per_s_per_w']:>10.0f} tok/s/W  "
+                  f"roofline frac {e['fraction_of_roofline']:.3f}")
+            continue
         print(f"energy {e['kv_dtype']:<9} {e['bytes_per_token']:>8} B/tok  "
               f"{e['joules_per_token']*1e6:>8.3f} uJ/tok  "
               f"{e['tokens_per_s_per_w']:>10.0f} tok/s/W  "

@@ -173,28 +173,17 @@ def bench_paged_decode(*, B, S, page, iters):
 
 def bench_engine_int8(*, slots, cache_len, requests, max_new):
     """End-to-end: bf16-paged vs int8-paged engine tokens/s (greedy)."""
-    import jax
     import numpy as np
     from repro.configs import get_config, reduced
-    from repro.models import RuntimeConfig, build_model
-    from repro.models import modules as M
-    from repro.serve.kvcache import PagedBackend
-    from repro.serve.scheduler import Request, ServingEngine
-    from repro.serve.step import make_prefill_step, make_serve_step
+    from repro.serve import EngineConfig, build_engine
+    from repro.serve.scheduler import Request
 
     cfg = reduced(get_config("qwen1.5-0.5b"))
     out = []
-    for tag, rt, be in (
-            ("paged-bf16", RuntimeConfig(remat="none"), PagedBackend()),
-            ("paged-int8",
-             RuntimeConfig(remat="none", kv_cache_dtype="int8"),
-             PagedBackend(page_size=32, kv_dtype="int8"))):
-        model = build_model(cfg, rt)
-        params = M.unbox(model.init(jax.random.PRNGKey(0)))
-        eng = ServingEngine(
-            model, slots=slots, cache_len=cache_len,
-            prefill_step=make_prefill_step(model),
-            serve_step=make_serve_step(model), params=params, backend=be)
+    for tag, kv in (("paged-bf16", ""), ("paged-int8", "int8")):
+        eng = build_engine(cfg, EngineConfig(
+            slots=slots, cache_len=cache_len, backend="paged",
+            kv_cache_dtype=kv))
         rng = np.random.default_rng(0)
         for i in range(requests):
             eng.submit(Request(

@@ -2,7 +2,10 @@
 
 Runs the continuous-batching engine end to end in four modes — dense,
 paged, chunked prefill, chunked + prefix cache (the last on a shared
-system-prompt trace) — on a reduced arch and reports decode steps/s,
+system-prompt trace) — plus a speculative row (``speculative/k3``: a
+same-arch seed-0 draft gives 100% greedy acceptance, so
+``tokens_per_target_pass`` is deterministic, asserted > 1 and
+exact-gated) on a reduced arch and reports decode steps/s,
 tokens/s, per-request TTFT / decode rate, prefill-compile counts and
 prefix-hit rates; then times the decode/prefill attention kernels (dense
 and paged layouts) at the serving shapes and scores each as a measured
@@ -61,32 +64,28 @@ def make_trace(cfg, rng, requests, max_new, *, shared_prefix=0):
 
 
 def bench_engine(arch: str, mode: str, *, slots, cache_len, requests,
-                 max_new, page_size, chunk_size=16, tp=1, profiler=None):
-    import jax
+                 max_new, page_size, chunk_size=16, tp=1, profiler=None,
+                 speculate_k=0):
     import numpy as np
     from repro.configs import get_config, reduced
-    from repro.models import RuntimeConfig, build_model
-    from repro.models import modules as M
-    from repro.serve.kvcache import PagedBackend
-    from repro.serve.scheduler import ServingEngine
-    from repro.serve.step import make_prefill_step, make_serve_step
+    from repro.serve import EngineConfig, build_engine
 
     cfg = reduced(get_config(arch))
-    model = build_model(cfg, RuntimeConfig(remat="none"))
-    params = M.unbox(model.init(jax.random.PRNGKey(0)))
     base = mode.split("/")[0]        # "chunked+prefix/tp4" -> "chunked+prefix"
-    be = "dense" if base == "dense" else PagedBackend(page_size=page_size)
-    chunked = base.startswith("chunked")
-    prefix = base == "chunked+prefix"
-    eng = ServingEngine(
-        model, slots=slots, cache_len=cache_len,
-        prefill_step=make_prefill_step(model),
-        serve_step=make_serve_step(model), params=params, backend=be,
-        chunked_prefill=chunked, chunk_size=chunk_size,
-        prefix_cache=prefix, profiler=profiler, tp=tp)
+    engine_cfg = EngineConfig(
+        slots=slots, cache_len=cache_len,
+        backend="dense" if base == "dense" else "paged",
+        page_size=page_size,
+        chunked_prefill=base.startswith("chunked") or speculate_k > 0,
+        chunk_size=chunk_size, prefix_cache=(base == "chunked+prefix"),
+        speculate_k=speculate_k, tp=tp)
+    # same-arch draft with the factory's seed-0 params on both sides ->
+    # 100% greedy acceptance: the speculative row is deterministic
+    draft = reduced(get_config(arch)) if speculate_k else None
+    eng = build_engine(cfg, engine_cfg, draft=draft, profiler=profiler)
     rng = np.random.default_rng(0)
     reqs = make_trace(cfg, rng, requests, max_new,
-                      shared_prefix=24 if prefix else 0)
+                      shared_prefix=24 if base == "chunked+prefix" else 0)
     for r in reqs:
         eng.submit(r)
     t0 = time.perf_counter()
@@ -124,7 +123,7 @@ def bench_profiled_engine(arch: str, *, slots, cache_len, requests,
 
 
 def bench_soak(arch: str, *, requests, slots, cache_len, page_size,
-               chunk_size=16, tp=1, profile_trace=None):
+               chunk_size=16, tp=1, profile_trace=None, speculate_k=0):
     """N-request heavy-tail soak through the chunked+prefix engine under
     the deterministic step clock (``repro.obs``): percentile latency rows
     (engine cycles, gateable; wall seconds, info) plus queue-depth /
@@ -147,10 +146,11 @@ def bench_soak(arch: str, *, requests, slots, cache_len, page_size,
             reduced(get_config(arch)), slots=slots, cache_len=cache_len,
             page_size=page_size))
         prof.install()
-    cfg, eng = build_engine(arch, "chunked+prefix", slots=slots,
+    base = "speculative" if speculate_k else "chunked+prefix"
+    cfg, eng = build_engine(arch, base, slots=slots,
                             cache_len=cache_len, page_size=page_size,
                             chunk_size=chunk_size, tracer=tracer,
-                            profiler=prof, tp=tp)
+                            profiler=prof, tp=tp, speculate_k=speculate_k)
     trace = obs.generate("heavy_tail", requests=requests, seed=0,
                          prompt_len=(4, min(48, cache_len - 18)),
                          max_new=(2, 16))
@@ -160,9 +160,15 @@ def bench_soak(arch: str, *, requests, slots, cache_len, page_size,
     finally:
         if prof is not None:
             prof.uninstall()
-    mode = "soak/chunked+prefix" + (f"/tp{tp}" if tp > 1 else "")
+    mode = f"soak/{base}" + (f"/k{speculate_k}" if speculate_k else "") \
+        + (f"/tp{tp}" if tp > 1 else "")
     row = {"arch": cfg.name, "mode": mode,
            "dist": "heavy_tail", **rep.row()}
+    if speculate_k:
+        em = eng.metrics()
+        row.update({k: em[k] for k in
+                    ("speculate_k", "acceptance_rate",
+                     "tokens_per_target_pass", "rollback_pages")})
     if profile_trace:
         tracer.to_chrome(profile_trace)
         print(f"wrote {profile_trace} ({len(tracer.events())} events, "
@@ -274,6 +280,23 @@ def main(argv=None):
               f"ttft {m['ttft_s_mean']*1e3:>7.1f} ms  "
               f"{m['prefill_traces']} prefill compiles{extra}")
 
+    spec_k = 3
+    m = bench_engine(args.arch, f"speculative/k{spec_k}", slots=args.slots,
+                     cache_len=args.cache_len, requests=requests,
+                     max_new=max_new, page_size=args.page_size,
+                     speculate_k=spec_k)
+    # the TROOP claim the row exists to gate: >1 emitted token per target
+    # weight pass (1.0 would mean speculation bought nothing)
+    assert m["tokens_per_target_pass"] > 1.0, (
+        f"speculative engine emitted {m['tokens_per_target_pass']} tokens "
+        f"per target pass (expected > 1 at same-arch 100% acceptance)")
+    engines.append(m)
+    print(f"{m['mode']:<15} {m['decode_steps']:>4} steps  "
+          f"{m['tokens_per_s']:>8.2f} tok/s  "
+          f"accept {m['acceptance_rate']:.2f}  "
+          f"tok/pass {m['tokens_per_target_pass']:.2f}  "
+          f"rollback {m['rollback_pages']} pages")
+
     for tp in (1, 2, 4):
         mode = f"chunked+prefix/tp{tp}"
         m = bench_engine(args.arch, mode, slots=args.slots,
@@ -296,7 +319,7 @@ def main(argv=None):
           f"decode {pdec.get('dispatches', 0)} dispatches  "
           f"{pdec.get('modeled_bytes', 0):,} B modeled")
 
-    soak = soak_tp = None
+    soak = soak_tp = soak_spec = None
     if args.soak:
         soak = bench_soak(args.arch, requests=args.soak, slots=args.slots,
                           cache_len=args.cache_len,
@@ -307,6 +330,16 @@ def main(argv=None):
               f"{soak['ttft_steps_p95']:.1f}/{soak['ttft_steps_p99']:.1f}  "
               f"queue max {soak['queue_depth_max']}  "
               f"drained={soak['all_finished']}")
+        soak_spec = bench_soak(args.arch, requests=args.soak,
+                               slots=args.slots, cache_len=args.cache_len,
+                               page_size=args.page_size,
+                               speculate_k=spec_k)
+        print(f"soak/spec({args.soak:>3}) "
+              f"ttft_steps p50/p95 {soak_spec['ttft_steps_p50']:.1f}/"
+              f"{soak_spec['ttft_steps_p95']:.1f}  "
+              f"accept {soak_spec['acceptance_rate']:.2f}  "
+              f"tok/pass {soak_spec['tokens_per_target_pass']:.2f}  "
+              f"drained={soak_spec['all_finished']}")
         if args.soak_tp > 1:
             soak_tp = bench_soak(args.arch, requests=args.soak,
                                  slots=args.slots, cache_len=args.cache_len,
@@ -334,6 +367,8 @@ def main(argv=None):
         payload["soak"] = soak
     if soak_tp is not None:
         payload["soak_tp"] = soak_tp
+    if soak_spec is not None:
+        payload["soak_spec"] = soak_spec
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=1, default=str)
     print(f"wrote {args.out}")

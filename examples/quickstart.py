@@ -15,8 +15,7 @@ from repro.configs import get_config, reduced
 from repro.data.pipeline import DataConfig
 from repro.models import RuntimeConfig, build_model
 from repro.optim import OptConfig
-from repro.serve.scheduler import Request, ServingEngine
-from repro.serve.step import make_prefill_step, make_serve_step
+from repro.serve import EngineConfig, Request, build_engine
 from repro.train.trainer import Trainer, TrainerConfig
 
 
@@ -41,10 +40,8 @@ def main():
     params, _, hist = trainer.run()
     print("loss:", " -> ".join(f"{m['loss']:.3f}" for m in hist))
 
-    engine = ServingEngine(
-        model, slots=2, cache_len=48,
-        prefill_step=make_prefill_step(model),
-        serve_step=make_serve_step(model), params=params)
+    engine = build_engine(model, EngineConfig(slots=2, cache_len=48),
+                          params=params)
     for i in range(3):
         engine.submit(Request(rid=i, prompt=np.arange(1, 6 + i) % 500,
                               max_new_tokens=8))

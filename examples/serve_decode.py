@@ -15,8 +15,7 @@ import numpy as np
 from repro.configs import get_config, reduced
 from repro.models import RuntimeConfig, build_model
 from repro.models import modules as M
-from repro.serve.scheduler import Request, ServingEngine
-from repro.serve.step import make_prefill_step, make_serve_step
+from repro.serve import EngineConfig, Request, build_engine
 
 
 def main():
@@ -34,11 +33,10 @@ def main():
     print(f"serving {cfg.name}: params={cfg.param_count():,} "
           f"slots={args.slots} backend={args.backend}")
 
-    engine = ServingEngine(
-        model, slots=args.slots, cache_len=128,
-        prefill_step=make_prefill_step(model),
-        serve_step=make_serve_step(model), params=params,
-        backend=args.backend)
+    engine = build_engine(
+        model, EngineConfig(slots=args.slots, cache_len=128,
+                            backend=args.backend),
+        params=params)
 
     rng = np.random.default_rng(0)
     for i in range(args.requests):

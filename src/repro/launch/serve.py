@@ -46,6 +46,15 @@ def main():
                     help="share prompt-prefix KV pages across requests "
                          "(radix index + refcounts + copy-on-write; "
                          "requires --chunked-prefill)")
+    ap.add_argument("--draft-arch", default=None, metavar="ID",
+                    help="draft model for speculative decoding (a registry "
+                         "arch id; reduced under --smoke like the target); "
+                         "requires --speculate-k")
+    ap.add_argument("--speculate-k", type=int, default=0,
+                    help="speculative lookahead: draft K tokens per cycle "
+                         "and verify K+1 positions in one target pass "
+                         "(requires --draft-arch and --chunked-prefill; "
+                         "greedy output is token-identical to K=0)")
     ap.add_argument("--page-size", type=int, default=None,
                     help="tokens per page (default: the layout granule — "
                          "16 for bf16 pools, 32 for --kv-cache-dtype int8)")
@@ -100,10 +109,8 @@ def main():
     from repro.configs import get_config, reduced
     from repro.models import RuntimeConfig, build_model
     from repro.models import modules as M
-    from repro.serve.kvcache import PagedBackend
-    from repro.serve.scheduler import Request, ServingEngine
-    from repro.serve.step import (make_prefill_step, make_serve_step,
-                                  tuned_kernel_configs)
+    from repro.serve import EngineConfig, build_engine, resolve_page_size
+    from repro.serve.scheduler import Request
 
     if args.kernel_decode and args.backend != "paged":
         raise SystemExit("--kernel-decode requires --backend paged "
@@ -114,13 +121,43 @@ def main():
     if args.prefix_cache and not args.chunked_prefill:
         raise SystemExit("--prefix-cache requires --chunked-prefill (a "
                          "prefix hit resumes prefill mid-prompt)")
+    if args.draft_arch is not None and not args.speculate_k:
+        raise SystemExit("--draft-arch requires --speculate-k > 0 (the "
+                         "draft only runs when speculation is on)")
+    if args.speculate_k:
+        if args.draft_arch is None:
+            raise SystemExit("--speculate-k requires --draft-arch (the "
+                             "draft model that proposes the lookahead)")
+        if not args.chunked_prefill:
+            raise SystemExit("--speculate-k requires --chunked-prefill "
+                             "(the verify pass reuses the chunked slab "
+                             "attention path)")
+        if args.tp > 1:
+            raise SystemExit("--speculate-k is single-device for now "
+                             "(drop --tp)")
     kv_int8 = args.kv_cache_dtype == "int8"
-    if args.page_size is None:
-        from repro.quant.tensor import granule
-        args.page_size = granule() if kv_int8 else 16
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduced(cfg)
+    if args.speculate_k and any(m != "attn" for (m, _) in cfg.layer_kinds()):
+        raise SystemExit(f"--speculate-k supports causal-attention decoder "
+                         f"archs only (the verify slab goes through the "
+                         f"chunked attention path); {cfg.name} mixes in "
+                         f"other mixer kinds")
+    engine_cfg = EngineConfig(
+        slots=args.slots, cache_len=args.cache_len,
+        backend=args.backend, page_size=args.page_size,
+        num_pages=args.num_pages,
+        kv_cache_dtype="int8" if kv_int8 else "",
+        chunked_prefill=args.chunked_prefill, chunk_size=args.chunk_size,
+        prefix_cache=args.prefix_cache, temperature=args.temperature,
+        draft_arch=args.draft_arch, speculate_k=args.speculate_k,
+        tp=args.tp, tp_mode=args.tp_mode,
+        async_dispatch=not args.sync_dispatch,
+        kernel_decode=args.kernel_decode,
+        quantize_weights=args.quantize_weights,
+        quantize_group_size=args.quantize_group_size).validate()
+    args.page_size = resolve_page_size(engine_cfg)
     model = build_model(cfg, RuntimeConfig(
         remat="none", paged_kernel_decode=args.kernel_decode,
         quantize_weights=args.quantize_weights,
@@ -142,6 +179,9 @@ def main():
               f"{qs['quantized_bytes']:,} B (was "
               f"{qs['quantized_fp32_bytes']:,} B fp32); "
               f"{qs['raw_bytes']:,} B left raw")
+    draft = None
+    if args.speculate_k and args.smoke:
+        draft = reduced(get_config(args.draft_arch))
 
     extras = None
     if cfg.encoder_decoder or cfg.frontend == "vision":
@@ -151,14 +191,6 @@ def main():
         extras = lambda req: {"frontend": 0.1 * jnp.ones(
             (1, F, cfg.d_model), jnp.bfloat16)}
 
-    backend = PagedBackend(page_size=args.page_size,
-                           num_pages=args.num_pages,
-                           kv_dtype="int8" if kv_int8 else None) \
-        if args.backend == "paged" else "dense"
-    configs = tuned_kernel_configs(cfg, args.slots, args.cache_len,
-                                   page_size=args.page_size,
-                                   num_pages=args.num_pages,
-                                   chunk_size=args.chunk_size)
     tracer = None
     if args.trace_out:
         from repro.obs import Tracer
@@ -182,16 +214,9 @@ def main():
             print(f"profile: decode account unavailable ({e}); decode "
                   f"phase reports occurrences/wall only")
         profiler.install()
-    engine = ServingEngine(
-        model, slots=args.slots, cache_len=args.cache_len,
-        prefill_step=make_prefill_step(model),
-        serve_step=make_serve_step(model, temperature=args.temperature,
-                                   troop_configs=configs),
-        params=params, prefill_extras=extras, backend=backend,
-        chunked_prefill=args.chunked_prefill, chunk_size=args.chunk_size,
-        prefix_cache=args.prefix_cache, tracer=tracer, profiler=profiler,
-        tp=args.tp, tp_mode=args.tp_mode,
-        async_dispatch=not args.sync_dispatch)
+    engine = build_engine(model, engine_cfg, params=params, draft=draft,
+                          prefill_extras=extras, tracer=tracer,
+                          profiler=profiler)
     rng = np.random.default_rng(0)
     system_prompt = rng.integers(1, min(cfg.vocab_size, 1000), 24) \
         if args.prefix_cache else None

@@ -42,6 +42,11 @@ class Model:
         """One chunked-prefill slab (see transformer.chunk_prefill_step)."""
         return T.chunk_prefill_step(params, self.cfg, self.rt, batch, caches)
 
+    def verify_step(self, params, batch, caches):
+        """Speculative verify slab: all-row logits (see
+        transformer.verify_step)."""
+        return T.verify_step(params, self.cfg, self.rt, batch, caches)
+
     def init_caches(self, B, S, dtype=None, page_spec=None,
                     chunk_stage: int = 0):
         """Decode caches; ``page_spec`` (serve.kvcache.PageSpec) switches

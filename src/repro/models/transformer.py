@@ -170,14 +170,22 @@ def _apply_sublayer(p, cfg, rt, x, *, mixer, ffn, positions, state, dtype,
             raise ValueError(
                 "chunked prefill supports causal-attention archs only "
                 f"(got mixer={mixer!r}, attention={cfg.attention!r})")
+        # verify slabs (speculative decoding) bypass the bf16 chunk stage:
+        # they quantize-then-gather through the pools like plain decode,
+        # which is exactly what keeps verify bit-identical to decode
+        stage = None if chunk.get("no_stage") else state.get("stage")
         o, c, stg = A.apply_attention_chunk_paged(
             p["mixer"], cfg, h, state["mixer"], chunk["offset"],
             chunk["valid"], chunk["stage_base"], dtype, block_tables=pages,
-            stage=state.get("stage"),
+            stage=stage,
             use_kernel=rt.paged_kernel_decode or M.kernel_routed())
         out_state["mixer"] = c
         if stg is not None:
             out_state["stage"] = stg
+        elif "stage" in state:
+            # keep the cache tree structure stable (jit donation) when the
+            # stage buffer exists but this pass bypassed it
+            out_state["stage"] = state["stage"]
         x = x + o
         h = M.apply_norm(p["norm2"], x, cfg.norm, cfg.norm_eps)
         if ffn == "mlp":
@@ -487,6 +495,37 @@ def chunk_prefill_step(params, cfg, rt, batch, caches):
     last = jnp.take_along_axis(x, (valid - 1)[:, None, None], axis=1)
     logits = readout(params, cfg, last, dtype)          # (B, 1, V)
     return logits[:, 0], new_caches
+
+
+def verify_step(params, cfg, rt, batch, caches):
+    """Score a speculative window: a chunked slab keeping ALL row logits.
+
+    batch: tokens (B, W) = [last emitted token, d_1..d_k] right-padded;
+    offset (B,) the last emitted token's position; valid (B,) = k_eff + 1
+    real rows (0 disables a row); block_tables (B, nblk).  Returns
+    (logits (B, W, V), new caches): row i conditions on everything up to
+    and including the first i draft tokens, i.e. row i scores position
+    offset + i + 1.  KV rows offset..offset+valid-1 are written through
+    the block table exactly like chunked prefill — int8 pools get the
+    same quantize-then-gather treatment as decode, so verify logits match
+    decode logits bit-for-bit — but the bf16 chunk stage is bypassed
+    (``no_stage``): rejected rows are rewritten by the next verify pass
+    (whose offset lands exactly on the first rejected row) before anyone
+    can attend over them.
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    groups = plan_groups(cfg)
+    offset, valid = batch["offset"], batch["valid"]
+    x = embed_inputs(params, cfg, batch, dtype, offset=offset)
+    C = x.shape[1]
+    positions = offset[:, None] + jnp.arange(C)[None, :]
+    chunk = {"offset": offset, "valid": valid,
+             "stage_base": jnp.zeros_like(offset), "no_stage": True}
+    x, new_caches, _ = _run_groups(
+        params["groups"], groups, cfg, rt, x, positions=positions,
+        states=caches, dtype=dtype, chunk=chunk,
+        pages=batch.get("block_tables"))
+    return readout(params, cfg, x, dtype), new_caches
 
 
 def decode_step(params, cfg, rt, batch, caches):

@@ -186,7 +186,7 @@ class StepReport:
     flop_beats: float
     cycles: float
     energy_pj: float
-    tokens_per_step: int
+    tokens_per_step: float     # fractional under speculation (k * acceptance)
     fraction_of_roofline: float
     per_kernel: List[Dict] = field(default_factory=list)
 
@@ -206,7 +206,7 @@ class StepReport:
             "modeled_bytes_per_step": int(self.bytes),
             "modeled_flops_per_step": int(self.flops),
             "modeled_cycles_per_step": round(self.cycles, 3),
-            "tokens_per_step": self.tokens_per_step,
+            "tokens_per_step": round(self.tokens_per_step, 3),
             "bytes_per_token": int(self.bytes / max(self.tokens_per_step,
                                                     1)),
             "joules_per_token": self.joules_per_token,
@@ -230,7 +230,7 @@ class EnergyModel:
         self.spatz = spatz if spatz is not None else PM.BW2X_TROOP
 
     def step_report(self, entries: List[AccountEntry],
-                    tokens_per_step: int) -> StepReport:
+                    tokens_per_step: float) -> StepReport:
         REG = _registry()
         cfg = self.spatz
         per_kernel: List[Dict] = []
@@ -269,15 +269,30 @@ class EnergyModel:
 
 def engine_energy_row(model_cfg, *, slots: int, cache_len: int,
                       page_size: int = 16, kv_dtype: str = "bfloat16",
-                      weights: str = "bfloat16",
+                      weights: str = "bfloat16", speculate_k: int = 0,
+                      acceptance: float = 1.0,
                       spatz: Optional[PM.SpatzConfig] = None) -> Dict:
-    """One BENCH-ready energy row for an engine config: account + fold."""
+    """One BENCH-ready energy row for an engine config: account + fold.
+
+    ``speculate_k`` > 0 models the speculative verify pass: the same
+    weight/KV traffic as a decode step (at OI~=1 the k extra activation
+    rows are noise next to the streamed weights and pages, and the byte
+    convention counts activations once anyway) amortized over
+    ``slots * (1 + k * acceptance)`` emitted tokens per target pass — the
+    TROOP lever as a bytes/token ratio.  Draft-model traffic is excluded
+    (the draft is a separate, much smaller account; the row prices the
+    target stream only).
+    """
     entries = decode_step_account(
         model_cfg, slots=slots, cache_len=cache_len, page_size=page_size,
         kv_dtype=kv_dtype, weights=weights)
-    rep = EnergyModel(spatz).step_report(entries, tokens_per_step=slots)
+    tokens = slots * (1 + speculate_k * acceptance)
+    rep = EnergyModel(spatz).step_report(entries, tokens_per_step=tokens)
     row = {"arch": model_cfg.name, "kv_dtype": kv_dtype, "weights": weights,
            "slots": slots, "cache_len": cache_len, "page_size": page_size,
            **rep.row()}
+    if speculate_k:
+        row["speculate_k"] = speculate_k
+        row["acceptance"] = acceptance
     row["per_kernel"] = rep.per_kernel
     return row

@@ -1,15 +1,23 @@
+from repro.serve.config import (EngineConfig, LEGACY_ENGINE_KWARGS,
+                                build_engine, resolve_page_size)
 from repro.serve.kvcache import (BlockAllocator, CacheBackend, ChunkStage,
                                  DenseBackend, PagedBackend, PagedKVCache,
                                  PageSpec, PrefixIndex, bucket_length,
-                                 copy_page, make_backend)
+                                 copy_page, make_backend, resolve_kv_dtype)
 from repro.serve.scheduler import Request, ServingEngine, splice_cache
-from repro.serve.step import (make_chunk_step, make_prefill_step,
-                              make_serve_step, sample_keys,
+from repro.serve.speculate import greedy_verify, speculative_sample
+from repro.serve.step import (make_chunk_step, make_draft_step,
+                              make_prefill_step, make_serve_step,
+                              make_verify_step, sample_keys,
                               tuned_kernel_configs)
 
 __all__ = ["Request", "ServingEngine", "splice_cache",
+           "EngineConfig", "LEGACY_ENGINE_KWARGS", "build_engine",
+           "resolve_page_size",
            "BlockAllocator", "CacheBackend", "ChunkStage", "DenseBackend",
            "PagedBackend", "PagedKVCache", "PageSpec", "PrefixIndex",
-           "bucket_length", "copy_page", "make_backend",
-           "make_chunk_step", "make_prefill_step", "make_serve_step",
-           "sample_keys", "tuned_kernel_configs"]
+           "bucket_length", "copy_page", "make_backend", "resolve_kv_dtype",
+           "greedy_verify", "speculative_sample",
+           "make_chunk_step", "make_draft_step", "make_prefill_step",
+           "make_serve_step", "make_verify_step", "sample_keys",
+           "tuned_kernel_configs"]

@@ -1,0 +1,203 @@
+"""Engine construction API: ``EngineConfig`` + ``build_engine``.
+
+``ServingEngine.__init__`` had grown ~20 loose kwargs and three
+construction sites (the launcher, serve_bench, load_bench) each
+hand-rolled an overlapping subset.  ``EngineConfig`` is the one frozen
+record of every scalar engine option — scheduler shape, cache geometry,
+sampling, quantization, tensor parallelism, and the speculative-decoding
+options (which land ONLY here, never as new constructor kwargs) — and
+``build_engine`` is the one factory that turns (arch, EngineConfig) into
+a running engine: model + params + backend + compiled steps + draft pair.
+
+Legacy keyword construction (``ServingEngine(model, slots=..., ...)``)
+keeps working for one release through a shim that emits a
+``DeprecationWarning`` and forwards into an ``EngineConfig``
+(DESIGN.md §10 has the migration table).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+#: constructor kwargs accepted by the legacy ``ServingEngine`` shim —
+#: exactly the EngineConfig fields that used to be loose kwargs.
+LEGACY_ENGINE_KWARGS = frozenset({
+    "slots", "cache_len", "stop_token", "prefill_batch", "min_bucket",
+    "chunked_prefill", "chunk_size", "chunks_per_step", "prefix_cache",
+    "metrics_window", "tp", "tp_mode", "async_dispatch",
+})
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Every scalar option of a serving engine, in one frozen record.
+
+    ``build_engine`` consumes the full config; ``ServingEngine`` consumes
+    the scheduler subset (and ignores the factory-level fields such as
+    ``quantize_weights``, which shape the params before the engine ever
+    sees them).
+    """
+    # scheduler shape
+    slots: int = 4
+    cache_len: int = 128
+    stop_token: int = -1
+    metrics_window: int = 4096
+    # cache backend geometry
+    backend: str = "dense"               # "dense" | "paged"
+    page_size: Optional[int] = None      # None -> layout granule default
+    num_pages: Optional[int] = None      # None -> full occupancy
+    kv_cache_dtype: str = ""             # "" -> model dtype | "int8"
+    # prefill strategy
+    prefill_batch: Optional[int] = None
+    min_bucket: int = 8
+    chunked_prefill: bool = False
+    chunk_size: int = 32
+    chunks_per_step: int = 1
+    prefix_cache: bool = False
+    # sampling
+    temperature: float = 0.0
+    seed: int = 0
+    # speculative decoding (the only home for these options)
+    draft_arch: Optional[str] = None
+    speculate_k: int = 0
+    # tensor parallelism / dispatch
+    tp: int = 1
+    tp_mode: str = "exact"
+    async_dispatch: bool = True
+    # factory-level (resolved before ServingEngine construction)
+    kernel_decode: bool = False
+    quantize_weights: str = "none"       # "none" | "int8" | "int4"
+    quantize_group_size: int = 128
+
+    def validate(self) -> "EngineConfig":
+        """Cross-field coherence; raises ``ValueError`` with the same
+        messages the launcher surfaces at argparse time."""
+        if self.backend not in ("dense", "paged"):
+            raise ValueError(f"backend must be 'dense' or 'paged', "
+                             f"got {self.backend!r}")
+        if self.chunked_prefill and self.backend != "paged":
+            raise ValueError("chunked_prefill requires backend='paged' "
+                             "(slabs write through block tables)")
+        if self.prefix_cache and not self.chunked_prefill:
+            raise ValueError("prefix_cache requires chunked_prefill (a "
+                             "prefix hit resumes prefill mid-prompt)")
+        if self.kernel_decode and self.backend != "paged":
+            raise ValueError("kernel_decode requires backend='paged' (the "
+                             "kernel reads the page pool + block table)")
+        if self.speculate_k < 0:
+            raise ValueError("speculate_k must be >= 0")
+        if self.speculate_k:
+            if not self.chunked_prefill:
+                raise ValueError(
+                    "speculative decoding requires chunked_prefill (the "
+                    "verify pass reuses the chunked slab attention path)")
+            if self.tp != 1:
+                raise ValueError("speculative decoding is single-device "
+                                 "for now (tp must be 1)")
+        if self.draft_arch is not None and not self.speculate_k:
+            raise ValueError("draft_arch is set but speculate_k == 0 — "
+                             "pass speculate_k > 0 to enable speculation")
+        if self.tp < 1:
+            raise ValueError("tp must be >= 1")
+        return self
+
+    @classmethod
+    def from_legacy_kwargs(cls, **kw: Any) -> "EngineConfig":
+        """Build a config from the legacy ``ServingEngine`` kwargs."""
+        unknown = set(kw) - LEGACY_ENGINE_KWARGS
+        if unknown:
+            raise TypeError(
+                f"ServingEngine got unexpected keyword argument(s) "
+                f"{sorted(unknown)} — new options live on EngineConfig "
+                f"(pass config=EngineConfig(...))")
+        return cls(**kw)
+
+
+def resolve_page_size(engine_cfg: EngineConfig) -> int:
+    """The page size the factory allocates with: the explicit value, else
+    the layout granule (32 rows for int8 pools, 16 for bf16)."""
+    if engine_cfg.page_size is not None:
+        return engine_cfg.page_size
+    if engine_cfg.kv_cache_dtype == "int8":
+        from repro.quant.tensor import granule
+        return granule()
+    return 16
+
+
+def build_engine(arch, engine_cfg: Optional[EngineConfig] = None, *,
+                 params=None, draft=None, draft_params=None, tracer=None,
+                 profiler=None, prefill_extras=None):
+    """The one engine factory: ``(arch, EngineConfig) -> ServingEngine``.
+
+    ``arch`` is a registry id (``"qwen1.5-0.5b"``), a model config object
+    (e.g. ``reduced(get_config(...))``), or a prebuilt ``Model`` facade
+    (its RuntimeConfig then wins over the config's runtime fields).
+    ``params`` defaults to a seed-0 init (quantized per the config);
+    ``draft`` optionally overrides ``engine_cfg.draft_arch`` with a config
+    object or prebuilt model (reduced smoke runs pass a reduced draft cfg).
+    """
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import RuntimeConfig, build_model
+    from repro.models import modules as M
+    from repro.serve.kvcache import PagedBackend
+    from repro.serve.scheduler import ServingEngine
+    from repro.serve.step import (make_prefill_step, make_serve_step,
+                                  tuned_kernel_configs)
+
+    cfg_e = (engine_cfg if engine_cfg is not None
+             else EngineConfig()).validate()
+
+    if hasattr(arch, "decode_step"):          # prebuilt Model facade
+        model = arch
+    else:
+        cfg = get_config(arch) if isinstance(arch, str) else arch
+        model = build_model(cfg, RuntimeConfig(
+            remat="none", paged_kernel_decode=cfg_e.kernel_decode,
+            quantize_weights=cfg_e.quantize_weights,
+            kv_cache_dtype=cfg_e.kv_cache_dtype))
+    cfg = model.cfg
+
+    if params is None:
+        params = M.unbox(model.init(jax.random.PRNGKey(0)))
+        if cfg_e.quantize_weights != "none":
+            from repro.quant import quantize_params
+            params = quantize_params(
+                params, bits=8 if cfg_e.quantize_weights == "int8" else 4,
+                group_size=cfg_e.quantize_group_size, tp=cfg_e.tp)
+
+    page_size = resolve_page_size(cfg_e)
+    if cfg_e.backend == "paged":
+        backend = PagedBackend(
+            page_size=page_size, num_pages=cfg_e.num_pages,
+            kv_dtype="int8" if cfg_e.kv_cache_dtype == "int8" else None,
+            prefix_cache=cfg_e.prefix_cache)
+        configs = tuned_kernel_configs(
+            cfg, cfg_e.slots, cfg_e.cache_len, page_size=page_size,
+            num_pages=cfg_e.num_pages, chunk_size=cfg_e.chunk_size)
+    else:
+        backend, configs = "dense", None
+
+    draft_model = None
+    if cfg_e.speculate_k:
+        if draft is None:
+            if cfg_e.draft_arch is None:
+                raise ValueError("speculate_k > 0 needs a draft model: set "
+                                 "EngineConfig.draft_arch or pass draft=")
+            draft = get_config(cfg_e.draft_arch)
+        if hasattr(draft, "decode_step"):
+            draft_model = draft
+        else:
+            draft_model = build_model(draft, RuntimeConfig(remat="none"))
+        if draft_params is None:
+            draft_params = M.unbox(draft_model.init(jax.random.PRNGKey(0)))
+
+    return ServingEngine(
+        model, config=cfg_e, params=params,
+        prefill_step=make_prefill_step(model),
+        serve_step=make_serve_step(model, temperature=cfg_e.temperature,
+                                   seed=cfg_e.seed, troop_configs=configs),
+        backend=backend, prefill_extras=prefill_extras, tracer=tracer,
+        profiler=profiler, draft_model=draft_model,
+        draft_params=draft_params)

@@ -448,6 +448,24 @@ def kv_row_bytes(cfg, kv_dtype: str) -> int:
     return n_attn * per_layer
 
 
+def resolve_kv_dtype(model) -> str:
+    """The ONE resolver of the KV-storage dtype (DESIGN.md §10).
+
+    A model's KV rows are stored as ``rt.kv_dtype()`` — ``kv_cache_dtype``
+    when set, else ``cache_dtype`` — normalized to a dtype name, falling
+    back to the model compute dtype when the model carries no
+    ``RuntimeConfig``.  Resolved ONCE at engine construction and passed
+    down; the per-call-site ``or``-fallbacks that used to re-derive it
+    (and silently disagreed for ``cache_dtype="int8"`` under the paged
+    backend) are gone.
+    """
+    rt = getattr(model, "rt", None)
+    if rt is not None:
+        kd = rt.kv_dtype()
+        return "int8" if kd == "int8" else jnp.dtype(kd).name
+    return jnp.dtype(model.cfg.dtype).name
+
+
 # --------------------------------------------------------------------------
 # Backends
 # --------------------------------------------------------------------------
@@ -567,16 +585,9 @@ class PagedBackend:
         self.tp = 1
         self.kv_shards = 1
 
-    def _resolve_kv_dtype(self, model) -> str:
-        if self.kv_dtype is not None:
-            return self.kv_dtype
-        rt = getattr(model, "rt", None)
-        if rt is not None and getattr(rt, "kv_cache_dtype", "") == "int8":
-            return "int8"
-        return jnp.dtype(model.cfg.dtype).name
-
     def init_caches(self, model, slots: int, cache_len: int):
-        dtype = self._resolve_kv_dtype(model)
+        dtype = self.kv_dtype or resolve_kv_dtype(model)
+        self.kv_dtype = dtype          # resolved once, readable ever after
         self.slots = slots
         self.cache_len = cache_len
         self.spec = PageSpec.for_engine(slots, cache_len, self.page_size,
@@ -628,6 +639,43 @@ class PagedBackend:
         self.block_tables[slot] = NULL_PAGE
         self.block_tables[slot, :len(pages)] = pages
         return True
+
+    def extend(self, slot: int, tokens: int) -> int:
+        """Grow ``slot``'s page run to cover ``tokens`` rows (the
+        speculative lookahead window past the baseline reservation).
+        Returns the rows actually covered — all-or-nothing per allocation,
+        so under pool pressure the run stays as-is and the caller clamps
+        its window to what's covered (never below the baseline, so
+        speculation degrades to plain decode instead of deadlocking)."""
+        have = self._slot_pages.setdefault(slot, [])
+        need = self._pages_needed(tokens) - len(have)
+        if need > 0:
+            fresh = self._alloc_evicting(need)
+            if fresh is not None:
+                self.block_tables[slot, len(have):len(have) + len(fresh)] \
+                    = fresh
+                have.extend(fresh)
+        return min(len(have) * self.spec.page_size, self.cache_len)
+
+    def rollback(self, slot: int, tokens: int) -> int:
+        """Rewind ``slot`` to ``tokens`` rows: free every page past
+        ``ceil(tokens / page_size)`` and NULL its table entry — the
+        rejected speculative suffix.  Trailing pages are private by
+        construction (shared prefix pages sit at the FRONT of the run and
+        a rollback target always covers the whole prompt), and int8 scale
+        pages share the block table, so freeing the index frees both.
+        Returns the number of pages freed."""
+        pages = self._slot_pages.get(slot)
+        if not pages:
+            return 0
+        keep = self._pages_needed(max(tokens, 1))
+        tail = pages[keep:]
+        if not tail:
+            return 0
+        del pages[keep:]
+        self.block_tables[slot, keep:keep + len(tail)] = NULL_PAGE
+        self.allocator.free(tail)
+        return len(tail)
 
     def reserve_with_prefix(self, slot: int, tokens: int,
                             prompt) -> Optional[int]:

@@ -33,6 +33,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import time
+import warnings
 from collections import deque
 from typing import Any, Dict, List, Optional
 
@@ -40,9 +41,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serve import speculate as SP
+from repro.serve.config import EngineConfig
 from repro.serve.kvcache import (CacheBackend, PagedBackend, bucket_length,
                                  copy_page, kv_row_bytes, make_backend,
-                                 splice_row)
+                                 resolve_kv_dtype, splice_row)
 
 
 @dataclasses.dataclass
@@ -109,17 +112,24 @@ class ServingEngine:
     default ``serve.step.make_chunk_step(model)``).
     """
 
-    def __init__(self, model, *, slots: int, cache_len: int,
-                 prefill_step, serve_step, params, stop_token: int = -1,
-                 prefill_extras=None, backend=None,
-                 prefill_batch: Optional[int] = None, min_bucket: int = 8,
-                 chunked_prefill: bool = False, chunk_size: int = 32,
-                 chunks_per_step: int = 1, prefix_cache: bool = False,
-                 chunk_step=None, tracer=None, profiler=None,
-                 metrics_window: int = 4096,
-                 tp: int = 1, tp_mode: str = "exact",
-                 async_dispatch: bool = True):
-        """``prefill_extras(req) -> dict``: extra prefill batch entries
+    def __init__(self, model, *, params,
+                 config: Optional[EngineConfig] = None,
+                 prefill_step=None, serve_step=None,
+                 prefill_extras=None, backend=None, chunk_step=None,
+                 tracer=None, profiler=None,
+                 draft_model=None, draft_params=None, **legacy):
+        """``config``: an ``EngineConfig`` — the primary constructor path
+        (``repro.serve.build_engine`` is the one factory).  The legacy
+        loose keywords (``slots=``, ``cache_len=``, ...) keep working for
+        one release through a shim that emits a ``DeprecationWarning`` and
+        forwards into ``EngineConfig.from_legacy_kwargs`` (DESIGN.md §10);
+        speculative-decoding options live ONLY on the config.
+
+        ``draft_model`` / ``draft_params`` (required when
+        ``config.speculate_k > 0``): the draft half of the speculative
+        pair, run over its own private paged cache.
+
+        ``prefill_extras(req) -> dict``: extra prefill batch entries
         (modality frontend stubs for enc-dec / VLM archs).  ``tracer``: a
         ``repro.obs.Tracer`` fed with per-request lifecycle spans and
         allocator events (None: zero overhead).  ``metrics_window`` bounds
@@ -142,6 +152,36 @@ class ServingEngine:
         ``bucketed_prefill`` / ``chunk_prefill`` / ``decode`` /
         ``collective`` under TP) so registry-kernel dispatches and
         measured step walls aggregate per phase (None: zero overhead)."""
+        if legacy:
+            if config is not None:
+                raise TypeError(
+                    "pass either config=EngineConfig(...) or the legacy "
+                    f"keywords, not both (got {sorted(legacy)})")
+            warnings.warn(
+                "ServingEngine(slots=..., cache_len=..., ...) keyword "
+                "construction is deprecated — pass config=EngineConfig(...)"
+                " or build via repro.serve.build_engine (DESIGN.md §10)",
+                DeprecationWarning, stacklevel=2)
+            config = EngineConfig.from_legacy_kwargs(**legacy)
+        elif config is None:
+            config = EngineConfig()
+        self.backend: CacheBackend = make_backend(
+            backend if backend is not None else config.backend)
+        # a passed-in backend instance wins over config.backend: normalize
+        # the record to what actually runs, then cross-validate
+        config = dataclasses.replace(config, backend=self.backend.name)
+        config.validate()
+        self.config = config
+        slots, cache_len = config.slots, config.cache_len
+
+        if prefill_step is None or serve_step is None:
+            from repro.serve.step import make_prefill_step, make_serve_step
+            if prefill_step is None:
+                prefill_step = make_prefill_step(model)
+            if serve_step is None:
+                serve_step = make_serve_step(
+                    model, temperature=config.temperature, seed=config.seed)
+
         self.model = model
         self.tracer = tracer
         self.profiler = profiler
@@ -149,13 +189,21 @@ class ServingEngine:
         self.cache_len = cache_len
         self.params = params
         self.prefill_extras = prefill_extras
-        self.backend: CacheBackend = make_backend(backend)
         self.backend.tracer = tracer       # allocator/prefix/COW events
-        self.prefill_batch = prefill_batch or min(slots, 4)
-        self.min_bucket = min(min_bucket, cache_len)
-        self.chunked = chunked_prefill
-        self.chunk_size = min(chunk_size, cache_len)
-        self.chunks_per_step = max(1, chunks_per_step)
+        # the ONE kv-storage-dtype resolution (DESIGN.md §10): an explicit
+        # backend kv_dtype wins, else the model's rt.kv_dtype() alias is
+        # collapsed here — every downstream consumer (chunk staging, the
+        # streamed-bytes model, the backend pools) reads this value
+        self.kv_dtype = (getattr(self.backend, "kv_dtype", None)
+                         or resolve_kv_dtype(model))
+        if isinstance(self.backend, PagedBackend) \
+                and self.backend.kv_dtype is None:
+            self.backend.kv_dtype = self.kv_dtype
+        self.prefill_batch = config.prefill_batch or min(slots, 4)
+        self.min_bucket = min(config.min_bucket, cache_len)
+        self.chunked = config.chunked_prefill
+        self.chunk_size = min(config.chunk_size, cache_len)
+        self.chunks_per_step = max(1, config.chunks_per_step)
         # frontend tokens prepended to the decoder sequence (VLM archs)
         self._front = model.cfg.frontend_tokens \
             if getattr(model.cfg, "frontend", None) == "vision" else 0
@@ -181,25 +229,27 @@ class ServingEngine:
                     "mid-prompt from pages; MLA/enc-dec keep dense "
                     "caches) — use the bucketed engine for "
                     f"{model.cfg.name!r}")
-            self.backend.prefix_cache = prefix_cache
-            if self.backend._resolve_kv_dtype(model) == "int8":
+            self.backend.prefix_cache = (config.prefix_cache
+                                         or self.backend.prefix_cache)
+            if self.kv_dtype == "int8":
                 # int8 pools: stage this request's own rows in bf16 so a
                 # later chunk never re-reads its predecessors quantized
                 self.backend.chunk_stage = self.chunk_size
-        elif prefix_cache:
+        elif config.prefix_cache:
             raise ValueError("prefix_cache requires chunked_prefill (a "
                              "prefix hit resumes prefill mid-prompt, which "
                              "only the chunk walk supports)")
 
         # --------------------------------------------------- tensor parallel
+        tp = config.tp
         self.tp = tp
-        self.tp_mode = tp_mode
-        self._async = bool(async_dispatch)
+        self.tp_mode = config.tp_mode
+        self._async = bool(config.async_dispatch)
         self._tpx = None
         self._kv_shards = 1
         if tp > 1:
             from repro.dist.tp import TPExecutor
-            self._tpx = TPExecutor(model, tp, mode=tp_mode)
+            self._tpx = TPExecutor(model, tp, mode=config.tp_mode)
             self._tpx.profiler = profiler
             self._kv_shards = self._tpx.plan.kv_shards
             self.params = self._tpx.shard_params(model, params)
@@ -243,14 +293,53 @@ class ServingEngine:
         # streamed-bytes model (DESIGN.md §8): decode reads every cached
         # row of every decoding slot once per step; a head-sharded pool
         # streams 1/kv_shards of each row per device
-        rt = getattr(model, "rt", None)
-        if isinstance(self.backend, PagedBackend):
-            kd = self.backend._resolve_kv_dtype(model)
-        elif rt is not None and getattr(rt, "kv_cache_dtype", "") == "int8":
-            kd = "int8"
-        else:
-            kd = jnp.dtype(model.cfg.dtype).name
-        self._kv_row_bytes = kv_row_bytes(model.cfg, kd)
+        self._kv_row_bytes = kv_row_bytes(model.cfg, self.kv_dtype)
+
+        # ------------------------------------------- speculative decoding
+        # (DESIGN.md §10) the FLOP-side roofline lever: a draft model
+        # proposes k tokens per cycle, one target verify pass scores all
+        # k+1 positions through the chunked slab path, and the host
+        # accept/reject rule (serve.speculate) emits 1..k+1 tokens.
+        self.spec_k = config.speculate_k
+        self.draft_model = draft_model
+        self.draft_steps = 0               # draft forward passes
+        self.verify_passes = 0             # target verify passes
+        self.draft_tokens_proposed = 0
+        self.draft_tokens_accepted = 0
+        self.spec_tokens_emitted = 0
+        self.spec_slot_passes = 0          # per-slot verify scorings
+        self.rollback_pages = 0            # lookahead pages freed
+        if self.spec_k:
+            if draft_model is None or draft_params is None:
+                raise ValueError(
+                    "speculate_k > 0 needs draft_model + draft_params — "
+                    "build the engine via repro.serve.build_engine")
+            from repro.serve.step import make_draft_step, make_verify_step
+            # the verify pass consumes its emissions synchronously (the
+            # accept/reject rule needs the logits on the host)
+            self._async = False
+            self._draft_W = self.spec_k + 1
+            self._temperature = config.temperature
+            # the draft runs over its own full-occupancy paged pool (same
+            # page size, reservations never fail) sized for the deepest
+            # chain the bookkeeping can reach past the target's horizon
+            self._draft_cache_len = cache_len + 2 * self._draft_W
+            self._draft_backend = PagedBackend(
+                page_size=self.backend.page_size)
+            self._draft_backend.tracer = tracer
+            self.draft_params = draft_params
+            self.draft_caches = self._draft_backend.init_caches(
+                draft_model, slots, self._draft_cache_len)
+            self.draft_step = jax.jit(make_draft_step(draft_model),
+                                      donate_argnums=(2,))
+            self.verify_step = jax.jit(make_verify_step(model),
+                                       donate_argnums=(2,))
+            self._spec_rng = np.random.default_rng(config.seed)
+            self._draft_pos = np.zeros((slots,), np.int32)
+            # tokens emitted by the target that the draft model has not
+            # ingested yet (flushed as the first chain step of each cycle)
+            self._draft_pending: Dict[int, List[int]] = {}
+            self._draft_ready: set = set()   # slots the draft caught up on
         self.active: Dict[int, Optional[Request]] = {
             i: None for i in range(slots)}
         self.pos = np.zeros((slots,), np.int32)
@@ -259,7 +348,7 @@ class ServingEngine:
         # predecessor's sampling randomness at equal positions
         self._nonce = np.zeros((slots,), np.int32)
         self.queue: deque = deque()
-        self.stop_token = stop_token
+        self.stop_token = config.stop_token
         self.steps = 0                     # engine cycles (admit/chunk/decode)
         self.decode_steps = 0              # cycles that ran serve_step
         # chunked-prefill bookkeeping
@@ -292,8 +381,8 @@ class ServingEngine:
         self.stream_wait_s = 0.0       # blocked in stream-out (np.asarray)
         # bounded latency samples: a soak appends one entry per finished
         # request; the deque keeps the trailing window only
-        self._ttfts: deque = deque(maxlen=metrics_window)
-        self._decode_rates: deque = deque(maxlen=metrics_window)
+        self._ttfts: deque = deque(maxlen=config.metrics_window)
+        self._decode_rates: deque = deque(maxlen=config.metrics_window)
 
     @property
     def prefill_traces(self) -> int:
@@ -565,6 +654,10 @@ class ServingEngine:
         self.active[slot] = None
         self._decoding.discard(slot)
         self.backend.release(slot)
+        if self.spec_k and slot in self._draft_ready:
+            self._draft_backend.release(slot)
+            self._draft_ready.discard(slot)
+            self._draft_pending.pop(slot, None)
         self.requests_finished += 1
         # latency samples: only requests that actually emitted a first
         # token have a TTFT, and only multi-token requests have a decode
@@ -675,6 +768,229 @@ class ServingEngine:
                 finished.append(self._finish(slot, req))
         return finished
 
+    # ------------------------------------------------- speculative decode
+    def _draft_forward(self, feed: Dict[int, List[int]],
+                       offsets: Dict[int, int]) -> np.ndarray:
+        """One batched draft slab: ``feed[slot]`` tokens are written into
+        the draft cache at ``offsets[slot]`` and each slot's last-valid-row
+        fp32 logits come back (B, V).  Inactive rows run with valid=0
+        against NULL-masked block tables (their scatter writes land on the
+        scratch page) and are ignored on the host."""
+        W = self._draft_W
+        bt = self._draft_backend.block_tables
+        tokens = np.zeros((self.slots, W), np.int32)
+        valid = np.zeros((self.slots,), np.int32)
+        offs = np.zeros((self.slots,), np.int32)
+        mask = np.zeros((self.slots, 1), bt.dtype)
+        for s, toks in feed.items():
+            tokens[s, :len(toks)] = toks
+            valid[s] = len(toks)
+            offs[s] = offsets[s]
+            mask[s] = 1
+        batch = {"tokens": jnp.asarray(tokens),
+                 "offset": jnp.asarray(offs),
+                 "valid": jnp.asarray(valid),
+                 "stage_base": jnp.zeros((self.slots,), jnp.int32),
+                 "block_tables": jnp.asarray(bt * mask)}
+        with self._phase("draft"):
+            logits, self.draft_caches = self.draft_step(
+                self.draft_params, batch, self.draft_caches)
+            logits = np.asarray(logits)
+        self.draft_steps += 1
+        return logits
+
+    def _draft_catchup(self, slot: int):
+        """Walk ``slot``'s prompt through the draft model in W-token slabs
+        (the draft's own chunked prefill).  Afterwards the draft cache
+        covers the prompt and the target's first emission waits in
+        ``_draft_pending`` — flushed as step 1 of the next chain."""
+        req = self.active[slot]
+        if not self._draft_backend.reserve(slot, self._draft_cache_len):
+            raise RuntimeError("draft pool exhausted — it is sized for "
+                               "full occupancy, so this cannot happen")
+        W = self._draft_W
+        prompt = [int(t) for t in req.prompt]
+        t0 = time.perf_counter()
+        off = 0
+        while off < len(prompt):
+            end = min(off + W, len(prompt))
+            self._draft_forward({slot: prompt[off:end]}, {slot: off})
+            off = end
+        self.prefill_s += time.perf_counter() - t0
+        self._draft_pos[slot] = len(prompt)
+        self._draft_pending[slot] = [int(self.last_tok[slot])]
+        self._draft_ready.add(slot)
+        if self.tracer is not None:
+            self.tracer.instant("draft_catchup", slot, rid=req.rid,
+                                tokens=len(prompt))
+
+    def _spec_cycle(self) -> List[Request]:
+        """One speculative cycle over the decoding slots, replacing the
+        plain decode step: linear draft chain (k proposals per slot), ONE
+        target verify pass scoring all k+1 positions (the TROOP lever —
+        every byte of target weights/KV streamed does up to (k+1)x work),
+        host accept/reject (``serve.speculate``; greedy mode is
+        token-identical to ``_consume``), then page rollback of the
+        rejected lookahead tail."""
+        for s in sorted(self._decoding):
+            if s not in self._draft_ready:
+                self._draft_catchup(s)
+        slots = tuple(sorted(self._decoding))
+        if not slots:
+            return []
+        t0 = time.perf_counter()
+        W = self._draft_W
+
+        # 1) per-slot window: the finish rule caps pos at cache_len-1, so
+        # lookahead never needs rows past cache_len-2; clamp to what the
+        # target pool covers after extension.  extend() is all-or-nothing,
+        # and the admission-time baseline reservation already covers
+        # pos+1 rows for any active slot — under pool pressure k degrades
+        # toward plain decode instead of deadlocking.
+        k_eff: Dict[int, int] = {}
+        for s in slots:
+            k = max(0, min(self.spec_k,
+                           self.cache_len - 2 - int(self.pos[s])))
+            if k > 0:
+                covered = self.backend.extend(s, int(self.pos[s]) + k + 1)
+                k = max(0, min(k, covered - int(self.pos[s]) - 1))
+            k_eff[s] = k
+
+        # 2) linear draft chain: step 1 flushes each slot's pending target
+        # emissions, steps 2..k feed the previous proposal back
+        drafts: Dict[int, List[int]] = {s: [] for s in slots}
+        dists: Dict[int, List[np.ndarray]] = {s: [] for s in slots}
+        fed: Dict[int, int] = {s: 0 for s in slots}
+        cur = {s: int(self._draft_pos[s]) for s in slots}
+        feed = {s: list(self._draft_pending[s])
+                for s in slots if k_eff[s] > 0}
+        t_draft = time.perf_counter()
+        kmax = max(k_eff.values(), default=0)
+        for j in range(1, kmax + 1):
+            if not feed:
+                break
+            logits = self._draft_forward(feed, cur)
+            nxt: Dict[int, List[int]] = {}
+            for s, toks in feed.items():
+                if j == 1:
+                    fed[s] = len(toks)
+                cur[s] += len(toks)
+                row = logits[s]
+                if self._temperature > 0:
+                    p = SP.softmax(row, self._temperature)
+                    d = int(self._spec_rng.choice(p.shape[0], p=p))
+                    dists[s].append(p)
+                else:
+                    d = int(np.argmax(row))
+                drafts[s].append(d)
+                if k_eff[s] > j:
+                    nxt[s] = [d]
+            feed = nxt
+        if self.tracer is not None and kmax:
+            self.tracer.span("draft", "engine", self.tracer.rel(t_draft),
+                             self.tracer.now(), batch=len(slots), k=kmax)
+
+        # 3) one target pass scores every window: logits row i is the
+        # target distribution conditioned on the first i draft tokens
+        tokens = np.zeros((self.slots, W), np.int32)
+        valid = np.zeros((self.slots,), np.int32)
+        offs = np.zeros((self.slots,), np.int32)
+        for s in slots:
+            win = [int(self.last_tok[s])] + drafts[s]
+            tokens[s, :len(win)] = win
+            valid[s] = len(win)
+            offs[s] = int(self.pos[s])
+        batch = {"tokens": jnp.asarray(tokens),
+                 "offset": jnp.asarray(offs),
+                 "valid": jnp.asarray(valid),
+                 "block_tables": self._decode_block_tables()}
+        t_ver = time.perf_counter()
+        with self._phase(f"verify@{self.spec_k}"):
+            logits, self.caches = self.verify_step(
+                self.params, batch, self.caches)
+            logits = np.asarray(logits)
+        rows = int(sum(int(self.pos[s]) + int(valid[s]) for s in slots))
+        self.kv_bytes_streamed += rows * self._kv_row_bytes
+        self.kv_bytes_streamed_per_device += rows * (
+            self._kv_row_bytes // max(self._kv_shards, 1))
+        if self.tracer is not None:
+            self.tracer.span("verify", "engine", self.tracer.rel(t_ver),
+                             self.tracer.now(), batch=len(slots))
+
+        # 4) host accept/reject + emission (finish rules identical to
+        # ``_consume``)
+        finished: List[Request] = []
+        for s in slots:
+            req = self.active[s]
+            k = k_eff[s]
+            rows_l = logits[s, :k + 1]
+            if self._temperature > 0:
+                tprobs = SP.softmax(rows_l, self._temperature)
+                dprobs = (np.stack(dists[s]) if dists[s]
+                          else np.zeros((0, rows_l.shape[-1])))
+                emitted, a = SP.speculative_sample(
+                    tprobs, dprobs, drafts[s], self._spec_rng)
+            else:
+                emitted, a = SP.greedy_verify(
+                    np.argmax(rows_l, axis=-1), drafts[s])
+            self.draft_tokens_proposed += k
+            self.draft_tokens_accepted += a
+            done = False
+            for tok in emitted:
+                tok = int(tok)
+                req.out.append(tok)
+                self.tokens_generated += 1
+                self.spec_tokens_emitted += 1
+                self.last_tok[s] = tok
+                self.pos[s] += 1
+                if (len(req.out) >= req.max_new_tokens
+                        or tok == self.stop_token
+                        or self.pos[s] >= self.cache_len - 1):
+                    done = True
+                    break
+            if done:
+                finished.append(self._finish(s, req))
+                continue
+            # draft bookkeeping: the draft cache holds valid rows for the
+            # flushed pending tokens and d_1..d_a (d_k's KV was never
+            # written); everything past them is overwritten by the next
+            # chain, which starts exactly at the new _draft_pos
+            x = int(self.last_tok[s])
+            if k == 0:
+                # only reachable right at the cache horizon (pos >=
+                # cache_len-2), where the emission above finishes the slot
+                # — kept for safety
+                self._draft_pending[s].append(x)
+            elif a < k:
+                self._draft_pos[s] += fed[s] + a
+                self._draft_pending[s] = [x]
+            else:
+                self._draft_pos[s] += fed[s] + k - 1
+                self._draft_pending[s] = [drafts[s][-1], x]
+            assert len(self._draft_pending[s]) <= W
+
+        # 5) rewind surviving slots to their baseline reservation: the
+        # lookahead tail past prompt_len + max_new holds only rejected or
+        # replayable rows (a slot's valid rows never exceed
+        # prompt_len + max_new - 1), and tail pages are always private —
+        # shared prefix pages sit at the front of the run
+        for s in slots:
+            req = self.active[s]
+            if req is None:
+                continue
+            freed = self.backend.rollback(
+                s, req.prompt_len + req.max_new_tokens)
+            if freed:
+                self.rollback_pages += freed
+                if self.tracer is not None:
+                    self.tracer.instant("rollback", s, rid=req.rid,
+                                        pages=freed)
+        self.verify_passes += 1
+        self.spec_slot_passes += len(slots)
+        self.decode_steps += 1
+        self.decode_s += time.perf_counter() - t0
+        return finished
+
     def step(self) -> Optional[List[Request]]:
         """One engine cycle: admit, (chunked: run prefill slabs,) then
         decode every generating slot.
@@ -714,9 +1030,12 @@ class ServingEngine:
                 self.steps += 1
                 return finished
             return None
-        self._submit_decode()
-        if not self._async:
-            finished.extend(self._consume())
+        if self.spec_k:
+            finished.extend(self._spec_cycle())
+        else:
+            self._submit_decode()
+            if not self._async:
+                finished.extend(self._consume())
         self.steps += 1
         return finished
 
@@ -792,6 +1111,24 @@ class ServingEngine:
                 "prefix_hit_rate": (self.shared_tokens / self.prefill_tokens
                                     if self.prefill_tokens else 0.0),
             })
+        if self.spec_k:
+            m.update({
+                "speculate_k": self.spec_k,
+                "draft_steps": self.draft_steps,
+                "verify_passes": self.verify_passes,
+                "draft_tokens_proposed": self.draft_tokens_proposed,
+                "draft_tokens_accepted": self.draft_tokens_accepted,
+                "acceptance_rate": (
+                    self.draft_tokens_accepted / self.draft_tokens_proposed
+                    if self.draft_tokens_proposed else 0.0),
+                # per-SLOT passes, so batching cannot inflate it: 1.0 at
+                # zero acceptance, k+1 at full acceptance — the (k+1)x
+                # useful-work-per-weight-byte factor of the roofline story
+                "tokens_per_target_pass": (
+                    self.spec_tokens_emitted / self.spec_slot_passes
+                    if self.spec_slot_passes else 0.0),
+                "rollback_pages": self.rollback_pages,
+            })
         m.update(self.backend.stats())
         return m
 
@@ -818,5 +1155,12 @@ class ServingEngine:
         self.kv_bytes_streamed_per_device = 0
         self.host_overlap_s = 0.0
         self.stream_wait_s = 0.0
+        self.draft_steps = 0
+        self.verify_passes = 0
+        self.draft_tokens_proposed = 0
+        self.draft_tokens_accepted = 0
+        self.spec_tokens_emitted = 0
+        self.spec_slot_passes = 0
+        self.rollback_pages = 0
         self._ttfts.clear()
         self._decode_rates.clear()

@@ -1,0 +1,91 @@
+"""Speculative-decoding verification: host-side accept/reject rules.
+
+TROOP frames decode as an OI~=1 workload pinned to the memory roofline;
+speculation is the FLOP-side lever — the target model scores k draft
+tokens plus one bonus position in a single weight pass, so every byte of
+weights/KV streamed does up to (k+1)x useful work.  The functions here
+implement the per-slot emission rule on the host (numpy), decoupled from
+the batched jitted draft/verify forwards so they can be unit-tested
+statistically (``tests/test_speculative.py``).
+
+Two modes, two guarantees:
+
+  * ``greedy_verify`` — temperature 0.  Accept draft tokens while they
+    match the target argmax; emit the target argmax at the first mismatch
+    (the "correction"), or the bonus-position argmax when every draft
+    matched.  Every emitted token IS a target argmax conditioned on the
+    previously emitted tokens — token-identical to non-speculative greedy
+    decode by construction.
+  * ``speculative_sample`` — temperature > 0.  Leviathan-style modified
+    rejection sampling: accept draft token d with probability
+    min(1, p_t(d) / p_d(d)); on rejection sample the correction from
+    norm(max(p_t - p_d, 0)); when all k drafts are accepted, sample the
+    bonus token from the target distribution at position k.  The marginal
+    distribution of every emitted token equals the target distribution
+    exactly (the standard proof: accepted mass + residual mass = p_t).
+
+Both return ``(emitted, accepted)`` where ``emitted`` always contains
+``accepted + 1`` tokens (the accepted drafts plus one correction/bonus
+token) — a verify pass always produces at least one token, so speculation
+never stalls even at acceptance 0.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+def softmax(logits: np.ndarray, temperature: float = 1.0) -> np.ndarray:
+    """Stable softmax over the last axis (float64 for exact host math)."""
+    x = np.asarray(logits, np.float64) / max(temperature, 1e-8)
+    x = x - x.max(axis=-1, keepdims=True)
+    e = np.exp(x)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+def greedy_verify(target_argmax: Sequence[int],
+                  draft_tokens: Sequence[int]) -> Tuple[List[int], int]:
+    """Greedy acceptance: ``target_argmax`` has k+1 entries (row i is the
+    target argmax after the i accepted drafts), ``draft_tokens`` has k."""
+    emitted: List[int] = []
+    for i, d in enumerate(draft_tokens):
+        t = int(target_argmax[i])
+        emitted.append(t)
+        if t != int(d):
+            return emitted, i
+    emitted.append(int(target_argmax[len(draft_tokens)]))
+    return emitted, len(draft_tokens)
+
+
+def speculative_sample(target_probs: np.ndarray, draft_probs: np.ndarray,
+                       draft_tokens: Sequence[int],
+                       rng: np.random.Generator) -> Tuple[List[int], int]:
+    """Modified rejection sampling over one verify window.
+
+    ``target_probs``: (k+1, V) target distributions (row i conditions on
+    the prompt + i accepted drafts); ``draft_probs``: (k, V) the draft
+    distributions that proposed ``draft_tokens``.  Uses exactly one
+    uniform draw per acceptance test and one categorical draw for the
+    correction/bonus token from ``rng``.
+    """
+    k = len(draft_tokens)
+    emitted: List[int] = []
+    for i in range(k):
+        d = int(draft_tokens[i])
+        t_p = float(target_probs[i][d])
+        d_p = float(draft_probs[i][d])
+        if d_p <= 0.0 or rng.random() < min(1.0, t_p / d_p):
+            emitted.append(d)
+            continue
+        resid = np.maximum(np.asarray(target_probs[i], np.float64)
+                           - np.asarray(draft_probs[i], np.float64), 0.0)
+        z = resid.sum()
+        if z <= 0.0:                       # degenerate: p_t <= p_d pointwise
+            resid = np.asarray(target_probs[i], np.float64)
+            z = resid.sum()
+        emitted.append(int(rng.choice(resid.shape[0], p=resid / z)))
+        return emitted, i
+    bonus = np.asarray(target_probs[k], np.float64)
+    emitted.append(int(rng.choice(bonus.shape[0], p=bonus / bonus.sum())))
+    return emitted, k

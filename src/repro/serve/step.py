@@ -107,6 +107,31 @@ def make_chunk_step(model):
     return chunk_step
 
 
+def make_draft_step(model):
+    """Speculative draft forward: a chunked slab against the draft model's
+    own paged caches, returning the full fp32 logits row of each slot's
+    last valid position (the scheduler samples/argmaxes on the host so one
+    compiled function serves greedy and temperature drafting).  batch =
+    {tokens (B, W) right-padded, offset (B,), valid (B,), stage_base (B,),
+    block_tables (B, nblk)} -> (logits (B, V), caches)."""
+    def draft_step(params, batch, caches):
+        logits, caches = model.chunk_step(params, batch, caches)  # (B, V)
+        return logits.astype(jnp.float32), caches
+    return draft_step
+
+
+def make_verify_step(model):
+    """Speculative verify forward: score all W rows of the slab in one
+    target weight pass (the TROOP lever — (k+1)x tokens per byte of
+    weights/KV streamed).  batch = {tokens (B, W), offset (B,),
+    valid (B,), block_tables (B, nblk)} -> (logits (B, W, V) fp32,
+    caches); row i scores position offset + i + 1."""
+    def verify_step(params, batch, caches):
+        logits, caches = model.verify_step(params, batch, caches)
+        return logits.astype(jnp.float32), caches
+    return verify_step
+
+
 def make_prefill_step(model):
     """Bucketed batched prefill: batch = {tokens (Bp, L) right-padded,
     length (Bp,) valid rows incl. any frontend prefix} -> (next_tok (Bp,),

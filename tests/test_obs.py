@@ -13,6 +13,7 @@ from repro import obs
 from repro.configs import get_config, reduced
 from repro.models import RuntimeConfig, build_model
 from repro.models import modules as M
+from repro.serve import EngineConfig
 from repro.serve.kvcache import PagedBackend
 from repro.serve.scheduler import Request, ServingEngine
 from repro.serve.step import make_prefill_step, make_serve_step
@@ -33,8 +34,9 @@ def make_engine(model, params, *, tracer=None, prefix=True, **kw):
     return ServingEngine(
         model, prefill_step=make_prefill_step(model),
         serve_step=make_serve_step(model), params=params,
-        backend=PagedBackend(page_size=16), chunked_prefill=True,
-        chunk_size=16, prefix_cache=prefix, tracer=tracer, **kw)
+        backend=PagedBackend(page_size=16), tracer=tracer,
+        config=EngineConfig(backend="paged", chunked_prefill=True,
+                            chunk_size=16, prefix_cache=prefix, **kw))
 
 
 # --------------------------------------------------------------------------

@@ -9,6 +9,7 @@ import pytest
 from repro.configs import get_config, reduced
 from repro.models import RuntimeConfig, build_model
 from repro.models import modules as M
+from repro.serve import EngineConfig
 from repro.serve.kvcache import (NULL_PAGE, BlockAllocator, PagedBackend,
                                  PrefixIndex)
 from repro.serve.scheduler import Request, ServingEngine
@@ -32,10 +33,12 @@ def make_engine(model, params, *, backend="paged", chunked=False,
     if page_size is not None:
         assert backend == "paged"
         backend = PagedBackend(page_size=page_size)
+    name = backend if isinstance(backend, str) else backend.name
     return ServingEngine(
         model, prefill_step=make_prefill_step(model),
-        serve_step=make_serve_step(model), params=params,
-        backend=backend, chunked_prefill=chunked, prefix_cache=prefix, **kw)
+        serve_step=make_serve_step(model), params=params, backend=backend,
+        config=EngineConfig(backend=name, chunked_prefill=chunked,
+                            prefix_cache=prefix, **kw))
 
 
 def serve(eng, prompts, max_new=5, rid0=0):

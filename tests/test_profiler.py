@@ -16,6 +16,7 @@ from repro.kernels import ops as KO
 from repro.models import RuntimeConfig, build_model
 from repro.models import modules as M
 from repro.obs.energy import AccountEntry
+from repro.serve import EngineConfig
 from repro.serve.kvcache import PagedBackend
 from repro.serve.scheduler import Request, ServingEngine
 from repro.serve.step import make_prefill_step, make_serve_step
@@ -38,8 +39,9 @@ def make_engine(model, params, *, profiler=None, **kw):
     return ServingEngine(
         model, prefill_step=make_prefill_step(model),
         serve_step=make_serve_step(model), params=params,
-        backend=PagedBackend(page_size=16), chunked_prefill=True,
-        chunk_size=16, prefix_cache=True, profiler=profiler, **kw)
+        backend=PagedBackend(page_size=16), profiler=profiler,
+        config=EngineConfig(backend="paged", chunked_prefill=True,
+                            chunk_size=16, prefix_cache=True, **kw))
 
 
 def gemv_args():

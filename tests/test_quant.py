@@ -16,6 +16,7 @@ from repro.models import modules as M
 from repro.quant import (QuantizedTensor, dequantize, pack_int4,
                          quantize, quantize_params, quantized_stats,
                          unpack_int4)
+from repro.serve import EngineConfig
 from repro.serve.kvcache import PagedBackend
 from repro.serve.scheduler import Request, ServingEngine
 from repro.serve.step import make_prefill_step, make_serve_step
@@ -220,10 +221,11 @@ def _engine(model, params, backend, **kw):
     kw.setdefault("slots", 3)
     kw.setdefault("cache_len", 64)
     kw.setdefault("min_bucket", 4)
+    name = backend if isinstance(backend, str) else backend.name
     return ServingEngine(
         model, prefill_step=make_prefill_step(model),
         serve_step=make_serve_step(model), params=params, backend=backend,
-        **kw)
+        config=EngineConfig(backend=name, **kw))
 
 
 def _serve(model, params, backend):

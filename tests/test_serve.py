@@ -8,6 +8,7 @@ import pytest
 from repro.configs import get_config, reduced
 from repro.models import RuntimeConfig, build_model
 from repro.models import modules as M
+from repro.serve import EngineConfig
 from repro.serve.kvcache import BlockAllocator, PagedBackend, bucket_length
 from repro.serve.scheduler import Request, ServingEngine
 from repro.serve.step import make_prefill_step, make_serve_step, sample_keys
@@ -25,16 +26,17 @@ def setup():
 def make_engine(model, params, backend="dense", **kw):
     kw.setdefault("slots", 3)
     kw.setdefault("cache_len", 32)
+    name = backend if isinstance(backend, str) else backend.name
     return ServingEngine(
         model, prefill_step=make_prefill_step(model),
         serve_step=make_serve_step(model), params=params,
-        backend=backend, **kw)
+        backend=backend, config=EngineConfig(backend=name, **kw))
 
 
 def test_engine_serves_batched_requests():
     cfg, model, params = setup()
     eng = ServingEngine(
-        model, slots=4, cache_len=32,
+        model, config=EngineConfig(slots=4, cache_len=32),
         prefill_step=make_prefill_step(model),
         serve_step=make_serve_step(model), params=params)
     reqs = [Request(rid=i, prompt=np.arange(1, 5 + i) % 63 + 1,
@@ -60,7 +62,7 @@ def test_engine_output_matches_sequential_decode():
     want = toks[len(prompt):]
 
     eng = ServingEngine(
-        model, slots=2, cache_len=32,
+        model, config=EngineConfig(slots=2, cache_len=32),
         prefill_step=make_prefill_step(model),
         serve_step=make_serve_step(model), params=params)
     req = Request(rid=0, prompt=prompt, max_new_tokens=4)
@@ -76,7 +78,7 @@ def test_engine_output_matches_sequential_decode():
 def test_slots_are_reused():
     cfg, model, params = setup()
     eng = ServingEngine(
-        model, slots=1, cache_len=24,
+        model, config=EngineConfig(slots=1, cache_len=24),
         prefill_step=make_prefill_step(model),
         serve_step=make_serve_step(model), params=params)
     for i in range(3):
@@ -123,7 +125,7 @@ def test_encdec_serving_with_frontend_stub():
     extras = lambda req: {"frontend": 0.1 * jnp.ones(
         (1, cfg.cross_attention_len, cfg.d_model), jnp.bfloat16)}
     eng = ServingEngine(
-        model, slots=2, cache_len=32,
+        model, config=EngineConfig(slots=2, cache_len=32),
         prefill_step=make_prefill_step(model),
         serve_step=make_serve_step(model), params=params,
         prefill_extras=extras)
@@ -301,7 +303,7 @@ def test_serving_with_int8_kv_cache():
     cfg, model_bf16, params = setup()
     model = build_model(cfg, RuntimeConfig(remat="none", cache_dtype="int8"))
     eng = ServingEngine(
-        model, slots=2, cache_len=32,
+        model, config=EngineConfig(slots=2, cache_len=32),
         prefill_step=make_prefill_step(model),
         serve_step=make_serve_step(model), params=params)
     req = Request(rid=0, prompt=np.asarray([3, 14, 15, 9], np.int32),

@@ -1,0 +1,251 @@
+"""Speculative decoding + EngineConfig construction API.
+
+Tentpole invariants: greedy speculative serving is token-identical to the
+non-speculative engines (dense / paged / chunked+prefix; bf16 and int8 KV),
+``speculative_sample`` preserves the target distribution (chi-square), and
+rollback-heavy drains leave the page allocator balanced.  API satellites:
+``EngineConfig.validate`` error cases, the legacy-kwarg DeprecationWarning
+shim, and ``build_engine`` as the one construction path.
+"""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import RuntimeConfig, build_model
+from repro.models import modules as M
+from repro.serve import (EngineConfig, Request, ServingEngine, build_engine,
+                         greedy_verify, speculative_sample)
+from repro.serve.kvcache import PagedBackend
+from repro.serve.speculate import softmax
+
+
+def setup(**rt_kw):
+    cfg = reduced(get_config("qwen1.5-0.5b"),
+                  num_layers=2, d_model=64, d_ff=128, vocab_size=128,
+                  num_heads=2, num_kv_heads=2, head_dim=32)
+    model = build_model(cfg, RuntimeConfig(remat="none", **rt_kw))
+    params = M.unbox(model.init(jax.random.PRNGKey(0)))
+    return cfg, model, params
+
+
+def draft_pair(model, seed=7):
+    """A draft sharing the target's arch but with different params — real
+    (imperfect) acceptance, still deterministic."""
+    draft_params = M.unbox(model.init(jax.random.PRNGKey(seed)))
+    return model, draft_params
+
+
+def serve(eng, prompts, max_new=6, rid0=0):
+    reqs = [Request(rid=rid0 + i, prompt=np.asarray(p, np.int32),
+                    max_new_tokens=max_new) for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    finished = eng.run_until_drained()
+    assert len(finished) == len(reqs) and all(r.done for r in reqs)
+    return {r.rid: r.out for r in reqs}
+
+
+MIXED = [np.arange(1, 4 + 3 * i) % 63 + 1 for i in range(6)]
+
+
+def spec_engine(model, params, draft_params, *, k=3, page_size=None,
+                kv_dtype=None, slots=3, cache_len=64, chunk_size=8,
+                num_pages=None):
+    be = PagedBackend(page_size=page_size or 16, num_pages=num_pages,
+                      kv_dtype=kv_dtype)
+    return ServingEngine(
+        model, params=params, backend=be,
+        config=EngineConfig(slots=slots, cache_len=cache_len,
+                            backend="paged", chunked_prefill=True,
+                            chunk_size=chunk_size, speculate_k=k),
+        draft_model=model, draft_params=draft_params)
+
+
+def baseline_engine(model, params, *, mode, page_size=None, kv_dtype=None,
+                    slots=3, cache_len=64, chunk_size=8):
+    cfg = EngineConfig(
+        slots=slots, cache_len=cache_len,
+        backend="dense" if mode == "dense" else "paged",
+        chunked_prefill=mode.startswith("chunked"), chunk_size=chunk_size,
+        prefix_cache=(mode == "chunked+prefix"), min_bucket=4)
+    be = "dense" if mode == "dense" else \
+        PagedBackend(page_size=page_size or 16, kv_dtype=kv_dtype)
+    return ServingEngine(model, params=params, backend=be, config=cfg)
+
+
+# ------------------------------------------------------ token identity
+def test_greedy_spec_identical_to_all_baselines():
+    """Greedy speculative output == dense == paged == chunked+prefix: the
+    verify/rollback machinery changes the schedule, never the tokens."""
+    cfg, model, params = setup()
+    _, draft_params = draft_pair(model)
+    outs = {}
+    for mode in ("dense", "paged", "chunked+prefix"):
+        eng = baseline_engine(model, params, mode=mode)
+        outs[mode] = serve(eng, MIXED)
+    spec = spec_engine(model, params, draft_params)
+    outs["spec"] = serve(spec, MIXED)
+    m = spec.metrics()
+    assert m["verify_passes"] > 0 and m["draft_tokens_proposed"] > 0
+    assert outs["spec"] == outs["dense"] == outs["paged"] \
+        == outs["chunked+prefix"]
+
+
+def test_greedy_spec_identical_full_acceptance():
+    """Same-params draft -> 100% acceptance and > 1 token per target pass,
+    still token-identical."""
+    cfg, model, params = setup()
+    spec = spec_engine(model, params, params)          # draft == target
+    outs_spec = serve(spec, MIXED)
+    base = baseline_engine(model, params, mode="paged")
+    assert outs_spec == serve(base, MIXED)
+    m = spec.metrics()
+    assert m["acceptance_rate"] == 1.0
+    assert m["tokens_per_target_pass"] > 1.0
+
+
+def test_greedy_spec_identical_int8_kv():
+    """Token identity holds through int8 KV pages (quantize-then-gather on
+    the verify slab == the decode path bit for bit)."""
+    cfg, model, params = setup(kv_cache_dtype="int8")
+    _, draft_params = draft_pair(model)
+    base = baseline_engine(model, params, mode="paged", page_size=32,
+                           kv_dtype="int8")
+    outs_base = serve(base, MIXED)
+    spec = spec_engine(model, params, draft_params, page_size=32,
+                       kv_dtype="int8")
+    assert serve(spec, MIXED) == outs_base
+
+
+# ------------------------------------------- distribution preservation
+def test_speculative_sample_preserves_target_distribution():
+    """Leviathan rejection sampling: the emitted token at each position is
+    distributed per the TARGET distribution regardless of the draft —
+    chi-square over >= 10k draws against the exact target pmf."""
+    rng = np.random.default_rng(0)
+    V, k = 8, 1
+    t_logits = np.array([2.0, 1.0, 0.5, 0.0, -0.5, -1.0, -1.5, -2.0])
+    d_logits = np.array([-2.0, 0.5, 2.0, 1.0, -1.0, 0.0, 1.5, -0.5])
+    t_probs = softmax(t_logits[None, :])                   # (1, V)
+    target = np.vstack([t_probs, t_probs])                 # (k+1, V)
+    draft = softmax(d_logits[None, :])                     # (k, V)
+    counts = np.zeros(V)
+    draws = 12000
+    for _ in range(draws):
+        d_tok = int(rng.choice(V, p=draft[0]))
+        emitted, _ = speculative_sample(target, draft,
+                                        np.array([d_tok]), rng)
+        counts[emitted[0]] += 1
+    expected = t_probs[0] * draws
+    chi2 = float(np.sum((counts - expected) ** 2 / expected))
+    # df = 7; P(chi2_7 > 24.3) ~= 0.001 — generous to stay seed-robust
+    assert chi2 < 24.3, f"chi2={chi2:.1f}, counts={counts}"
+
+
+def test_greedy_verify_prefix_rule():
+    # accept while the target argmax reproduces the draft; the first
+    # mismatch is replaced by the target's token and the rest dropped
+    emitted, accepted = greedy_verify(np.array([5, 6, 9, 9]),
+                                      np.array([5, 6, 7]))
+    assert accepted == 2 and list(emitted) == [5, 6, 9]
+    # full acceptance earns the bonus token (position k)
+    emitted, accepted = greedy_verify(np.array([5, 6, 7, 8]),
+                                      np.array([5, 6, 7]))
+    assert accepted == 3 and list(emitted) == [5, 6, 7, 8]
+
+
+# --------------------------------------------------- allocator balance
+def test_allocator_balanced_after_rollback_heavy_drain():
+    """Rollback-heavy drain: prompt+max_new lands exactly on a page
+    boundary, so every speculative lookahead allocates pages past the
+    request's own need and must give them back.  After the drain the pool
+    must be whole — no leaked, double-freed, or still-mapped pages."""
+    cfg, model, params = setup()
+    _, draft_params = draft_pair(model)        # low acceptance: rejections
+    # 26 + 6 = 32 rows = exactly 2 pages at page_size 16: the k=3 verify
+    # slab crosses into a 3rd page that acceptance never justifies keeping
+    prompts = [np.arange(1, 27) % 63 + 1 for _ in range(5)]
+    eng = spec_engine(model, params, draft_params, cache_len=64,
+                      chunk_size=8)
+    outs = serve(eng, prompts, max_new=6)
+    m = eng.metrics()
+    assert m["rollback_pages"] > 0, "shape never triggered rollback"
+    assert m["pages_in_use"] == 0
+    assert m["pages_free"] == m["num_pages"] - 1   # whole pool, minus NULL
+    base = baseline_engine(model, params, mode="paged")
+    assert outs == serve(base, prompts, max_new=6)
+
+
+# ----------------------------------------------- EngineConfig / shim
+def test_engine_config_validate_errors():
+    with pytest.raises(ValueError, match="backend"):
+        EngineConfig(backend="sparse").validate()
+    with pytest.raises(ValueError, match="chunked_prefill requires"):
+        EngineConfig(chunked_prefill=True).validate()
+    with pytest.raises(ValueError, match="prefix_cache requires"):
+        EngineConfig(backend="paged", prefix_cache=True).validate()
+    with pytest.raises(ValueError, match="kernel_decode requires"):
+        EngineConfig(kernel_decode=True).validate()
+    with pytest.raises(ValueError, match="chunked_prefill"):
+        EngineConfig(backend="paged", speculate_k=3,
+                     draft_arch="qwen1.5-0.5b").validate()
+    with pytest.raises(ValueError, match="single-device"):
+        EngineConfig(backend="paged", chunked_prefill=True,
+                     speculate_k=3, tp=2).validate()
+    with pytest.raises(ValueError, match="draft_arch is set"):
+        EngineConfig(draft_arch="qwen1.5-0.5b").validate()
+
+
+def test_spec_engine_requires_draft():
+    cfg, model, params = setup()
+    with pytest.raises(ValueError, match="build_engine"):
+        ServingEngine(
+            model, params=params, backend=PagedBackend(page_size=16),
+            config=EngineConfig(backend="paged", chunked_prefill=True,
+                                speculate_k=3))
+
+
+def test_legacy_kwargs_deprecated_but_equivalent():
+    """The legacy kwarg shim: warns, forwards into EngineConfig, and the
+    engine behaves identically to explicit config construction."""
+    cfg, model, params = setup()
+    with pytest.warns(DeprecationWarning, match="EngineConfig"):
+        legacy = ServingEngine(model, params=params, slots=2, cache_len=48)
+    assert legacy.config == EngineConfig(slots=2, cache_len=48,
+                                         backend="dense")
+    modern = ServingEngine(model, params=params,
+                           config=EngineConfig(slots=2, cache_len=48))
+    prompts = [np.arange(1, 9) % 63 + 1, np.arange(3, 14) % 63 + 1]
+    assert serve(legacy, prompts) == serve(modern, prompts)
+
+
+def test_legacy_kwargs_plus_config_is_typeerror():
+    cfg, model, params = setup()
+    with pytest.raises(TypeError, match="both"):
+        ServingEngine(model, params=params, slots=2,
+                      config=EngineConfig(slots=2))
+
+
+def test_unknown_kwarg_is_typeerror():
+    cfg, model, params = setup()
+    with pytest.raises(TypeError, match="speculate_k"):
+        ServingEngine(model, params=params, speculate_k=3)
+
+
+def test_build_engine_speculative_end_to_end():
+    """build_engine wires the draft pair from the config alone; greedy
+    output matches a plain paged build of the same arch."""
+    arch = reduced(get_config("qwen1.5-0.5b"),
+                   num_layers=2, d_model=64, d_ff=128, vocab_size=128,
+                   num_heads=2, num_kv_heads=2, head_dim=32)
+    spec = build_engine(arch, EngineConfig(
+        slots=2, cache_len=64, backend="paged", chunked_prefill=True,
+        chunk_size=8, speculate_k=2), draft=arch)
+    base = build_engine(arch, EngineConfig(slots=2, cache_len=64,
+                                           backend="paged"))
+    prompts = [np.arange(1, 9) % 63 + 1, np.arange(2, 12) % 63 + 1]
+    assert serve(spec, prompts) == serve(base, prompts)
+    assert spec.metrics()["acceptance_rate"] == 1.0    # same seed-0 params

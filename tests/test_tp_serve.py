@@ -23,6 +23,7 @@ PRELUDE = """
     from repro.configs import get_config, reduced
     from repro.models import RuntimeConfig, build_model
     from repro.models import modules as M
+    from repro.serve import EngineConfig
     from repro.serve.kvcache import PagedBackend
     from repro.serve.scheduler import Request, ServingEngine
     from repro.serve.step import make_prefill_step, make_serve_step
@@ -41,14 +42,17 @@ PRELUDE = """
 
     def run(model, params, tp, backend=None, chunked=True,
             tp_mode="exact", tracer=None):
+        be = backend if backend is not None else (
+            PagedBackend(page_size=16) if chunked else "dense")
         eng = ServingEngine(
-            model, slots=3, cache_len=64,
-            prefill_step=make_prefill_step(model),
+            model, prefill_step=make_prefill_step(model),
             serve_step=make_serve_step(model), params=params,
-            backend=backend if backend is not None else (
-                PagedBackend(page_size=16) if chunked else "dense"),
-            chunked_prefill=chunked, chunk_size=8,
-            prefix_cache=chunked, tp=tp, tp_mode=tp_mode, tracer=tracer)
+            backend=be, tracer=tracer,
+            config=EngineConfig(
+                slots=3, cache_len=64,
+                backend=be if isinstance(be, str) else be.name,
+                chunked_prefill=chunked, chunk_size=8,
+                prefix_cache=chunked, tp=tp, tp_mode=tp_mode))
         reqs = [Request(rid=i, prompt=np.asarray(p, np.int32),
                         max_new_tokens=6)
                 for i, p in enumerate(PROMPTS)]
@@ -180,11 +184,12 @@ def test_tp4_kv_page_bytes_invariant_mid_run():
     run_with_devices(PRELUDE + """
         model, params = build()
         eng = ServingEngine(
-            model, slots=3, cache_len=64,
-            prefill_step=make_prefill_step(model),
+            model, prefill_step=make_prefill_step(model),
             serve_step=make_serve_step(model), params=params,
             backend=PagedBackend(page_size=16),
-            chunked_prefill=True, chunk_size=8, prefix_cache=True, tp=4)
+            config=EngineConfig(slots=3, cache_len=64, backend="paged",
+                                chunked_prefill=True, chunk_size=8,
+                                prefix_cache=True, tp=4))
         for i, p in enumerate(PROMPTS):
             eng.submit(Request(rid=i, prompt=np.asarray(p, np.int32),
                                max_new_tokens=6))
