@@ -87,6 +87,29 @@ GATES = [
     ("BENCH_quant.json", "engines[*].prefill_traces", "exact", 0),
     ("BENCH_quant.json", "engines[*].requests_finished", "exact", 0),
     ("BENCH_quant.json", "engines[*].tokens_per_s", "info", 0),
+    # MX microscaling rows (DESIGN.md §11): the fp4-nibble + E8M0 byte
+    # models are exact integers; the acceptance ratios (mx4 <= 0.28x,
+    # fp8 <= 0.55x bf16 — asserted inside quant_bench) sit in tight bands.
+    ("BENCH_quant.json", "mx4_bytes_ratio", "exact", 0),
+    ("BENCH_quant.json", "fp8_bytes_ratio", "exact", 0),
+    ("BENCH_quant.json", "mx[*].modeled_bytes", "exact", 0),
+    ("BENCH_quant.json", "mx[*].bytes_ratio_vs_bf16", "rel_band", 0.01),
+    ("BENCH_quant.json", "mx[*].max_rel_err_vs_fp32", "max_rel", 0.5),
+    ("BENCH_quant.json", "mx[*].measured_us", "info", 0),
+    # quantized-expert serving: completeness exact, wall tok/s info
+    ("BENCH_quant.json", "moe_engines[*].all_finished", "exact", 0),
+    ("BENCH_quant.json", "moe_engines[*].requests_finished", "exact", 0),
+    ("BENCH_quant.json", "moe_engines[*].tokens_generated", "exact", 0),
+    ("BENCH_quant.json", "moe_engines[*].tokens_per_s", "info", 0),
+    # modeled energy fold per weight format (deterministic account)
+    ("BENCH_quant.json", "energy[*].modeled_bytes_per_step", "exact", 0),
+    ("BENCH_quant.json", "energy[*].bytes_per_token", "exact", 0),
+    ("BENCH_quant.json", "energy[*].joules_per_token", "rel_band", 0.01),
+    # the quantized-MoE decode-step dispatch audit is byte-exact
+    ("BENCH_quant.json", "audit[*].match", "exact", 0),
+    ("BENCH_quant.json", "audit[*].dispatches", "exact", 0),
+    ("BENCH_quant.json", "audit[*].modeled_bytes_measured", "exact", 0),
+    ("BENCH_quant.json", "audit[*].modeled_bytes_expected", "exact", 0),
     # --- load: step-clock SLO bands + modeled energy --------------------
     # *_steps latencies count engine cycles under the replayer's virtual
     # clock — deterministic for a seeded trace, so they get bands; *_s
@@ -128,7 +151,8 @@ def _label(el, idx):
     if not isinstance(el, dict):
         return str(idx)
     parts = [str(el[k]) for k in ("kernel", "mode", "arch") if k in el][:1]
-    parts += [str(el[k]) for k in ("backend", "dtype", "kv_dtype", "phase")
+    parts += [str(el[k]) for k in ("backend", "dtype", "kv_dtype",
+                                   "weights", "phase", "engine")
               if k in el and str(el[k]) not in parts]
     return "/".join(parts) if parts else str(idx)
 

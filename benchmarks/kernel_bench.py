@@ -54,7 +54,8 @@ def run(csv=print):
     for bits in (8, 4):
         qt = quantize(wf, bits=bits, group_size=128, axis=-1)
         q_bytes = REGISTRY["qgemv"].bytes(qt.values, qt.scales, x)
-        us = _time(lambda: K.qgemv(qt.values, qt.scales, x, TROOP))
+        us = _time(lambda: K.qgemv(qt.values, qt.scales, x, TROOP,
+                                   bits=bits))
         csv(f"kernel/qgemv/int{bits},{us:.0f},interp_us "
             f"bytes_ratio_vs_bf16={q_bytes / bytes_:.2f} "
             f"v5e_bound_us={q_bytes / HBM_BW * 1e6:.1f}")

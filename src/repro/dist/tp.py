@@ -223,9 +223,10 @@ def param_specs(model, params, plan: TPPlan):
         axes = axes_by_path.get(_pathkeys(path))
         if isinstance(leaf, QuantizedTensor):
             if getattr(leaf, "bits", 8) != 8:
-                raise ValueError("int4-packed weights cannot shard: the "
+                fmt = "mx4" if getattr(leaf, "fmt", "int") == "mx" else "int4"
+                raise ValueError(f"{fmt}-packed weights cannot shard: the "
                                  "packing pairs rows across the shard "
-                                 "boundary — use int8 under TP")
+                                 "boundary — use int8 or fp8 under TP")
             ndim = len(leaf.shape)
         else:
             ndim = getattr(leaf, "ndim", 0)

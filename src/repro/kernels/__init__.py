@@ -8,11 +8,13 @@ and the best tuned config for (kernel, shapes, dtype, backend) is resolved
 from the persistent tune cache (heuristic default on a miss).
 """
 from repro.core.troop import BASELINE, TROOP, TroopConfig
-from repro.kernels.ops import (axpy, batched_gemv, batched_qgemv,
-                               decode_attention, decode_attention_int8,
+from repro.kernels.ops import (axpy, batched_gemv, batched_mx_qgemv,
+                               batched_qgemv, decode_attention,
+                               decode_attention_int8,
                                decode_attention_stats, dotp, flash_attention,
-                               fused_adamw, gemv, lse_combine, mamba_scan,
-                               paged_decode_attention,
+                               fused_adamw, gemv, grouped_expert_qgemv,
+                               lse_combine, mamba_scan, mx_qgemv,
+                               mx_qgemv_swiglu, paged_decode_attention,
                                paged_decode_attention_int8,
                                prefill_attention_paged, qgemv, rmsnorm,
                                wkv6, wkv6_with_state)
@@ -24,6 +26,8 @@ __all__ = ["gemv", "dotp", "axpy", "rmsnorm", "fused_adamw",
            "decode_attention_int8", "paged_decode_attention",
            "paged_decode_attention_int8", "prefill_attention_paged",
            "qgemv", "batched_qgemv",
+           "mx_qgemv", "batched_mx_qgemv", "mx_qgemv_swiglu",
+           "grouped_expert_qgemv",
            "flash_attention",
            "wkv6", "wkv6_with_state", "mamba_scan", "batched_gemv",
            "lse_combine", "BASELINE", "TROOP", "TroopConfig",

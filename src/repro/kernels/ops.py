@@ -25,13 +25,17 @@ from repro.kernels.mamba_scan import mamba_scan
 from repro.kernels.prefill_attention import prefill_attention_paged
 from repro.kernels.rmsnorm import rmsnorm
 from repro.kernels.rwkv6 import wkv6
-from repro.quant.kernels import batched_qgemv, qgemv
+from repro.quant.kernels import (batched_mx_qgemv, batched_qgemv,
+                                 grouped_expert_qgemv, mx_qgemv,
+                                 mx_qgemv_swiglu, qgemv)
 
 __all__ = ["gemv", "dotp", "axpy", "rmsnorm", "fused_adamw",
            "decode_attention", "decode_attention_stats", "decode_attention_int8",
            "paged_decode_attention", "paged_decode_attention_int8",
            "prefill_attention_paged",
            "flash_attention", "qgemv", "batched_qgemv",
+           "mx_qgemv", "batched_mx_qgemv", "mx_qgemv_swiglu",
+           "grouped_expert_qgemv",
            "wkv6", "wkv6_with_state", "mamba_scan", "batched_gemv",
            "lse_combine", "BASELINE", "TROOP", "TroopConfig"]
 

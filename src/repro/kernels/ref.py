@@ -109,17 +109,50 @@ def prefill_attention_paged(q, k_pool, v_pool, block_tables, q_offset,
     return o.reshape(B, C, H, hd)
 
 
-def qgemv(wq, scales, x):
-    """Fused-dequant GEMV oracle: grouped dequant then fp32 GEMV."""
+def qgemv(wq, scales, x, *, bits: int = 8):
+    """Fused-dequant GEMV oracle: grouped dequant then fp32 GEMV.
+    ``bits`` is explicit (4 = nibble-packed along K), never inferred."""
     from repro.quant.tensor import dequantize_values
-    bits = 8 if wq.shape[1] == x.shape[-1] else 4
     w = dequantize_values(wq, scales, axis=-1, bits=bits)
     return jnp.dot(w, x.astype(jnp.float32).T).T
 
 
-def batched_qgemv(wq, scales, xs):
+def batched_qgemv(wq, scales, xs, *, bits: int = 8):
     """xs (B, K) -> (B, N): same oracle, batch on the lane dim."""
-    return qgemv(wq, scales, xs)
+    return qgemv(wq, scales, xs, bits=bits)
+
+
+def _mx_dequant(wq, scales):
+    """Stored-layout MX dequant: (K | K//2-packed, N) codes + (K//g, N)
+    E8M0 -> (K, N) fp32.  fp4 vs fp8 discriminated by dtype."""
+    from repro.quant.tensor import dequantize_values
+    bits = 4 if jnp.dtype(wq.dtype) == jnp.dtype(jnp.uint8) else 8
+    return dequantize_values(wq, scales, axis=-2, bits=bits, fmt="mx")
+
+
+def mx_qgemv(wq, scales, x):
+    """MX GEMV oracle: block-exponent dequant then fp32 GEMV."""
+    return jnp.dot(x.astype(jnp.float32), _mx_dequant(wq, scales))
+
+
+def batched_mx_qgemv(wq, scales, xs):
+    """xs (B, K) -> (B, N): same oracle, batch on the sublane dim."""
+    return mx_qgemv(wq, scales, xs)
+
+
+def mx_qgemv_swiglu(wg, sg, wu, su, x):
+    """Fused MX swiglu oracle: silu(wg.T x) * (wu.T x), all fp32."""
+    g = mx_qgemv(wg, sg, x)
+    u = mx_qgemv(wu, su, x)
+    return g * jax.nn.sigmoid(g) * u
+
+
+def grouped_expert_qgemv(wq, scales, xs, expert_ids):
+    """Dequantize-then-einsum oracle: gather the selected experts, dequant
+    the full stack, one GEMV per (token-slot, expert) row."""
+    w = _mx_dequant(wq, scales)                      # (E, K, N) fp32
+    wsel = jnp.take(w, expert_ids, axis=0)           # (topk, K, N)
+    return jnp.einsum("tk,tkn->tn", xs.astype(jnp.float32), wsel)
 
 
 def flash_attention(q, k, v, causal=True):

@@ -60,11 +60,15 @@ def main():
                          "16 for bf16 pools, 32 for --kv-cache-dtype int8)")
     ap.add_argument("--num-pages", type=int, default=None,
                     help="pool pages per layer (default: full occupancy)")
-    ap.add_argument("--quantize-weights", choices=("none", "int8", "int4"),
+    ap.add_argument("--quantize-weights",
+                    choices=("none", "int8", "int4", "mx4", "fp8"),
                     default="none",
                     help="quantize matmul weights via repro.quant."
                          "quantize_params (MLP/attention projections; "
-                         "embeddings/norms stay raw — DESIGN.md §5)")
+                         "embeddings/norms stay raw — DESIGN.md §5). "
+                         "mx4/fp8 are the MX microscaling formats "
+                         "(block-exponent E8M0 scales; MoE expert stacks "
+                         "quantize too — DESIGN.md §11)")
     ap.add_argument("--quantize-group-size", type=int, default=128,
                     help="scale-group rows on the contraction axis (32-row "
                          "granule multiple; under --tp each weight shard "
@@ -144,6 +148,19 @@ def main():
                          f"archs only (the verify slab goes through the "
                          f"chunked attention path); {cfg.name} mixes in "
                          f"other mixer kinds")
+    if args.quantize_weights in ("mx4", "fp8") and args.tp > 1:
+        from repro.quant.tensor import granule
+        if args.quantize_weights == "mx4":
+            raise SystemExit(
+                "--quantize-weights mx4 packs fp4 row pairs that would "
+                "straddle the --tp shard boundary (mirrors the int4 "
+                "packed-pair rejection in tp.plan); use fp8 under TP")
+        if cfg.d_model % args.tp or (cfg.d_model // args.tp) % granule():
+            raise SystemExit(
+                f"--quantize-weights fp8 under --tp {args.tp}: the "
+                f"{granule()}-row MX scale blocks must tile each weight "
+                f"shard (d_model={cfg.d_model} does not hold a whole "
+                f"number of blocks per shard)")
     engine_cfg = EngineConfig(
         slots=args.slots, cache_len=args.cache_len,
         backend=args.backend, page_size=args.page_size,
@@ -163,7 +180,19 @@ def main():
         quantize_weights=args.quantize_weights,
         kv_cache_dtype="int8" if kv_int8 else ""))
     params = M.unbox(model.init(jax.random.PRNGKey(0)))
-    if args.quantize_weights != "none":
+    if args.quantize_weights in ("mx4", "fp8"):
+        from repro.quant import quantize_params, quantized_stats
+        try:
+            params = quantize_params(params, fmt=args.quantize_weights,
+                                     tp=args.tp)
+        except AssertionError as e:
+            raise SystemExit(str(e))
+        qs = quantized_stats(params)
+        print(f"quantized {qs['quantized_leaves']} weight leaves "
+              f"({args.quantize_weights}): {qs['quantized_bytes']:,} B "
+              f"(was {qs['quantized_fp32_bytes']:,} B fp32); "
+              f"{qs['raw_bytes']:,} B left raw")
+    elif args.quantize_weights != "none":
         from repro.quant import quantize_params, quantized_stats
         try:
             params = quantize_params(
@@ -207,7 +236,8 @@ def main():
                 cfg, slots=args.slots, cache_len=args.cache_len,
                 page_size=args.page_size,
                 kv_dtype="int8" if kv_int8 else "bfloat16",
-                weights="int8" if args.quantize_weights == "int8"
+                weights=args.quantize_weights
+                if args.quantize_weights in ("int8", "mx4", "fp8")
                 else "bfloat16",
                 quant_group=args.quantize_group_size))
         except ValueError as e:
@@ -253,7 +283,7 @@ def main():
                   f"wall {row['wall_s'] * 1e3:8.1f} ms, "
                   f"roofline frac {row['fraction_of_roofline']:.2e}")
         audit_row = None
-        if args.quantize_weights == "none":
+        if args.quantize_weights in ("none", "mx4", "fp8"):
             from repro.obs import audit_decode_step
             try:
                 audit = audit_decode_step(model, cache_len=args.cache_len,

@@ -94,6 +94,16 @@ def _gemv_routable(x, w) -> bool:
             and int(np.prod(x.shape[:-1], dtype=np.int64)) == 1 and _no_tp())
 
 
+def _mx_routable(x, w) -> bool:
+    """Single-token projection against a 2-D MX-quantized weight whose
+    shared-exponent blocks run down the contraction axis — the layout
+    ``mx_qgemv`` walks without a transpose."""
+    return (isinstance(w, QuantizedTensor) and w.fmt == "mx"
+            and len(w.shape) == 2 and w.axis == -2 and x.ndim >= 1
+            and x.shape[-1] == w.shape[0]
+            and int(np.prod(x.shape[:-1], dtype=np.int64)) == 1 and _no_tp())
+
+
 def _routed_gemv(w_nk, x, dtype):
     """Dispatch the registry gemv on an (N, K) weight; returns (N,)."""
     from repro.kernels import ops as KO
@@ -129,6 +139,17 @@ def apply_dense(p, x, dtype=None, tp=None):
     ring collectives so the gather/scatter hides behind the GEMV."""
     w = p["w"]
     quantized = isinstance(w, QuantizedTensor)
+    if _KERNEL_ROUTED and quantized and _mx_routable(x, w):
+        # MX weights stream their fp4/fp8 codes + E8M0 scales straight into
+        # the fused block-exponent dequant GEMV (DESIGN.md §11)
+        from repro.kernels import ops as KO
+        if dtype is not None:
+            x = x.astype(dtype)
+        y = KO.mx_qgemv(w.values, w.scales,
+                        x.reshape(-1)).astype(dtype or x.dtype)
+        if "b" in p:
+            y = y + p["b"].astype(y.dtype)
+        return y.reshape(x.shape[:-1] + (w.shape[-1],))
     if quantized:
         # repro.quant weights (DESIGN.md §5): grouped dequant on the fly —
         # the GSPMD-shardable reference of the fused-dequant qgemv kernels
@@ -252,7 +273,19 @@ def apply_mlp(p, x, act: str, dtype):
     from repro.core.partitioning import constrain
     from repro.dist import tp as _tp
     ffn_axes = ("batch",) + (None,) * (x.ndim - 2) + ("ffn",)
-    if "wi_gate" in p:
+    if "wi_gate" in p and _KERNEL_ROUTED \
+            and _mx_routable(x, p["wi_gate"]["w"]) \
+            and _mx_routable(x, p["wi_up"]["w"]) \
+            and "b" not in p["wi_gate"] and "b" not in p["wi_up"]:
+        # fused MX swiglu: gate + up dequant-GEMV and the silu·gate
+        # epilogue in ONE kernel pass (DESIGN.md §11)
+        from repro.kernels import ops as KO
+        wg, wu = p["wi_gate"]["w"], p["wi_up"]["w"]
+        xk = x.astype(dtype) if dtype is not None else x
+        h = KO.mx_qgemv_swiglu(wg.values, wg.scales, wu.values, wu.scales,
+                               xk.reshape(-1)).astype(dtype or x.dtype)
+        h = h.reshape(x.shape[:-1] + (wg.shape[-1],))
+    elif "wi_gate" in p:
         h = jax.nn.silu(apply_dense(p["wi_gate"], x, dtype, tp="col")) * \
             apply_dense(p["wi_up"], x, dtype, tp="col")
     else:

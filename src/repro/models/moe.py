@@ -40,6 +40,15 @@ def moe_init(key, cfg):
     return p
 
 
+def _expert_stack(w, dtype):
+    """Expert-stack view for the gather-path einsums: MX-quantized stacks
+    dequantize in-graph (prefill / batched decode — the grouped kernel only
+    serves the single-token routed path)."""
+    if isinstance(w, M.QuantizedTensor):
+        return w.dequantize(dtype)
+    return w.astype(dtype)
+
+
 def _experts_init(key, e, din, dout, axes):
     scale = 1.0 / jnp.sqrt(din).astype(jnp.float32)
     w = scale * jax.random.truncated_normal(
@@ -138,22 +147,42 @@ def _apply_moe_routed(p, cfg, x, *, dtype):
     top_p = top_p * mo.routed_scaling_factor
 
     xv = x.reshape(d).astype(dtype)
-    y = jnp.zeros((d,), dtype)
-    for j in range(k):
-        e = top_e[j]
-        up_w = jax.lax.dynamic_index_in_dim(
-            p["wi_up"]["w"], e, keepdims=False)          # (d, d_ff)
-        up = KO.gemv(up_w.T.astype(dtype), xv)
+    if isinstance(p["wi_up"]["w"], M.QuantizedTensor):
+        # MX expert stacks: one grouped kernel call per projection — the
+        # router's top-k ids are scalar-prefetched and drive the BlockSpec
+        # index map, so only the selected experts' fp4/fp8 tiles + E8M0
+        # scales are ever DMA'd (DESIGN.md §11)
+        ids = top_e.astype(jnp.int32)
+        xs = jnp.broadcast_to(xv, (k, d))
+        wu = p["wi_up"]["w"]
+        up = KO.grouped_expert_qgemv(wu.values, wu.scales, xs, ids)
         if "wi_gate" in p:
-            gate_w = jax.lax.dynamic_index_in_dim(
-                p["wi_gate"]["w"], e, keepdims=False)
-            h = jax.nn.silu(KO.gemv(gate_w.T.astype(dtype), xv)) * up
+            wg = p["wi_gate"]["w"]
+            gate = KO.grouped_expert_qgemv(wg.values, wg.scales, xs, ids)
+            h = jax.nn.silu(gate) * up                   # (k, d_ff)
         else:
             h = M.activation(cfg.act)(up)
-        wo_w = jax.lax.dynamic_index_in_dim(
-            p["wo"]["w"], e, keepdims=False)             # (d_ff, d)
-        yj = KO.gemv(wo_w.T.astype(dtype), h.astype(dtype))
-        y = y + top_p[j].astype(dtype) * yj.astype(dtype)
+        wo = p["wo"]["w"]
+        yk = KO.grouped_expert_qgemv(wo.values, wo.scales,
+                                     h.astype(dtype), ids)   # (k, d)
+        y = jnp.sum(top_p[:, None] * yk, axis=0).astype(dtype)
+    else:
+        y = jnp.zeros((d,), dtype)
+        for j in range(k):
+            e = top_e[j]
+            up_w = jax.lax.dynamic_index_in_dim(
+                p["wi_up"]["w"], e, keepdims=False)      # (d, d_ff)
+            up = KO.gemv(up_w.T.astype(dtype), xv)
+            if "wi_gate" in p:
+                gate_w = jax.lax.dynamic_index_in_dim(
+                    p["wi_gate"]["w"], e, keepdims=False)
+                h = jax.nn.silu(KO.gemv(gate_w.T.astype(dtype), xv)) * up
+            else:
+                h = M.activation(cfg.act)(up)
+            wo_w = jax.lax.dynamic_index_in_dim(
+                p["wo"]["w"], e, keepdims=False)         # (d_ff, d)
+            yj = KO.gemv(wo_w.T.astype(dtype), h.astype(dtype))
+            y = y + top_p[j].astype(dtype) * yj.astype(dtype)
     y = y.reshape(B, T, d)
     if "shared" in p:
         ys = M.apply_mlp(p["shared"], x, cfg.act, dtype)
@@ -168,8 +197,10 @@ def apply_moe(p, cfg, x, *, dtype, num_groups: int = 1):
     """x: (B, T, d) -> (B, T, d), aux-loss scalar."""
     mo = cfg.moe
     B, T, d = x.shape
+    wu = p["wi_up"]["w"]
+    mx_experts = isinstance(wu, M.QuantizedTensor) and wu.fmt == "mx"
     if M.kernel_routed() and B * T == 1 and M._no_tp() \
-            and not isinstance(p["wi_up"]["w"], M.QuantizedTensor):
+            and (mx_experts or not isinstance(wu, M.QuantizedTensor)):
         return _apply_moe_routed(p, cfg, x, dtype=dtype)
     N = B * T
     G = num_groups
@@ -207,14 +238,16 @@ def apply_moe(p, cfg, x, *, dtype, num_groups: int = 1):
         El = p["wi_up"]["w"].shape[0]
         xe = jax.lax.dynamic_slice_in_dim(
             xe, _tp.axis_index() * El, El, axis=1)
-    up = jnp.einsum("gecd,edf->gecf", xe, p["wi_up"]["w"].astype(dtype))
+    up = jnp.einsum("gecd,edf->gecf", xe, _expert_stack(p["wi_up"]["w"],
+                                                        dtype))
     if "wi_gate" in p:
-        gate = jnp.einsum("gecd,edf->gecf", xe, p["wi_gate"]["w"].astype(dtype))
+        gate = jnp.einsum("gecd,edf->gecf", xe,
+                          _expert_stack(p["wi_gate"]["w"], dtype))
         h = jax.nn.silu(gate) * up
     else:
         h = M.activation(cfg.act)(up)
     h = PT.constrain(h, ("batch", "expert", None, "expert_ff"))
-    ye = jnp.einsum("gecf,efd->gecd", h, p["wo"]["w"].astype(dtype))
+    ye = jnp.einsum("gecf,efd->gecd", h, _expert_stack(p["wo"]["w"], dtype))
     if ctx is not None:
         ye = jax.lax.all_gather(ye, ctx.axis, axis=1, tiled=True)
     ye = PT.constrain(ye, ("batch", "expert", None, None))

@@ -39,7 +39,7 @@ class RuntimeConfig:
     #   kernel (no gathered dense view); default off: the jnp path is the
     #   GSPMD-shardable reference (interpret-mode Pallas is slow on CPU)
     # ---- repro.quant (DESIGN.md §5): a quantized engine is one flag ----
-    quantize_weights: str = "none"  # none | int8 | int4: matmul-weight
+    quantize_weights: str = "none"  # none|int8|int4|mx4|fp8: matmul-weight
     #   quantization policy tag; the launcher applies
     #   repro.quant.quantize_params and apply_dense dequantizes on the fly
     kv_cache_dtype: str = ""       # "" -> cache_dtype. "int8" under the

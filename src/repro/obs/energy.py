@@ -74,7 +74,12 @@ def decode_step_account(model_cfg, *, slots: int, cache_len: int,
     routed+shared experts of a MoE layer), plus final norm + lm head.
     ``kv_dtype="int8"`` switches the attention entry to the int8 paged
     kernel (scale pages included); ``weights="int8"`` routes projections
-    through ``qgemv`` (value + scale traffic).
+    through ``qgemv`` (value + scale traffic); ``weights="mx4"``/``"fp8"``
+    routes them through the MX kernels — ``mx_qgemv`` projections, one
+    fused ``mx_qgemv_swiglu`` per swiglu MLP half-pair, and
+    ``grouped_expert_qgemv`` for the quantized MoE expert stacks (the
+    path-policy flip: experts quantize under MX) — mirroring exactly what
+    ``kernel_routing`` dispatches, so the audit stays byte-exact.
     """
     from repro.serve.kvcache import PageSpec
 
@@ -84,6 +89,7 @@ def decode_step_account(model_cfg, *, slots: int, cache_len: int,
     H, KV, hd, V = (cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
                     cfg.vocab_size)
     dt = jnp.dtype(cfg.dtype)
+    mx = weights in ("mx4", "fp8")
     if kv_dtype == "int8":
         # int8 pages obey the coarser 32-row layout granule (mechanism D)
         from repro.quant.tensor import granule
@@ -91,8 +97,27 @@ def decode_step_account(model_cfg, *, slots: int, cache_len: int,
     spec = PageSpec.for_engine(slots, cache_len, page_size, None, kv_dtype)
     P, page, nblk = spec.num_pages, spec.page_size, spec.blocks_per_slot
 
-    def proj(n_out: int, n_in: int, tag: str, calls: int = 1) -> AccountEntry:
-        if weights == "int8":
+    def mx_w(n_in: int, n_out: int, stack: int = 0):
+        """(values, scales) placeholders of one MX weight, mirroring
+        ``quantize_mx``: packed fp4 when the extent nibble-packs (mx4),
+        fp8 otherwise; 32-row E8M0 blocks, collapsing on non-dividing
+        extents."""
+        from repro.quant.tensor import FP8_DTYPE, granule
+        g = granule() if n_in % granule() == 0 else n_in
+        lead = (stack,) if stack else ()
+        if weights == "mx4" and n_in % 2 == 0:
+            vals = sds(lead + (n_in // 2, n_out), jnp.uint8)
+        else:
+            vals = sds(lead + (n_in, n_out), FP8_DTYPE)
+        return vals, sds(lead + (n_in // g, n_out), jnp.uint8)
+
+    def proj(n_out: int, n_in: int, tag: str, calls: int = 1,
+             raw: bool = False) -> AccountEntry:
+        if mx and not raw:
+            return AccountEntry(
+                "mx_qgemv", (*mx_w(n_in, n_out), sds((n_in,), dt)),
+                calls, tag)
+        if weights == "int8" and not raw:
             g = quant_group if n_in % quant_group == 0 else n_in
             return AccountEntry(
                 "qgemv", (sds((n_out, n_in), jnp.int8),
@@ -100,6 +125,18 @@ def decode_step_account(model_cfg, *, slots: int, cache_len: int,
                           sds((n_in,), dt)), calls, tag)
         return AccountEntry(
             "gemv", (sds((n_out, n_in), dt), sds((n_in,), dt)), calls, tag)
+
+    def mx_swiglu(n_in: int, n_out: int, tag: str) -> AccountEntry:
+        vg, sg = mx_w(n_in, n_out)
+        return AccountEntry(
+            "mx_qgemv_swiglu", (vg, sg, vg, sg, sds((n_in,), dt)), 1, tag)
+
+    def mx_grouped(E: int, topk: int, n_in: int, n_out: int,
+                   calls: int = 1) -> AccountEntry:
+        return AccountEntry(
+            "grouped_expert_qgemv",
+            (*mx_w(n_in, n_out, stack=E), sds((topk, n_in), dt),
+             sds((topk,), jnp.int32)), calls, "moe")
 
     def attn_entry() -> AccountEntry:
         if kv_dtype == "int8":
@@ -143,21 +180,41 @@ def decode_step_account(model_cfg, *, slots: int, cache_len: int,
             entries.append(AccountEntry(
                 "gemv", (sds((mo.num_experts, d), jnp.float32),
                          sds((d,), jnp.float32)), 1, "router"))
-            entries.append(proj(mo.d_ff, d, "moe",
-                                calls=mo.num_experts_per_tok * (mult - 1)))
-            entries.append(proj(d, mo.d_ff, "moe",
-                                calls=mo.num_experts_per_tok))
+            if mx:
+                # path-policy flip: MX expert stacks dispatch per router
+                # selection through the grouped kernel (one call per
+                # projection, the top-k ids scalar-prefetched)
+                E, k = mo.num_experts, mo.num_experts_per_tok
+                entries.append(mx_grouped(E, k, d, mo.d_ff,
+                                          calls=mult - 1))
+                entries.append(mx_grouped(E, k, mo.d_ff, d))
+            else:
+                entries.append(proj(
+                    mo.d_ff, d, "moe",
+                    calls=mo.num_experts_per_tok * (mult - 1)))
+                entries.append(proj(d, mo.d_ff, "moe",
+                                    calls=mo.num_experts_per_tok))
             if mo.shared_d_ff:
-                entries.append(proj(mo.shared_d_ff, d, "moe",
-                                    calls=mult - 1))
+                if mx and mult == 3:
+                    entries.append(mx_swiglu(d, mo.shared_d_ff, "moe"))
+                else:
+                    entries.append(proj(mo.shared_d_ff, d, "moe",
+                                        calls=mult - 1))
                 entries.append(proj(d, mo.shared_d_ff, "moe"))
                 if mo.shared_expert_gate:
-                    entries.append(proj(1, d, "moe"))
+                    # "shared_gate" is outside quant.params.QUANTIZE_KEYS:
+                    # raw under MX (the byte-exact audit sees a plain gemv)
+                    entries.append(proj(1, d, "moe", raw=mx))
         else:
-            entries.append(proj(cfg.d_ff, d, "mlp", calls=mult - 1))
+            if mx and mult == 3:
+                entries.append(mx_swiglu(d, cfg.d_ff, "mlp"))
+            else:
+                entries.append(proj(cfg.d_ff, d, "mlp", calls=mult - 1))
             entries.append(proj(d, cfg.d_ff, "mlp"))
     entries.append(norm)                                      # final norm
-    entries.append(proj(V, d, "head"))                        # lm head
+    # tied read-out goes through the raw embed table (embeds never
+    # quantize); a separate lm_head quantizes with the projections
+    entries.append(proj(V, d, "head", raw=mx and cfg.tie_embeddings))
     for e in entries:
         if e.kernel not in REG:
             raise KeyError(f"account kernel {e.kernel!r} not registered")

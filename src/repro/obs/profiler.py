@@ -396,8 +396,12 @@ def audit_decode_step(model, *, cache_len: int = 64,
     ``kernel_routing`` active so every projection/norm/unembed/expert
     dispatches its registry kernel.  ``scan_layers`` is forced off (a
     scanned stack traces its body once, under-counting by num_layers).
-    Weight-quantized models are not auditable this way (the jnp path
-    dequantizes in-graph rather than dispatching ``qgemv``).
+    int8/int4-quantized models are not auditable this way (the jnp path
+    dequantizes in-graph rather than dispatching ``qgemv``); MX-quantized
+    models ARE — the routed path dispatches ``mx_qgemv`` /
+    ``mx_qgemv_swiglu`` / ``grouped_expert_qgemv``, and the params are
+    MX-quantized abstractly (inside ``jax.eval_shape``) so the captured
+    signatures carry the fp4/fp8 + E8M0 placeholder shapes.
     """
     import dataclasses as _dc
 
@@ -411,10 +415,11 @@ def audit_decode_step(model, *, cache_len: int = 64,
     from repro.serve.step import make_serve_step
 
     cfg, rt = model.cfg, model.rt
-    if rt.quantize_weights not in ("", "none", None):
-        raise ValueError("audit_decode_step models raw-weight projections; "
-                         f"quantize_weights={rt.quantize_weights!r} is not "
-                         "auditable (the jnp path dequantizes in-graph)")
+    weights = rt.quantize_weights or "none"
+    if weights not in ("none", "mx4", "fp8"):
+        raise ValueError("audit_decode_step models raw-weight or MX "
+                         f"projections; quantize_weights={weights!r} is "
+                         "not auditable (the jnp path dequantizes in-graph)")
     kv_dtype = "int8" if rt.kv_cache_dtype == "int8" else "bfloat16"
     if kv_dtype == "int8":
         from repro.quant.tensor import granule
@@ -438,6 +443,10 @@ def audit_decode_step(model, *, cache_len: int = 64,
 
     params = M.unbox(jax.eval_shape(
         lambda: model_u.init(jax.random.PRNGKey(0))))
+    if weights != "none":
+        from repro.quant import quantize_params
+        params = jax.eval_shape(
+            lambda p: quantize_params(p, fmt=weights), params)
     prof = DispatchProfiler()
     prof.install()
     try:
@@ -449,7 +458,9 @@ def audit_decode_step(model, *, cache_len: int = 64,
     measured = Counter((r.kernel, r.signature) for r in prof.records)
     measured_bytes = sum(r.modeled_bytes for r in prof.records)
     entries = decode_step_account(cfg, slots=1, cache_len=cache_len,
-                                  page_size=page_size, kv_dtype=kv_dtype)
+                                  page_size=page_size, kv_dtype=kv_dtype,
+                                  weights="bfloat16" if weights == "none"
+                                  else weights)
     expected: Counter = Counter()
     for e in entries:
         expected[(e.kernel, arg_signature(e.args))] += e.calls

@@ -11,7 +11,9 @@ the attainable decode time (DESIGN.md §5).  Three layers:
   * ``params``  — ``quantize_params``: policy-driven pass over a model's
     params pytree (MLP/attention projections yes; embeddings/norms no).
   * ``kernels`` — fused-dequant Pallas kernels (``qgemv``,
-    ``batched_qgemv``), registered with ``repro.tune`` under bytes models
+    ``batched_qgemv``, and the MX family ``mx_qgemv`` /
+    ``batched_mx_qgemv`` / ``mx_qgemv_swiglu`` / ``grouped_expert_qgemv``),
+    registered with ``repro.tune`` under bytes models
     that count quantized widths and scale traffic.  Imported lazily so
     model code can use the tensor layer without touching Pallas; the int8
     decode-attention kernels live with their bf16 siblings in
@@ -21,23 +23,29 @@ from repro.quant.params import (default_policy, quantize_params,
                                 quantized_stats)
 from repro.quant.tensor import (QuantizedTensor, absmax_scales, dequantize,
                                 dequantize_int8, dequantize_kv,
-                                dequantize_values, granule, pack_int4,
+                                dequantize_values, e8m0_decode, fp4_decode,
+                                fp4_encode, granule, pack_fp4, pack_int4,
                                 quantize, quantize_int8, quantize_kv,
-                                unpack_int4)
+                                quantize_mx, unpack_fp4, unpack_int4)
+
+_LAZY_KERNELS = ("qgemv", "batched_qgemv", "mx_qgemv", "batched_mx_qgemv",
+                 "mx_qgemv_swiglu", "grouped_expert_qgemv")
 
 __all__ = [
     "QuantizedTensor", "absmax_scales", "quantize", "dequantize",
     "dequantize_values", "pack_int4", "unpack_int4", "granule",
+    "quantize_mx", "fp4_encode", "fp4_decode", "pack_fp4", "unpack_fp4",
+    "e8m0_decode",
     "quantize_kv", "dequantize_kv", "quantize_int8", "dequantize_int8",
     "quantize_params", "default_policy", "quantized_stats",
-    "qgemv", "batched_qgemv",
+    *_LAZY_KERNELS,
 ]
 
 
 def __getattr__(name):
     # Pallas kernels resolve lazily: keeps `import repro.quant` light for
     # model code while `repro.quant.qgemv` still works.
-    if name in ("qgemv", "batched_qgemv"):
+    if name in _LAZY_KERNELS:
         from repro.quant import kernels as _k
         return getattr(_k, name)
     raise AttributeError(f"module 'repro.quant' has no attribute {name!r}")

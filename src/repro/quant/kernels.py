@@ -31,18 +31,8 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.core.troop import TroopConfig
-from repro.quant.tensor import quantize
+from repro.quant.tensor import E8M0_BIAS, quantize, quantize_mx
 from repro.tune.registry import itemsize, numel, troop_kernel
-
-
-def _infer_bits(wq, K: int) -> int:
-    """8 if the stored K extent is logical, 4 if nibble-packed (K//2)."""
-    if wq.shape[1] == K:
-        return 8
-    assert wq.shape[1] == K // 2, \
-        f"weight K extent {wq.shape[1]} matches neither K={K} (int8) nor " \
-        f"K//2={K // 2} (packed int4)"
-    return 4
 
 
 def _dequant_block(w_ref, s_ref, *, bits: int, g: int):
@@ -94,11 +84,12 @@ def _kernel_2s(w0, s0, x0, w1, s1, x1, o_ref, acc, *, bits, g):
         o_ref[...] = acc[...].astype(o_ref.dtype)
 
 
-def _qgemv_2d(wq, scales, x2, cfg: TroopConfig):
+def _qgemv_2d(wq, scales, x2, cfg: TroopConfig, bits: int):
     """wq (N, Ks) int8, scales (N, K//g), x2 (K, B) -> (N, B) fp32."""
     N = wq.shape[0]
     K, B = x2.shape
-    bits = _infer_bits(wq, K)
+    assert wq.shape[1] == (K // 2 if bits == 4 else K), \
+        f"weight K extent {wq.shape[1]} inconsistent with bits={bits}, K={K}"
     g = K // scales.shape[1]
     pack = 2 if bits == 4 else 1
 
@@ -177,12 +168,14 @@ _QSPACE = {"streams": (1, 2), "unroll": (1, 2),
     bytes=_qgemv_bytes,
     streamed=_qgemv_streamed,
     space=_QSPACE,
+    key_kwargs=("bits",),
     ref="qgemv", example=_example)
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def qgemv(wq, scales, x, cfg: TroopConfig = TroopConfig()):
+@functools.partial(jax.jit, static_argnames=("cfg", "bits"))
+def qgemv(wq, scales, x, cfg: TroopConfig = TroopConfig(), *, bits: int = 8):
     """Quantized GEMV: wq (N, K | K//2-packed) int8, scales (N, K//g),
-    x (K,) -> y (N,) fp32.  Bit width inferred from the packed extent."""
-    return _qgemv_2d(wq, scales, x.reshape(-1, 1), cfg).reshape(-1)
+    x (K,) -> y (N,) fp32.  ``bits`` is carried explicitly from the
+    ``QuantizedTensor`` aux data (4 = nibble-packed along K)."""
+    return _qgemv_2d(wq, scales, x.reshape(-1, 1), cfg, bits).reshape(-1)
 
 
 @troop_kernel(
@@ -191,11 +184,364 @@ def qgemv(wq, scales, x, cfg: TroopConfig = TroopConfig()):
     bytes=_qgemv_bytes,
     streamed=_qgemv_streamed,
     space=_QSPACE,
+    key_kwargs=("bits",),
     ref="batched_qgemv",
     example=functools.partial(_example, batch=4))
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def batched_qgemv(wq, scales, xs, cfg: TroopConfig = TroopConfig()):
+@functools.partial(jax.jit, static_argnames=("cfg", "bits"))
+def batched_qgemv(wq, scales, xs, cfg: TroopConfig = TroopConfig(), *,
+                  bits: int = 8):
     """Small-batch decode projection: xs (B, K) -> (B, N) fp32.  The batch
     rides the lane dim of one kernel invocation — the weight stream (the
     roofline term) is unchanged from ``qgemv``."""
-    return _qgemv_2d(wq, scales, xs.T, cfg).T
+    return _qgemv_2d(wq, scales, xs.T, cfg, bits).T
+
+
+# --------------------------------------------------------------------------
+# MX microscaling kernels — block-exponent dequant in register
+# --------------------------------------------------------------------------
+# MX weights keep their stored (K, N) = (in_dim, out_dim) layout: the
+# shared-exponent blocks run down K (axis -2, one uint8 E8M0 per 32 rows),
+# so the kernels walk columns of the stored array directly — dequant is a
+# nibble unpack + exp2 multiply between the DMA and the FMA stream, and no
+# transpose ever materializes.  fp4 (uint8-packed e2m1) vs fp8
+# (float8_e4m3fn) is discriminated statically by ``values.dtype``.
+
+def _mx_bits(wq) -> int:
+    return 4 if jnp.dtype(wq.dtype) == jnp.dtype(jnp.uint8) else 8
+
+
+def _fp4_decode_block(w8):
+    """(bkp, bn) uint8 packed e2m1 -> (2*bkp, bn) fp32 (unpack along K)."""
+    lo = w8 & jnp.uint8(0x0F)
+    hi = jnp.right_shift(w8, 4)
+    c = jnp.stack([lo, hi], axis=1).reshape(2 * w8.shape[0], w8.shape[1])
+    c = c.astype(jnp.int32)
+    sign = 1.0 - 2.0 * (c >> 3).astype(jnp.float32)
+    exp = ((c >> 1) & 3).astype(jnp.float32)
+    man = (c & 1).astype(jnp.float32)
+    mag = jnp.where(exp == 0, 0.5 * man,
+                    (1.0 + 0.5 * man) * jnp.exp2(exp - 1.0))
+    return sign * mag
+
+
+def _mx_dequant_block(w_ref, s_ref, *, bits: int, g: int):
+    """(bk[, packed], bn) codes + (bk//g, bn) E8M0 -> (bk, bn) fp32."""
+    if bits == 4:
+        w = _fp4_decode_block(w_ref[...])
+    else:
+        w = w_ref[...].astype(jnp.float32)
+    bk, bn = w.shape
+    s = jnp.exp2(s_ref[...].astype(jnp.float32) - E8M0_BIAS)
+    return (w.reshape(bk // g, g, bn) * s[:, None, :]).reshape(bk, bn)
+
+
+def _mx_kernel_1s(w_ref, s_ref, x_ref, o_ref, acc, *, bits, g):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        acc[...] = jnp.zeros_like(acc)
+
+    w = _mx_dequant_block(w_ref, s_ref, bits=bits, g=g)
+    acc[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
+                        preferred_element_type=jnp.float32)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _():
+        o_ref[...] = acc[...].astype(o_ref.dtype)
+
+
+def _mx_kernel_2s(w0, s0, x0, w1, s1, x1, o_ref, acc, *, bits, g):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        acc[...] = jnp.zeros_like(acc)
+
+    a = jnp.dot(x0[...].astype(jnp.float32),
+                _mx_dequant_block(w0, s0, bits=bits, g=g),
+                preferred_element_type=jnp.float32)
+    b = jnp.dot(x1[...].astype(jnp.float32),
+                _mx_dequant_block(w1, s1, bits=bits, g=g),
+                preferred_element_type=jnp.float32)
+    acc[...] += a + b
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _():
+        o_ref[...] = acc[...].astype(o_ref.dtype)
+
+
+def _mx_tiles(N, K, g, pack, cfg: TroopConfig):
+    """Shared tile solve for the MX kernels: (bn, bk, steps, streams)."""
+    bn = min(cfg.block_n, N)
+    while N % bn:
+        bn //= 2
+    streams = cfg.streams if (K // g) % 2 == 0 and cfg.streams == 2 else 1
+    Kh = K // streams
+    bk = max(min(cfg.block_k * cfg.unroll, Kh) // g * g, g)
+    while Kh % bk:
+        bk -= g
+    assert bk % pack == 0, f"MX block_k {bk} not packable (pack={pack})"
+    return bn, bk, Kh // bk, streams
+
+
+def _mx_gemv_2d(wq, scales, x2, cfg: TroopConfig):
+    """wq (K | K//2-packed, N), scales (K//g, N), x2 (B, K) -> (B, N)."""
+    Ks, N = wq.shape
+    B, K = x2.shape
+    bits = _mx_bits(wq)
+    pack = 2 if bits == 4 else 1
+    g = K // scales.shape[0]
+    bn, bk, steps, streams = _mx_tiles(N, K, g, pack, cfg)
+    body = functools.partial(
+        _mx_kernel_1s if streams == 1 else _mx_kernel_2s, bits=bits, g=g)
+
+    w_lo = pl.BlockSpec((bk // pack, bn), lambda i, j: (j, i))
+    w_hi = pl.BlockSpec((bk // pack, bn), lambda i, j, o=steps: (j + o, i))
+    s_lo = pl.BlockSpec((bk // g, bn), lambda i, j: (j, i))
+    s_hi = pl.BlockSpec((bk // g, bn), lambda i, j, o=steps: (j + o, i))
+    x_lo = pl.BlockSpec((B, bk), lambda i, j: (0, j))
+    x_hi = pl.BlockSpec((B, bk), lambda i, j, o=steps: (0, j + o))
+
+    if streams == 1:
+        in_specs, ops = [w_lo, s_lo, x_lo], (wq, scales, x2)
+    else:
+        in_specs = [w_lo, s_lo, x_lo, w_hi, s_hi, x_hi]
+        ops = (wq, scales, x2, wq, scales, x2)
+    return pl.pallas_call(
+        body,
+        grid=(N // bn, steps),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((B, bn), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((B, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((B, bn), jnp.float32)],
+        interpret=cfg.interpret,
+    )(*ops)
+
+
+def _mx_example(small: bool = True, elem: str = "fp4", batch: int = 0):
+    N, K = (128, 512) if small else (2048, 4096)
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    qt = quantize_mx(jax.random.normal(ks[0], (K, N), jnp.float32),
+                     elem=elem, axis=-2)
+    shape = (batch, K) if batch else (K,)
+    x = jax.random.normal(ks[1], shape, jnp.bfloat16)
+    return (qt.values, qt.scales, x), {}
+
+
+def _mx_qgemv_bytes(wq, s, x):
+    K = x.shape[-1]
+    B = x.shape[0] if len(x.shape) == 2 else 1
+    return (numel(wq) * itemsize(wq) + numel(s) * itemsize(s)
+            + B * K * itemsize(x) + B * wq.shape[-1] * 4)
+
+
+def _mx_qgemv_streamed(wq, s, x):
+    out = (x.shape[0], wq.shape[-1]) if len(x.shape) == 2 else (wq.shape[-1],)
+    return [wq, s, x, jax.ShapeDtypeStruct(out, jnp.float32)]
+
+
+@troop_kernel(
+    "mx_qgemv",
+    flops=lambda wq, s, x: 2.0 * wq.shape[-1] * x.shape[-1],
+    bytes=_mx_qgemv_bytes,
+    streamed=_mx_qgemv_streamed,
+    space=_QSPACE,
+    ref="mx_qgemv", example=_mx_example)
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def mx_qgemv(wq, scales, x, cfg: TroopConfig = TroopConfig()):
+    """MX GEMV: wq (K | K//2-packed, N) fp4/fp8 codes, scales (K//g, N)
+    E8M0, x (K,) -> y (N,) fp32.  Block-exponent dequant in register."""
+    return _mx_gemv_2d(wq, scales, x.reshape(1, -1), cfg).reshape(-1)
+
+
+@troop_kernel(
+    "batched_mx_qgemv",
+    flops=lambda wq, s, xs: 2.0 * xs.shape[0] * wq.shape[-1] * xs.shape[-1],
+    bytes=_mx_qgemv_bytes,
+    streamed=_mx_qgemv_streamed,
+    space=_QSPACE,
+    ref="batched_mx_qgemv",
+    example=functools.partial(_mx_example, batch=4))
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def batched_mx_qgemv(wq, scales, xs, cfg: TroopConfig = TroopConfig()):
+    """Small-batch MX projection: xs (B, K) -> (B, N) fp32.  The batch
+    rides the sublane dim; the weight stream is unchanged."""
+    return _mx_gemv_2d(wq, scales, xs, cfg)
+
+
+def _mx_swiglu_kernel(wg_ref, sg_ref, wu_ref, su_ref, x_ref, o_ref,
+                      acc_g, acc_u, *, bits, g):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        acc_g[...] = jnp.zeros_like(acc_g)
+        acc_u[...] = jnp.zeros_like(acc_u)
+
+    x = x_ref[...].astype(jnp.float32)
+    acc_g[...] += jnp.dot(x, _mx_dequant_block(wg_ref, sg_ref,
+                                               bits=bits, g=g),
+                          preferred_element_type=jnp.float32)
+    acc_u[...] += jnp.dot(x, _mx_dequant_block(wu_ref, su_ref,
+                                               bits=bits, g=g),
+                          preferred_element_type=jnp.float32)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _():
+        a = acc_g[...]
+        o_ref[...] = (a * jax.nn.sigmoid(a)
+                      * acc_u[...]).astype(o_ref.dtype)
+
+
+def _mx_swiglu_example(small: bool = True, elem: str = "fp4"):
+    N, K = (128, 512) if small else (2048, 4096)
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    qg = quantize_mx(jax.random.normal(ks[0], (K, N), jnp.float32),
+                     elem=elem, axis=-2)
+    qu = quantize_mx(jax.random.normal(ks[1], (K, N), jnp.float32),
+                     elem=elem, axis=-2)
+    x = jax.random.normal(ks[2], (K,), jnp.bfloat16)
+    return (qg.values, qg.scales, qu.values, qu.scales, x), {}
+
+
+def _mx_swiglu_bytes(wg, sg, wu, su, x):
+    return (numel(wg) * itemsize(wg) + numel(sg) * itemsize(sg)
+            + numel(wu) * itemsize(wu) + numel(su) * itemsize(su)
+            + x.shape[-1] * itemsize(x) + wg.shape[-1] * 4)
+
+
+def _mx_swiglu_streamed(wg, sg, wu, su, x):
+    return [wg, sg, wu, su, x,
+            jax.ShapeDtypeStruct((wg.shape[-1],), jnp.float32)]
+
+
+@troop_kernel(
+    "mx_qgemv_swiglu",
+    flops=lambda wg, sg, wu, su, x: 4.0 * wg.shape[-1] * x.shape[-1],
+    bytes=_mx_swiglu_bytes,
+    streamed=_mx_swiglu_streamed,
+    space={"streams": (1,), "unroll": (1, 2),
+           "block_n": (128, 256), "block_k": (256, 512)},
+    ref="mx_qgemv_swiglu", example=_mx_swiglu_example)
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def mx_qgemv_swiglu(wg, sg, wu, su, x, cfg: TroopConfig = TroopConfig()):
+    """Fused MX swiglu: silu(wg.T @ x) * (wu.T @ x) in one pass — the gate
+    and up projections dequant-GEMV against the same resident x block and
+    the silu·gate epilogue runs on the committed accumulators, halving the
+    activation round-trips of the two-call form."""
+    Ks, N = wg.shape
+    K = x.shape[-1]
+    bits = _mx_bits(wg)
+    pack = 2 if bits == 4 else 1
+    g = K // sg.shape[0]
+    one = TroopConfig(streams=1, unroll=cfg.unroll, block_n=cfg.block_n,
+                      block_k=cfg.block_k, interpret=cfg.interpret)
+    bn, bk, steps, _ = _mx_tiles(N, K, g, pack, one)
+    body = functools.partial(_mx_swiglu_kernel, bits=bits, g=g)
+    w_spec = pl.BlockSpec((bk // pack, bn), lambda i, j: (j, i))
+    s_spec = pl.BlockSpec((bk // g, bn), lambda i, j: (j, i))
+    x_spec = pl.BlockSpec((1, bk), lambda i, j: (0, j))
+    out = pl.pallas_call(
+        body,
+        grid=(N // bn, steps),
+        in_specs=[w_spec, s_spec, w_spec, s_spec, x_spec],
+        out_specs=pl.BlockSpec((1, bn), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, bn), jnp.float32),
+                        pltpu.VMEM((1, bn), jnp.float32)],
+        interpret=cfg.interpret,
+    )(wg, sg, wu, su, x.reshape(1, -1))
+    return out.reshape(-1)
+
+
+def _grouped_kernel(ids_ref, w_ref, s_ref, x_ref, o_ref, acc, *, bits, g):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _():
+        acc[...] = jnp.zeros_like(acc)
+
+    w = _mx_dequant_block(w_ref[0], s_ref[0], bits=bits, g=g)
+    acc[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
+                        preferred_element_type=jnp.float32)
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _():
+        o_ref[...] = acc[...].astype(o_ref.dtype)
+
+
+def _grouped_example(small: bool = True, elem: str = "fp4"):
+    E, topk = 4, 2
+    N, K = (128, 512) if small else (1408, 2048)
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    qt = quantize_mx(jax.random.normal(ks[0], (E, K, N), jnp.float32),
+                     elem=elem, axis=-2)
+    xs = jax.random.normal(ks[1], (topk, K), jnp.bfloat16)
+    ids = jnp.array([1, 3], jnp.int32)[:topk]
+    return (qt.values, qt.scales, xs, ids), {}
+
+
+def _grouped_bytes(wq, s, xs, ids):
+    topk, K = xs.shape
+    # gathered traffic: top-k expert slices of the stacked weights/scales,
+    # not the whole pool (the scalar-prefetched ids ride in SMEM for free)
+    return (topk * wq.shape[1] * wq.shape[2] * itemsize(wq)
+            + topk * s.shape[1] * s.shape[2] * itemsize(s)
+            + topk * K * itemsize(xs) + topk * wq.shape[-1] * 4)
+
+
+def _grouped_streamed(wq, s, xs, ids):
+    topk = xs.shape[0]
+    return [jax.ShapeDtypeStruct((topk,) + tuple(wq.shape[1:]), wq.dtype),
+            jax.ShapeDtypeStruct((topk,) + tuple(s.shape[1:]), s.dtype),
+            xs, jax.ShapeDtypeStruct((topk, wq.shape[-1]), jnp.float32)]
+
+
+@troop_kernel(
+    "grouped_expert_qgemv",
+    flops=lambda wq, s, xs, ids: 2.0 * xs.shape[0] * wq.shape[-1]
+    * xs.shape[-1],
+    bytes=_grouped_bytes,
+    streamed=_grouped_streamed,
+    space={"streams": (1,), "unroll": (1, 2),
+           "block_n": (128, 256), "block_k": (256, 512)},
+    ref="grouped_expert_qgemv", example=_grouped_example)
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def grouped_expert_qgemv(wq, scales, xs, expert_ids,
+                         cfg: TroopConfig = TroopConfig()):
+    """Grouped MX expert dispatch: wq (E, K | K//2-packed, N), scales
+    (E, K//g, N) E8M0, xs (topk, K), expert_ids (topk,) int32 -> (topk, N).
+
+    The router's selections are scalar-prefetched into SMEM and drive the
+    weight BlockSpec index map, so each grid row DMAs exactly its chosen
+    expert's tiles out of the stacked pool — no gather ever materializes a
+    dequantized expert in HBM (same mechanism as the paged-attention
+    block-table walk)."""
+    E, Ks, N = wq.shape
+    topk, K = xs.shape
+    bits = _mx_bits(wq)
+    pack = 2 if bits == 4 else 1
+    g = K // scales.shape[1]
+    one = TroopConfig(streams=1, unroll=cfg.unroll, block_n=cfg.block_n,
+                      block_k=cfg.block_k, interpret=cfg.interpret)
+    bn, bk, steps, _ = _mx_tiles(N, K, g, pack, one)
+    body = functools.partial(_grouped_kernel, bits=bits, g=g)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(topk, N // bn, steps),
+        in_specs=[
+            pl.BlockSpec((1, bk // pack, bn),
+                         lambda t, i, j, ids: (ids[t], j, i)),
+            pl.BlockSpec((1, bk // g, bn),
+                         lambda t, i, j, ids: (ids[t], j, i)),
+            pl.BlockSpec((1, bk), lambda t, i, j, ids: (t, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda t, i, j, ids: (t, i)),
+        scratch_shapes=[pltpu.VMEM((1, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        body, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((topk, N), jnp.float32),
+        interpret=cfg.interpret,
+    )(expert_ids.astype(jnp.int32), wq, scales, xs)

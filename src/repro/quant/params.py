@@ -26,7 +26,8 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.quant.tensor import QuantizedTensor, granule, quantize
+from repro.quant.tensor import (QuantizedTensor, granule, quantize,
+                                quantize_mx)
 
 # dense projections that every model applies via modules.apply_dense
 QUANTIZE_KEYS = frozenset({
@@ -75,7 +76,7 @@ def _moe_expert_prefixes(paths) -> set:
 
 
 def quantize_params(params, *, bits: int = 8, group_size: int = 128,
-                    policy: Optional[Callable] = None,
+                    fmt: str = "int", policy: Optional[Callable] = None,
                     scale_dtype=jnp.float32, tp: int = 1):
     """Quantize the matmul weights of an (unboxed) params pytree.
 
@@ -86,6 +87,14 @@ def quantize_params(params, *, bits: int = 8, group_size: int = 128,
     byte).  ``group_size`` groups the contraction axis and must be a
     multiple of the int8 layout granule (mechanism-D alignment).
 
+    ``fmt``: ``"int"`` (absmax int8/int4, the default), ``"mx4"`` or
+    ``"fp8"`` (MX microscaling — per-block E8M0 shared exponents, block
+    size fixed at the layout granule; ``bits``/``group_size`` are ignored).
+    Under MX the path policy FLIPS for MoE expert stacks: the stacked
+    expert weights quantize too (the grouped expert kernel dispatches them
+    per router selection — DESIGN.md §11) while routers/norms/embeds stay
+    raw as ever.
+
     ``tp``: tensor-parallel degree the tree will serve under.  Row-parallel
     projections (``wo`` under overlap collectives) shard the contraction
     axis, so each shard must hold a whole number of scale groups — a group
@@ -93,12 +102,18 @@ def quantize_params(params, *, bits: int = 8, group_size: int = 128,
     alignment is checked here, at quantize time, per the sharding contract
     in ``repro.dist.tp``.
     """
+    assert fmt in ("int", "mx4", "fp8"), f"fmt must be int|mx4|fp8: {fmt}"
+    mx = fmt != "int"
+    mx_block = granule()
     assert bits in (8, 4)
     assert group_size % granule() == 0, \
         f"group_size {group_size} not a multiple of the {granule()}-row " \
         f"int8 layout granule (mechanism D — see DESIGN.md §5)"
     if tp > 1:
-        assert bits == 8, \
+        assert fmt != "mx4", \
+            "mx4 packs fp4 row pairs that would straddle the " \
+            "tensor-parallel shard boundary; use fmt='fp8' under tp > 1"
+        assert mx or bits == 8, \
             "int4 packs row pairs that would straddle the tensor-parallel " \
             "shard boundary; use bits=8 under tp > 1"
     pol = policy or default_policy
@@ -107,7 +122,7 @@ def quantize_params(params, *, bits: int = 8, group_size: int = 128,
 
     def visit(path, leaf):
         keys = _path_keys(path)
-        if len(keys) >= 2 and keys[:-2] in moe:
+        if not mx and len(keys) >= 2 and keys[:-2] in moe:
             return leaf                          # stacked MoE expert weights
         if not pol(keys, leaf):
             return leaf
@@ -115,11 +130,15 @@ def quantize_params(params, *, bits: int = 8, group_size: int = 128,
             # row-parallel candidate: contraction axis K is sharded over tp
             # under overlap collectives — scale groups must tile each shard
             K = leaf.shape[-2]
-            assert K % tp == 0 and (K // tp) % group_size == 0, \
+            gs = mx_block if mx else group_size
+            assert K % tp == 0 and (K // tp) % gs == 0, \
                 f"'{'/'.join(keys)}' contraction extent {K} does not hold " \
-                f"a whole number of {group_size}-row scale groups per " \
+                f"a whole number of {gs}-row scale groups per " \
                 f"tp={tp} shard (groups must not straddle the shard " \
                 f"boundary)"
+        if mx:
+            return quantize_mx(leaf, elem="fp4" if fmt == "mx4" else "fp8",
+                               axis=-2)
         # int4 packs pairs along the contraction axis: odd extents stay int8
         b = bits if (bits == 8 or leaf.shape[-2] % 2 == 0) else 8
         return quantize(leaf, bits=b, group_size=group_size, axis=-2,

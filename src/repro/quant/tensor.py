@@ -49,6 +49,73 @@ def _qmax(bits: int) -> int:
 
 
 # --------------------------------------------------------------------------
+# MX microscaling (OCP): shared-exponent block formats
+# --------------------------------------------------------------------------
+# Per-block uint8 E8M0 scale (a biased power of two; bias 127) shared by a
+# block of ``granule()`` low-precision elements along the grouped axis:
+#   mx4: fp4 e2m1 element codes, two per byte (magnitudes 0..6)
+#   fp8: float8_e4m3fn elements (magnitudes 0..448)
+# The scale block equals the int8 layout granule (32 rows), so one E8M0
+# byte rides with exactly one mechanism-D tile row-group in the kernels.
+E8M0_BIAS = 127
+_MX_EMAX = {"fp4": 2, "fp8": 8}          # floor(log2(max finite element))
+_FP4_MAX = 6.0
+_FP8_MAX = 448.0
+FP8_DTYPE = jnp.float8_e4m3fn
+# e2m1 magnitude midpoints: digitize(|v|) -> magnitude code 0..7
+_FP4_MIDPOINTS = (0.25, 0.75, 1.25, 1.75, 2.5, 3.5, 5.0)
+
+
+def fp4_encode(x):
+    """float -> uint8 e2m1 codes (bit3 sign, bits2:1 exp, bit0 mantissa).
+    Magnitudes saturate at 6.0 (round-to-nearest over the 8-entry table)."""
+    mag = jnp.digitize(jnp.abs(x.astype(jnp.float32)),
+                       jnp.asarray(_FP4_MIDPOINTS, jnp.float32))
+    sign = jnp.where(x < 0, 8, 0)
+    return (mag + sign).astype(jnp.uint8)
+
+
+def fp4_decode(codes, dtype=jnp.float32):
+    """uint8 e2m1 codes -> float: sign * (exp==0 ? 0.5*man
+    : (1+0.5*man)*2^(exp-1)).  Branch-free, usable inside Pallas kernels."""
+    c = codes.astype(jnp.int32)
+    sign = 1.0 - 2.0 * (c >> 3).astype(jnp.float32)
+    exp = ((c >> 1) & 3).astype(jnp.float32)
+    man = (c & 1).astype(jnp.float32)
+    mag = jnp.where(exp == 0, 0.5 * man,
+                    (1.0 + 0.5 * man) * jnp.exp2(exp - 1.0))
+    return (sign * mag).astype(dtype)
+
+
+def pack_fp4(codes, axis: int = -1):
+    """Pack uint8 e2m1 codes two-per-byte along ``axis`` (even -> low
+    nibble, odd -> high).  Extent must be even."""
+    ax = axis if axis < 0 else axis - codes.ndim
+    cm = jnp.moveaxis(codes, ax, -1)
+    K = cm.shape[-1]
+    assert K % 2 == 0, f"fp4 packing needs an even extent, got {K}"
+    pairs = cm.reshape(cm.shape[:-1] + (K // 2, 2)).astype(jnp.uint8)
+    packed = pairs[..., 0] | jnp.left_shift(pairs[..., 1], 4)
+    return jnp.moveaxis(packed.astype(jnp.uint8), -1, ax)
+
+
+def unpack_fp4(packed, axis: int = -1):
+    """Inverse of ``pack_fp4``: (..., K//2) uint8 -> (..., K) uint8 codes."""
+    ax = axis if axis < 0 else axis - packed.ndim
+    pm = jnp.moveaxis(packed, ax, -1).astype(jnp.uint8)
+    lo = pm & jnp.uint8(0x0F)
+    hi = jnp.right_shift(pm, 4)
+    out = jnp.stack([lo, hi], axis=-1).reshape(pm.shape[:-1]
+                                               + (2 * pm.shape[-1],))
+    return jnp.moveaxis(out.astype(jnp.uint8), -1, ax)
+
+
+def e8m0_decode(scales, dtype=jnp.float32):
+    """uint8 E8M0 biased exponents -> power-of-two scale factors."""
+    return jnp.exp2(scales.astype(jnp.float32) - E8M0_BIAS).astype(dtype)
+
+
+# --------------------------------------------------------------------------
 # int4 nibble packing
 # --------------------------------------------------------------------------
 def pack_int4(q, axis: int = -1):
@@ -81,23 +148,30 @@ def unpack_int4(packed, axis: int = -1):
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class QuantizedTensor:
-    """int8/int4 values + per-group absmax scales.
+    """Quantized values + per-group scales (absmax or MX block-exponent).
 
     ``values``/``scales`` are the pytree children (they trace, scan-slice
-    and shard like any array); ``bits``/``group_size``/``axis`` are static.
-    ``axis`` is stored NEGATIVE so slicing leading dims (``lax.scan`` over
-    stacked layer groups) keeps it valid.  ``axis=None`` means one
-    per-tensor scalar scale (the gradient-compression layout).
+    and shard like any array); ``bits``/``group_size``/``axis``/``fmt`` are
+    static.  ``axis`` is stored NEGATIVE so slicing leading dims
+    (``lax.scan`` over stacked layer groups) keeps it valid.  ``axis=None``
+    means one per-tensor scalar scale (the gradient-compression layout).
+
+    ``fmt`` selects the element/scale encoding:
+      * ``"int"`` — int8/int4 values, float absmax scales (the default)
+      * ``"mx"``  — MX microscaling: uint8 E8M0 block exponents; values are
+        packed fp4 e2m1 codes (uint8, ``bits=4``) or float8_e4m3fn
+        (``bits=8``) — discriminated by ``values.dtype``.
     """
-    values: Any                      # int8 storage; int4: packed along axis
+    values: Any                      # int8 storage; int4/fp4: packed on axis
     scales: Any                      # (..., extent // group_size) or scalar
     bits: int = 8
     group_size: int = 0              # effective group (0 for per-tensor)
     axis: Optional[int] = -1         # grouped axis (negative), None = tensor
+    fmt: str = "int"                 # "int" (absmax) | "mx" (block exponent)
 
     def tree_flatten(self):
         return ((self.values, self.scales),
-                (self.bits, self.group_size, self.axis))
+                (self.bits, self.group_size, self.axis, self.fmt))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -173,6 +247,50 @@ def quantize(x, *, bits: int = 8, group_size: Optional[int] = None,
                            bits, g, ax)
 
 
+def quantize_mx(x, *, elem: str = "fp4", axis: Optional[int] = -2,
+                block: Optional[int] = None) -> QuantizedTensor:
+    """MX-quantize ``x``: per-block shared exponent (uint8 E8M0) + fp4
+    (e2m1, packed two-per-byte) or fp8 (e4m3) element codes.
+
+    The block size defaults to the TROOP int8 layout granule (32) so each
+    E8M0 byte covers exactly one mechanism-D tile row-group; a
+    non-dividing extent collapses to one block per row (mirroring
+    ``absmax_scales``).  ``elem="fp4"`` falls back to fp8 when the grouped
+    extent is odd (cannot nibble-pack).  ``axis`` defaults to -2: weights
+    are stored (in_dim, out_dim) and the kernels reduce over rows.
+    """
+    assert elem in ("fp4", "fp8"), f"elem must be fp4|fp8, got {elem}"
+    assert axis is not None, "MX needs a grouped axis"
+    ax = axis if axis < 0 else axis - x.ndim
+    K = x.shape[ax]
+    g = block or granule()
+    if K % g:
+        g = K                              # fallback: one block per row
+    if elem == "fp4" and K % 2:
+        elem = "fp8"                       # odd extent cannot nibble-pack
+    emax = _MX_EMAX[elem]
+    xm = jnp.moveaxis(x.astype(jnp.float32), ax, -1)
+    blocks = xm.reshape(xm.shape[:-1] + (K // g, g))
+    amax = jnp.max(jnp.abs(blocks), axis=-1)
+    # shared exponent: floor(log2(amax)) - emax_elem, biased into E8M0
+    e = jnp.where(amax > 0.0,
+                  jnp.floor(jnp.log2(jnp.maximum(amax, 1e-38))) - emax,
+                  jnp.float32(-E8M0_BIAS))
+    e = jnp.clip(e, -E8M0_BIAS, E8M0_BIAS)
+    scales = (e + E8M0_BIAS).astype(jnp.uint8)
+    scaled = blocks * jnp.exp2(-e)[..., None]
+    if elem == "fp4":
+        codes = fp4_encode(jnp.clip(scaled, -_FP4_MAX, _FP4_MAX))
+        v = pack_fp4(codes.reshape(xm.shape), axis=-1)
+        bits = 4
+    else:
+        v = jnp.clip(scaled, -_FP8_MAX, _FP8_MAX).reshape(
+            xm.shape).astype(FP8_DTYPE)
+        bits = 8
+    return QuantizedTensor(jnp.moveaxis(v, -1, ax),
+                           jnp.moveaxis(scales, -1, ax), bits, g, ax, "mx")
+
+
 def dequantize(qt: QuantizedTensor, dtype=jnp.float32):
     """Inverse of ``quantize`` (up to rounding): values * per-group scale."""
     v = qt.values
@@ -180,10 +298,15 @@ def dequantize(qt: QuantizedTensor, dtype=jnp.float32):
         return (v.astype(jnp.float32)
                 * qt.scales.astype(jnp.float32)).astype(dtype)
     ax = qt.axis
-    if qt.bits == 4:
-        v = unpack_int4(v, axis=ax)
+    if qt.fmt == "mx":
+        v = fp4_decode(unpack_fp4(v, axis=ax)) if qt.bits == 4 \
+            else v.astype(jnp.float32)
+        sm = e8m0_decode(jnp.moveaxis(qt.scales, ax, -1))
+    else:
+        if qt.bits == 4:
+            v = unpack_int4(v, axis=ax)
+        sm = jnp.moveaxis(qt.scales, ax, -1).astype(jnp.float32)
     vm = jnp.moveaxis(v, ax, -1).astype(jnp.float32)
-    sm = jnp.moveaxis(qt.scales, ax, -1).astype(jnp.float32)
     K = vm.shape[-1]
     g = K // sm.shape[-1]
     out = (vm.reshape(vm.shape[:-1] + (sm.shape[-1], g))
@@ -192,14 +315,15 @@ def dequantize(qt: QuantizedTensor, dtype=jnp.float32):
 
 
 def dequantize_values(values, scales, *, axis: int = -1, bits: int = 8,
-                      dtype=jnp.float32):
+                      fmt: str = "int", dtype=jnp.float32):
     """Raw (values, scales) dequant — the oracle form used by kernel refs
     and cache paths that carry the two arrays separately."""
     g = 0
     if axis is not None:
         ext = values.shape[axis] * (2 if bits == 4 else 1)
         g = ext // scales.shape[axis] if scales.ndim == values.ndim else ext
-    return dequantize(QuantizedTensor(values, scales, bits, g, axis), dtype)
+    return dequantize(QuantizedTensor(values, scales, bits, g, axis, fmt),
+                      dtype)
 
 
 # --------------------------------------------------------------------------

@@ -66,7 +66,7 @@ class EngineConfig:
     async_dispatch: bool = True
     # factory-level (resolved before ServingEngine construction)
     kernel_decode: bool = False
-    quantize_weights: str = "none"       # "none" | "int8" | "int4"
+    quantize_weights: str = "none"  # "none" | "int8" | "int4" | "mx4" | "fp8"
     quantize_group_size: int = 128
 
     def validate(self) -> "EngineConfig":
@@ -99,6 +99,15 @@ class EngineConfig:
                              "pass speculate_k > 0 to enable speculation")
         if self.tp < 1:
             raise ValueError("tp must be >= 1")
+        if self.quantize_weights not in ("none", "int8", "int4",
+                                         "mx4", "fp8"):
+            raise ValueError(f"quantize_weights must be one of none|int8|"
+                             f"int4|mx4|fp8, got {self.quantize_weights!r}")
+        if self.quantize_weights in ("int4", "mx4") and self.tp > 1:
+            raise ValueError(
+                f"{self.quantize_weights} packs row pairs along the "
+                f"contraction axis that would straddle the tensor-parallel "
+                f"shard boundary; use int8 or fp8 under tp > 1")
         return self
 
     @classmethod
@@ -161,7 +170,11 @@ def build_engine(arch, engine_cfg: Optional[EngineConfig] = None, *,
 
     if params is None:
         params = M.unbox(model.init(jax.random.PRNGKey(0)))
-        if cfg_e.quantize_weights != "none":
+        if cfg_e.quantize_weights in ("mx4", "fp8"):
+            from repro.quant import quantize_params
+            params = quantize_params(params, fmt=cfg_e.quantize_weights,
+                                     tp=cfg_e.tp)
+        elif cfg_e.quantize_weights != "none":
             from repro.quant import quantize_params
             params = quantize_params(
                 params, bits=8 if cfg_e.quantize_weights == "int8" else 4,

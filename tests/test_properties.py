@@ -143,3 +143,37 @@ def test_int8_compression_error_feedback_converges(seed):
         e = g + e - deq
         total_sent += deq
     np.testing.assert_allclose(total_sent / 50, g, atol=2e-2)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2**16), st.floats(0.05, 8.0, allow_nan=False))
+def test_mx_roundtrip_block_relative_error_bound(k1, amp):
+    """MX invariants over random tensors and amplitudes: fp4/fp8
+    round-trips stay within the format's relative error bound per
+    32-block, E8M0 scales are exact powers of two, and the fp8 error
+    never exceeds the fp4 error (format monotonicity)."""
+    from repro.quant import dequantize, quantize_mx
+    from repro.quant.tensor import granule
+
+    g = granule()
+    x = amp * jax.random.normal(jax.random.PRNGKey(k1), (4 * g, 16),
+                                jnp.float32)
+    q4 = quantize_mx(x, elem="fp4")
+    q8 = quantize_mx(x, elem="fp8")
+    y4 = np.asarray(dequantize(q4, jnp.float32))
+    y8 = np.asarray(dequantize(q8, jnp.float32))
+    xb = np.asarray(x).reshape(4, g, 16)
+    amax = np.abs(xb).max(axis=1, keepdims=True)
+    # shared exponent maps the block amax into [4, 8) for e2m1; the
+    # coarsest code gap is 2 (4 -> 6) and the 6.0 clip loses at most
+    # (8 - 6), so the worst error relative to amax approaches 1/4
+    assert (np.abs(y4.reshape(4, g, 16) - xb) <= amax / 4 + 1e-6).all()
+    # e4m3fn: amax scales into [256, 512), ulp there is 32 and the 448
+    # clip loses at most (512 - 448) -> relative bound 1/8
+    assert (np.abs(y8.reshape(4, g, 16) - xb) <= amax / 8 + 1e-6).all()
+    assert np.abs(y8 - np.asarray(x)).mean() <= \
+        np.abs(y4 - np.asarray(x)).mean() + 1e-7
+    # E8M0: every scale decodes to an exact power of two
+    from repro.quant import e8m0_decode
+    s = np.asarray(e8m0_decode(q4.scales, jnp.float32))
+    assert (np.log2(s) == np.round(np.log2(s))).all()

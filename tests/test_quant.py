@@ -144,9 +144,11 @@ def test_qgemv(N, K_, bits):
     w = jax.random.normal(jax.random.PRNGKey(0), (N, K_), jnp.float32)
     x = jax.random.normal(jax.random.PRNGKey(1), (K_,), jnp.bfloat16)
     qt = quantize(w, bits=bits, group_size=128, axis=-1)
-    want = np.asarray(R.qgemv(qt.values, qt.scales, x))
+    # bits is carried explicitly (no shape heuristic): a (N, K/2) int8
+    # buffer could equally be a narrow 8-bit weight
+    want = np.asarray(R.qgemv(qt.values, qt.scales, x, bits=bits))
     for cfg in (BASELINE, TROOP):
-        got = np.asarray(K.qgemv(qt.values, qt.scales, x, cfg))
+        got = np.asarray(K.qgemv(qt.values, qt.scales, x, cfg, bits=bits))
         # exact vs the dequantized oracle (isolates kernel error)
         np.testing.assert_allclose(got, want, rtol=3e-3, atol=3e-3)
     # within quantization noise of the fp32 oracle
@@ -365,3 +367,245 @@ def test_dist_compression_wrappers_roundtrip():
     assert q.dtype == jnp.int8 and s.shape == ()
     deq = dequantize_int8(q, s)
     assert float(jnp.max(jnp.abs(deq - g))) <= float(s) * 0.5 + 1e-6
+
+
+# --------------------------------------------------------------------------
+# MX microscaling (mx4 / fp8, DESIGN.md §11)
+# --------------------------------------------------------------------------
+from repro.quant import (e8m0_decode, fp4_decode, fp4_encode,  # noqa: E402
+                         pack_fp4, quantize_mx, unpack_fp4)
+from repro.quant.tensor import FP8_DTYPE, granule  # noqa: E402
+
+
+def test_fp4_code_roundtrip_exact():
+    """Every representable e2m1 value encodes to itself."""
+    vals = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]
+    xs = jnp.asarray([v * s for v in vals for s in (1.0, -1.0)], jnp.float32)
+    codes = fp4_encode(xs)
+    np.testing.assert_array_equal(np.asarray(fp4_decode(codes), np.float32),
+                                  np.asarray(xs))
+    # and the nibble pack/unpack is lossless along the leading axis
+    c2 = codes.reshape(4, 4)
+    np.testing.assert_array_equal(np.asarray(unpack_fp4(pack_fp4(c2))),
+                                  np.asarray(c2))
+
+
+def test_fp4_encode_rounds_to_nearest():
+    # midpoints resolve to a neighbouring representable magnitude
+    xs = jnp.asarray([0.2, 0.8, 1.2, 2.4, 5.5, -3.4], jnp.float32)
+    got = np.asarray(fp4_decode(fp4_encode(xs)), np.float32)
+    grid = np.asarray([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0])
+    for x, g in zip(np.asarray(xs), got):
+        best = grid[np.argmin(np.abs(grid - abs(x)))] * np.sign(x)
+        assert g == best, (x, g, best)
+
+
+@pytest.mark.parametrize("elem,max_rel", [("fp4", 0.30), ("fp8", 0.10)])
+def test_quantize_mx_roundtrip(elem, max_rel):
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 64), jnp.float32)
+    qt = quantize_mx(x, elem=elem)
+    assert qt.fmt == "mx" and qt.axis == -2
+    assert qt.group_size == granule()
+    assert qt.scales.dtype == jnp.uint8          # E8M0 shared exponents
+    assert qt.shape == x.shape
+    if elem == "fp4":
+        assert qt.values.dtype == jnp.uint8 and qt.bits == 4
+        assert qt.values.shape == (128, 64)      # two codes per byte
+    else:
+        assert qt.values.dtype == FP8_DTYPE and qt.bits == 8
+    y = np.asarray(dequantize(qt, jnp.float32))
+    err = np.max(np.abs(y - np.asarray(x)))
+    # block-relative: each 32-block scales to its own amax
+    assert err <= max_rel * float(jnp.max(jnp.abs(x)))
+
+
+def test_mx_error_monotone_fp8_beats_fp4():
+    x = jax.random.normal(jax.random.PRNGKey(1), (512, 32), jnp.float32)
+    e4 = float(jnp.mean(jnp.abs(
+        dequantize(quantize_mx(x, elem="fp4"), jnp.float32) - x)))
+    e8 = float(jnp.mean(jnp.abs(
+        dequantize(quantize_mx(x, elem="fp8"), jnp.float32) - x)))
+    assert e8 <= e4
+
+
+def test_mx_bytes_ratios():
+    """The headline roofline move: mx4 <= 0.28x and fp8 <= 0.55x of the
+    bf16 weight bytes at a serving shape (values + E8M0 traffic)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (4096, 2048), jnp.float32)
+    bf16 = x.size * 2
+    assert quantize_mx(x, elem="fp4").nbytes <= 0.28 * bf16
+    assert quantize_mx(x, elem="fp8").nbytes <= 0.55 * bf16
+
+
+def test_quantize_mx_odd_k_falls_back_to_fp8():
+    x = jax.random.normal(jax.random.PRNGKey(2), (33, 8), jnp.float32)
+    qt = quantize_mx(x, elem="fp4")
+    assert qt.values.dtype == FP8_DTYPE and qt.bits == 8
+    y = np.asarray(dequantize(qt, jnp.float32))
+    assert np.max(np.abs(y - np.asarray(x))) <= 0.1 * float(
+        jnp.max(jnp.abs(x)))
+
+
+def test_quantize_params_mx_policy_flips_expert_stacks():
+    """Under MX the MoE expert stacks DO quantize (grouped_expert_qgemv
+    consumes them); router/norms/embeds stay raw, exactly as under int8."""
+    def qt_paths(tree):
+        flat, _ = jax.tree_util.tree_flatten_with_path(
+            tree, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+        return {tuple(str(getattr(p, "key", getattr(p, "idx", p)))
+                      for p in path): leaf for path, leaf in flat}
+
+    cfg = reduced(get_config("qwen2-moe-a2.7b"))
+    model = build_model(cfg, RuntimeConfig(remat="none", moe_groups=1))
+    params = M.unbox(model.init(jax.random.PRNGKey(0)))
+    qp = quantize_params(params, fmt="mx4")
+    paths = qt_paths(qp)
+    expert_q = [k for k, v in paths.items()
+                if isinstance(v, QuantizedTensor) and v.fmt == "mx"
+                and "wi_up" in k and "shared" not in k]
+    assert expert_q, "MX must quantize the routed expert stacks"
+    for keys, leaf in paths.items():
+        if "embed" in keys or "router" in keys or "norm1" in keys \
+                or "final_norm" in keys:
+            assert not isinstance(leaf, QuantizedTensor), keys
+    # and fp8 follows the same policy with 8-bit elements
+    qp8 = qt_paths(quantize_params(params, fmt="fp8"))
+    for k in expert_q:
+        assert qp8[k].bits == 8 and qp8[k].fmt == "mx", k
+
+
+def test_quantize_params_mx4_rejects_tp():
+    params = {"wq": {"w": jnp.ones((64, 64), jnp.float32)}}
+    with pytest.raises(AssertionError):
+        quantize_params(params, fmt="mx4", tp=2)
+
+
+@pytest.mark.parametrize("elem", ["fp4", "fp8"])
+def test_mx_qgemv_matches_oracle(elem):
+    N, K_ = 128, 512
+    w = jax.random.normal(jax.random.PRNGKey(0), (K_, N), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (K_,), jnp.float32)
+    qt = quantize_mx(w, elem=elem)
+    want = np.asarray(R.mx_qgemv(qt.values, qt.scales, x))
+    for cfg in (BASELINE, TROOP):
+        got = np.asarray(K.mx_qgemv(qt.values, qt.scales, x, cfg))
+        np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+    # within quantization noise of the fp32 oracle
+    full = np.asarray(R.gemv(w.T, x))
+    tol = 0.35 if elem == "fp4" else 0.1
+    assert np.max(np.abs(want - full)) <= tol * np.max(np.abs(full))
+
+
+@pytest.mark.parametrize("B", [1, 4])
+def test_batched_mx_qgemv_matches_oracle(B):
+    N, K_ = 128, 256
+    w = jax.random.normal(jax.random.PRNGKey(0), (K_, N), jnp.float32)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (B, K_), jnp.float32)
+    qt = quantize_mx(w, elem="fp4")
+    want = np.asarray(R.batched_mx_qgemv(qt.values, qt.scales, xs))
+    for cfg in (BASELINE, TROOP):
+        got = np.asarray(K.batched_mx_qgemv(qt.values, qt.scales, xs, cfg))
+        np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("elem", ["fp4", "fp8"])
+def test_mx_qgemv_swiglu_matches_oracle(elem):
+    d, f = 256, 128
+    kg, ku, kx = jax.random.split(jax.random.PRNGKey(0), 3)
+    qg = quantize_mx(jax.random.normal(kg, (d, f), jnp.float32), elem=elem)
+    qu = quantize_mx(jax.random.normal(ku, (d, f), jnp.float32), elem=elem)
+    x = jax.random.normal(kx, (d,), jnp.float32)
+    want = np.asarray(R.mx_qgemv_swiglu(qg.values, qg.scales,
+                                        qu.values, qu.scales, x))
+    got = np.asarray(K.mx_qgemv_swiglu(qg.values, qg.scales,
+                                       qu.values, qu.scales, x))
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("elem", ["fp4", "fp8"])
+def test_grouped_expert_qgemv_token_identical_to_gather(elem):
+    """The routed expert dispatch == dequantize-then-einsum over the
+    gathered stacks, for every expert-id pattern."""
+    E, K_, N, topk = 4, 128, 64, 2
+    w = jax.random.normal(jax.random.PRNGKey(0), (E, K_, N), jnp.float32)
+    qt = quantize_mx(w, elem=elem)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (topk, K_), jnp.float32)
+    for ids in ([0, 0], [1, 3], [3, 2]):
+        ids_a = jnp.asarray(ids, jnp.int32)
+        want = np.asarray(R.grouped_expert_qgemv(qt.values, qt.scales,
+                                                 xs, ids_a))
+        got = np.asarray(K.grouped_expert_qgemv(qt.values, qt.scales,
+                                                xs, ids_a))
+        np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_mx_engine_end_to_end_within_int4_tolerance():
+    """mx4-quantized MoE engine: decodes greedily end-to-end, and its
+    prefill logits stay within the int4 error envelope of the fp oracle."""
+    from repro.models.transformer import prefill
+    cfg = reduced(get_config("qwen2-moe-a2.7b"))
+    model = build_model(cfg, RuntimeConfig(remat="none"))
+    params = M.unbox(model.init(jax.random.PRNGKey(0)))
+    batch = {"tokens": jnp.arange(1, 5)[None, :],
+             "positions": jnp.arange(4)[None, :]}
+    ref, _ = prefill(params, cfg, model.rt, batch)
+    ref = np.asarray(ref, np.float32)
+    scale = np.max(np.abs(ref)) + 1e-9
+
+    def err(qp):
+        lg, _ = prefill(qp, cfg, model.rt, batch)
+        return np.max(np.abs(np.asarray(lg, np.float32) - ref)) / scale
+
+    e_mx4 = err(quantize_params(params, fmt="mx4"))
+    e_int4 = err(quantize_params(params, bits=4))
+    e_fp8 = err(quantize_params(params, fmt="fp8"))
+    assert e_mx4 <= max(e_int4, 0.30) * 1.25, (e_mx4, e_int4)
+    assert e_fp8 <= e_mx4
+
+    # and the engine drains under mx4 (the --quantize-weights mx4 path)
+    qp = quantize_params(params, fmt="mx4")
+    out, _ = _serve(model, qp, "paged")
+    assert all(len(v) == 6 for v in out.values())
+
+
+def test_mx_routed_decode_matches_gather_path():
+    """kernel_routing ON routes mx_qgemv / mx_qgemv_swiglu /
+    grouped_expert_qgemv; the step output tracks the in-graph dequant
+    path to accumulation precision."""
+    from repro.models.transformer import decode_step, init_caches
+    cfg = reduced(get_config("qwen2-moe-a2.7b"))
+    model = build_model(cfg, RuntimeConfig(remat="none"))
+    params = M.unbox(model.init(jax.random.PRNGKey(0)))
+    qp = quantize_params(params, fmt="mx4")
+    db = {"tokens": jnp.array([[7]]), "pos": jnp.array([0])}
+    caches = init_caches(cfg, model.rt, 1, 64, jnp.float32)
+    a, _ = decode_step(qp, cfg, model.rt, db, caches)
+    caches = init_caches(cfg, model.rt, 1, 64, jnp.float32)
+    with M.kernel_routing():
+        b, _ = decode_step(qp, cfg, model.rt, db, caches)
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+@pytest.mark.parametrize("fmt", ["mx4", "fp8"])
+def test_audit_decode_step_mx_exact(fmt):
+    """The acceptance bar: a quantized-MoE decode step audits byte-exact
+    (kernel multiset AND modeled bytes) against decode_step_account."""
+    from repro import obs
+    cfg = reduced(get_config("qwen2-moe-a2.7b"))
+    model = build_model(cfg, RuntimeConfig(remat="none",
+                                           quantize_weights=fmt))
+    a = obs.audit_decode_step(model, cache_len=64, page_size=16)
+    assert a.ok, a.report()
+    assert a.dispatches == sum(a.expected.values())
+    assert a.measured_bytes == a.expected_bytes > 0
+
+
+def test_engine_config_mx_validation():
+    assert EngineConfig(quantize_weights="mx4").validate()
+    assert EngineConfig(quantize_weights="fp8", tp=1).validate()
+    with pytest.raises(ValueError, match="mx4"):
+        EngineConfig(quantize_weights="mx4", tp=2).validate()
+    with pytest.raises(ValueError):
+        EngineConfig(quantize_weights="mx5").validate()

@@ -19,7 +19,10 @@ ALL_KERNELS = ("gemv", "dotp", "axpy", "rmsnorm", "decode_attention",
                "mamba_scan", "rwkv6",
                # repro.quant fused-dequant kernels (DESIGN.md §5)
                "qgemv", "batched_qgemv", "decode_attention_int8",
-               "paged_decode_attention_int8")
+               "paged_decode_attention_int8",
+               # MX microscaling kernels (DESIGN.md §11)
+               "mx_qgemv", "batched_mx_qgemv", "mx_qgemv_swiglu",
+               "grouped_expert_qgemv")
 
 
 @pytest.fixture
